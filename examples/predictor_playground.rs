@@ -1,0 +1,61 @@
+//! Predictor playground: score every Fig. 6 model on any trace, and
+//! cross-check the rust-native LSTM forward against the PJRT artifact.
+//!
+//! ```bash
+//! cargo run --release --example predictor_playground -- --trace wits
+//! ```
+
+use anyhow::Result;
+use fifer::bench::Table;
+use fifer::cli::Args;
+use fifer::experiments::TraceKind;
+use fifer::predictor::{all_predictors, evaluate, nn::LstmPredictor};
+use fifer::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let kind = match args.str_or("trace", "wits").as_str() {
+        "wiki" => TraceKind::Wiki,
+        "poisson" => TraceKind::Poisson,
+        _ => TraceKind::Wits,
+    };
+    let art = args.str_or("artifacts", "artifacts");
+    let trace = kind.build(4000, &art);
+    let w = trace.window_maxima(5);
+    println!(
+        "trace {}: avg {:.0} req/s, peak {:.0} req/s, {} windows",
+        kind.name(),
+        trace.avg_rate(),
+        trace.peak_rate(),
+        w.len()
+    );
+
+    let weights = std::path::Path::new(&art).join("predictor_weights.json");
+    let wp = weights.exists().then_some(weights.clone());
+    let mut t = Table::new(&["model", "RMSE", "latency µs", "accuracy %"]);
+    for p in all_predictors(wp.as_deref()).iter_mut() {
+        let r = evaluate(p.as_mut(), &w, 2, 0.15);
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.1}", r.rmse),
+            format!("{:.1}", r.latency_us),
+            format!("{:.1}", r.accuracy_pct),
+        ]);
+    }
+    t.print();
+
+    // cross-check: rust-native forward vs the AOT-compiled XLA artifact
+    if weights.exists() {
+        let native = LstmPredictor::load(&weights)?;
+        let mut rt = Runtime::new(std::path::Path::new(&art))?;
+        let xs: Vec<f32> = (0..native.window).map(|i| 0.4 + 0.02 * i as f32).collect();
+        let a = native.forward(&xs);
+        let b = rt.predict("lstm", &xs)?;
+        println!(
+            "\nLSTM forward cross-check: native={a:.6} pjrt={b:.6} (|Δ|={:.2e})",
+            (a - b).abs()
+        );
+        assert!((a - b).abs() < 1e-4, "native and PJRT forwards diverge");
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the smallest end-to-end use of the Fifer public API.
+//!
+//! 1. Load the AOT artifacts and run one real batched inference via PJRT.
+//! 2. Build the slack plan for a workload mix (Eq. 1 batch sizes).
+//! 3. Run a short simulation of the Fifer RM and print the summary.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use fifer::config::{Policy, SystemConfig};
+use fifer::coordinator::slack::SlackPlan;
+use fifer::experiments::{run_policy, TraceKind};
+use fifer::model::Catalog;
+use fifer::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let cat = Catalog::paper();
+
+    // --- 1. real inference through an AOT artifact --------------------
+    let art = std::path::Path::new("artifacts");
+    if art.join("manifest.json").exists() {
+        let mut rt = Runtime::new(art)?;
+        let x: Vec<f32> = (0..4 * 256).map(|i| (i % 7) as f32 * 0.1).collect();
+        let t0 = std::time::Instant::now();
+        let out = rt.infer("FACER", 4, &x)?;
+        println!(
+            "FACER batch-4 inference: {} outputs in {:.2} ms (first={:.4})",
+            out.len(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            out[0]
+        );
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the live path)");
+    }
+
+    // --- 2. the slack plan -------------------------------------------
+    let cfg = SystemConfig::prototype(Policy::Fifer);
+    let mix = cat.mix("Heavy").unwrap().clone();
+    let plan = SlackPlan::build(&cat, &mix.chains, &cfg.rm, true);
+    println!("\nper-stage batch sizes (Eq. 1), heavy mix:");
+    for &ms_id in &cat.mix_stages(&mix) {
+        println!(
+            "  {:<6} exec {:>6.1} ms -> batch {}",
+            cat.microservices[ms_id].name,
+            cat.microservices[ms_id].exec_ms_mean,
+            plan.batch_for(ms_id)
+        );
+    }
+
+    // --- 3. a short simulation ----------------------------------------
+    let run = run_policy(Policy::Fifer, "Heavy", TraceKind::Poisson, 300, true, 42);
+    let s = &run.summary;
+    println!(
+        "\nFifer, Poisson λ=50, 300 s: {} jobs, {:.2}% SLO violations, \
+         median {:.0} ms, p99 {:.0} ms, {:.1} containers avg",
+        s.jobs, s.slo_violation_pct, s.median_ms, s.p99_ms, s.avg_containers
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! End-to-end live serving driver (the DESIGN.md validation workload).
+//!
+//! Loads the real AOT-compiled microservice models, serves Poisson
+//! traffic for the heavy workload mix through Fifer's slack-based
+//! batcher, and reports latency/throughput — with a batching-off
+//! (Bline-style) run for comparison. Everything on the request path is
+//! Rust + PJRT; Python was only involved at `make artifacts` time.
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! cargo run --release --example serve_cluster -- --rate 30 --duration 20
+//! ```
+
+use anyhow::Result;
+use fifer::cli::Args;
+use fifer::server::{serve, ServeParams, ServeReport};
+
+fn report(tag: &str, r: &ServeReport) {
+    println!(
+        "{tag:>12}: {} jobs, {:.1} req/s, median {:.0} ms, p99 {:.0} ms, \
+         {:.2}% SLO violations, {} batches (avg size {:.2}), {} cold compiles",
+        r.jobs,
+        r.throughput_rps,
+        r.median_ms,
+        r.p99_ms,
+        r.slo_violation_pct,
+        r.batches,
+        r.avg_batch,
+        r.cold_compiles
+    );
+    let mut rows: Vec<_> = r.stage_exec_ms.iter().collect();
+    rows.sort_by_key(|(name, _)| **name);
+    for (stage, ms) in rows {
+        println!("              {stage:<6} mean batch exec {ms:>8.2} ms");
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let rate = args.f64_or("rate", 25.0)?;
+    let duration = args.f64_or("duration", 15.0)?;
+    let executors = args.usize_or("executors", 2)?;
+
+    println!("== Fifer live cluster: heavy mix (IPA + DetectFatigue) ==");
+    println!("rate {rate} req/s for {duration} s, {executors} executor thread(s)\n");
+
+    let mut fifer = ServeParams::quick(rate, duration);
+    fifer.executors = executors;
+    let r1 = serve(fifer)?;
+    report("Fifer", &r1);
+
+    let mut bline = ServeParams::quick(rate, duration);
+    bline.executors = executors;
+    bline.batching = false;
+    let r2 = serve(bline)?;
+    report("no-batching", &r2);
+
+    println!(
+        "\nbatching amortization: {:.2}x fewer model invocations \
+         ({} vs {} batches for ~the same jobs)",
+        r2.batches as f64 / r1.batches.max(1) as f64,
+        r1.batches,
+        r2.batches
+    );
+    Ok(())
+}

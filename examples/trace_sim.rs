@@ -1,0 +1,66 @@
+//! Large-scale trace-driven simulation (paper §6.2) from the public API.
+//!
+//! Runs all five RMs on the WITS- or Wiki-like trace against the
+//! 2500-core simulated cluster and prints the Fig. 14/15-style rows.
+//!
+//! ```bash
+//! cargo run --release --example trace_sim -- --trace wits --duration 1200
+//! ```
+
+use anyhow::Result;
+use fifer::bench::{norm, Table};
+use fifer::cli::Args;
+use fifer::config::Policy;
+use fifer::experiments::{run_macro, TraceKind};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let kind = match args.str_or("trace", "wits").as_str() {
+        "wiki" => TraceKind::Wiki,
+        _ => TraceKind::Wits,
+    };
+    let duration = args.usize_or("duration", 1200)?;
+    let mix = args.str_or("mix", "Heavy");
+
+    println!(
+        "== {} trace, {} mix, {duration} s, 2500-core simulated cluster ==",
+        kind.name(),
+        mix
+    );
+    let t0 = std::time::Instant::now();
+    let runs = run_macro(kind, &mix, duration, 42);
+    let base = runs
+        .iter()
+        .find(|r| r.policy == Policy::Bline)
+        .unwrap()
+        .summary
+        .clone();
+
+    let mut t = Table::new(&[
+        "policy",
+        "SLO viol %",
+        "avg containers",
+        "norm. to Bline",
+        "median ms",
+        "tail (p99) ms",
+        "cold starts",
+    ]);
+    for r in &runs {
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.2}", r.summary.slo_violation_pct),
+            format!("{:.0}", r.summary.avg_containers),
+            norm(r.summary.avg_containers, base.avg_containers),
+            format!("{:.0}", r.summary.median_ms),
+            format!("{:.0}", r.summary.p99_ms),
+            format!("{}", r.summary.cold_starts),
+        ]);
+    }
+    t.print();
+    println!(
+        "({} sim-jobs total, wall {:.0} s)",
+        runs.iter().map(|r| r.summary.jobs).sum::<u64>(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,232 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO-text artifacts for Rust.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (under artifacts/):
+  ms_<NAME>_b<B>.hlo.txt     batched inference graph per (microservice,
+                             batch size); weights are runtime *parameters*
+                             (w1,b1,...,x) so the HLO stays small
+  weights/<NAME>.bin         f32-LE concatenated layer weights for the above
+  lstm_predict.hlo.txt       LSTM load predictor (trained weights baked in,
+                             input = (1, WINDOW) normalized history)
+  ff_predict.hlo.txt         feed-forward predictor baseline
+  predictor_weights.json     trained weights + normalization scale (shared
+                             with the Rust-native predictor implementation)
+  traces/{wits,wiki}.json    the synthetic arrival traces (per-second rates)
+                             so Rust scores predictors on the same series
+  manifest.json              index of all of the above
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import lstm_train, model, traces
+
+BATCH_SIZES = [1, 2, 4, 8, 16, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_microservice(name: str, batch: int, params) -> str:
+    """Lower one (microservice, batch) inference graph with weight params."""
+    in_dim, _, _ = model.layer_dims(name)
+
+    flat_specs = []
+    for (w, b) in params:
+        flat_specs.append(jax.ShapeDtypeStruct(w.shape, jnp.float32))
+        flat_specs.append(jax.ShapeDtypeStruct(b.shape, jnp.float32))
+    x_spec = jax.ShapeDtypeStruct((batch, in_dim), jnp.float32)
+
+    def fn(*args):
+        *flat, x = args
+        ps = [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+        return (model.microservice_forward(name, ps, x),)
+
+    lowered = jax.jit(fn).lower(*flat_specs, x_spec)
+    return to_hlo_text(lowered)
+
+
+def lower_lstm(weights) -> str:
+    """Lower the LSTM predictor with weights as runtime *parameters*.
+
+    Parameter order (must match rust runtime::Runtime::predict):
+    wx1, wh1, b1, wx2, wh2, b2, w_out, b_out, x. (Baked-constant weights
+    trip a miscompile in the image's xla_extension 0.5.1 when combined
+    with interpret-mode Pallas while-loops; the parameter path is the same
+    one the microservice artifacts use and verifies bit-exact.)
+    """
+    specs = []
+    for l in weights["layers"]:
+        specs.append(jax.ShapeDtypeStruct(l["wx"].shape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct(l["wh"].shape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct(l["b"].shape, jnp.float32))
+    specs.append(jax.ShapeDtypeStruct(weights["w_out"].shape, jnp.float32))
+    specs.append(jax.ShapeDtypeStruct(weights["b_out"].shape, jnp.float32))
+    x_spec = jax.ShapeDtypeStruct((1, model.WINDOW), jnp.float32)
+
+    def fn(*args):
+        *flat, x = args
+        layers = []
+        for i in range(0, len(flat) - 2, 3):
+            layers.append({"wx": flat[i], "wh": flat[i + 1], "b": flat[i + 2]})
+        params = {"layers": layers, "w_out": flat[-2], "b_out": flat[-1]}
+        return (model.lstm_forward(params, x),)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs, x_spec))
+
+
+def lower_ff(weights) -> str:
+    """Lower the FF predictor with weights as runtime parameters
+    (w1, b1, w2, b2, x) — see lower_lstm for why."""
+    specs = []
+    for (w, b) in weights:
+        specs.append(jax.ShapeDtypeStruct(w.shape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct(b.shape, jnp.float32))
+    x_spec = jax.ShapeDtypeStruct((1, model.WINDOW), jnp.float32)
+
+    def fn(*args):
+        *flat, x = args
+        ps = [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+        return (model.ff_forward(ps, x),)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs, x_spec))
+
+
+def write_weights_bin(path: str, params) -> list:
+    """Concatenate all layer tensors as f32-LE; return layer shape index."""
+    layers = []
+    buf = []
+    for (w, b) in params:
+        layers.append({"w": list(w.shape), "b": list(b.shape)})
+        buf.append(np.asarray(w, np.float32).ravel())
+        buf.append(np.asarray(b, np.float32).ravel())
+    flat = np.concatenate(buf).astype("<f4")
+    with open(path, "wb") as f:
+        f.write(flat.tobytes())
+    return layers
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_SIZES)))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse predictor_weights.json if present")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    batches = [int(b) for b in args.batches.split(",")]
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+    os.makedirs(os.path.join(out, "traces"), exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "slo_ms": model.SLO_MS,
+        "batch_sizes": batches,
+        "microservices": {},
+        "chains": {
+            name: {"stages": stages, "slack_ms": slack}
+            for name, (stages, slack) in model.CHAINS.items()
+        },
+        "predictors": {},
+        "traces": {},
+    }
+
+    # --- microservice inference graphs -----------------------------------
+    for name in model.MICROSERVICES:
+        in_dim, hidden, out_dim, exec_ms = (
+            model.MICROSERVICES[name][0],
+            model.MICROSERVICES[name][1],
+            model.MICROSERVICES[name][2],
+            model.MICROSERVICES[name][3],
+        )
+        params = model.init_mlp_params(name)
+        wpath = f"weights/{name}.bin"
+        layer_index = write_weights_bin(os.path.join(out, wpath), params)
+        entry = {
+            "paper_exec_ms": exec_ms,
+            "input_dim": in_dim,
+            "hidden": hidden,
+            "output_dim": out_dim,
+            "weights": {"path": wpath, "layers": layer_index},
+            "batches": {},
+        }
+        for b in batches:
+            hlo = lower_microservice(name, b, params)
+            fname = f"ms_{name}_b{b}.hlo.txt"
+            with open(os.path.join(out, fname), "w") as f:
+                f.write(hlo)
+            entry["batches"][str(b)] = fname
+            print(f"[aot] {name} b={b}: {len(hlo)} chars")
+        manifest["microservices"][name] = entry
+
+    # --- predictors -------------------------------------------------------
+    wjson = os.path.join(out, "predictor_weights.json")
+    if not (args.skip_train and os.path.exists(wjson)):
+        lstm_train.train_all(wjson)
+    lstm_w, ff_w, scale = lstm_train.load_weights(wjson)
+
+    lstm_hlo = lower_lstm(lstm_w)
+    with open(os.path.join(out, "lstm_predict.hlo.txt"), "w") as f:
+        f.write(lstm_hlo)
+    ff_hlo = lower_ff(ff_w)
+    with open(os.path.join(out, "ff_predict.hlo.txt"), "w") as f:
+        f.write(ff_hlo)
+    manifest["predictors"] = {
+        "lstm": {
+            "path": "lstm_predict.hlo.txt",
+            "window": model.WINDOW,
+            "hidden": model.LSTM_HIDDEN,
+            "scale": scale,
+            "weights": "predictor_weights.json",
+        },
+        "ff": {
+            "path": "ff_predict.hlo.txt",
+            "window": model.WINDOW,
+            "scale": scale,
+            "weights": "predictor_weights.json",
+        },
+    }
+    print(f"[aot] lstm: {len(lstm_hlo)} chars, ff: {len(ff_hlo)} chars")
+
+    # --- traces -----------------------------------------------------------
+    for tname, gen in (("wits", traces.wits_trace), ("wiki", traces.wiki_trace)):
+        rate = gen()
+        tpath = f"traces/{tname}.json"
+        with open(os.path.join(out, tpath), "w") as f:
+            json.dump({"name": tname, "rate_per_s": rate.tolist()}, f)
+        manifest["traces"][tname] = {
+            "path": tpath,
+            "avg": float(rate.mean()),
+            "peak": float(rate.max()),
+            "duration_s": len(rate),
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

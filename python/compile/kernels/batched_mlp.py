@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: tiled batched dense layer (the serving hot-spot).
+
+Each microservice in the Fifer workload is an ML inference model whose
+compute is dominated by dense layers over a *request batch* (Fifer's whole
+point is batching requests into one container execution). This kernel
+computes ``activation(x @ w + b)`` for a batch of requests, tiled so that on
+a real TPU each (block_m, block_n) output tile is produced by the MXU from
+VMEM-resident operand tiles.
+
+TPU adaptation notes (DESIGN.md §3):
+  * Tiles are (block_m=128, block_n=128) by default — the MXU systolic array
+    shape — with the full K dimension resident per tile (the Fifer models
+    are small: K ≤ 4096 keeps the per-tile VMEM footprint
+    (bm*K + K*bn + bm*bn)*4B ≤ ~4.2 MiB, well under the ~16 MiB VMEM).
+  * Bias add + activation are fused into the same kernel so the output tile
+    makes a single HBM round-trip.
+  * ``interpret=True`` everywhere on this image: CPU PJRT cannot execute
+    Mosaic custom-calls; kernel *structure* is still the TPU schedule.
+
+The pure-jnp oracle is ref.dense_ref; pytest sweeps shapes with hypothesis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (block_m, block_n) output tile: activation(x_tile @ w_tile + b)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    o_ref[...] = ref.apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "interpret")
+)
+def dense(
+    x,
+    w,
+    b,
+    activation: str = "relu",
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+):
+    """Batched dense layer via Pallas: activation(x @ w + b).
+
+    x: (M, K) request batch, w: (K, N), b: (N,). Returns (M, N) f32.
+
+    M and N are padded up to the block grid; K is kept whole per tile
+    (see module docstring for the VMEM budget argument).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    # Shrink blocks for small problems so we don't pad tiny models to 128.
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    w_p = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, np_ - n),)).reshape(1, np_)
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(x_p, w_p, b_p)
+    return out[:m, :n]
+
+
+def mlp(x, params, activation: str = "relu", interpret: bool = True):
+    """MLP forward over a request batch; every layer is the Pallas kernel.
+
+    params: list of (w, b); the final layer is linear (no activation),
+    matching ref.mlp_ref.
+    """
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        act = activation if i + 1 < n else "none"
+        x = dense(x, w, b, activation=act, interpret=interpret)
+    return x
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (used by the perf model)."""
+    return dtype_bytes * (block_m * k + k * block_n + block_m * block_n + block_n)
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m: int = 128, block_n: int = 128) -> float:
+    """Fraction of MXU work that is useful (non-padding) for a (m,k)x(k,n)
+    matmul under this kernel's padding scheme. Used for the §Perf roofline
+    estimate in EXPERIMENTS.md (interpret mode gives no TPU wall-clock)."""
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    return (m * n * k) / float(mp * np_ * k)

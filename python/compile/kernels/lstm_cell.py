@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: fused LSTM cell for Fifer's load predictor.
+
+Fifer's proactive scaler forecasts the arrival rate with a 2-layer, 32-unit
+LSTM (paper §4.5.1). The per-step cell — two matmuls, four gate
+nonlinearities, and the state update — is fused into a single Pallas kernel
+so the whole step is one VMEM-resident block (the predictor is tiny: the
+entire cell state fits in a fraction of one tile).
+
+Gate order along the 4H axis: input, forget, cell(g), output — matching
+ref.lstm_cell_ref, which is the pytest oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, ho_ref, co_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    z = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hidden = h.shape[-1]
+    i = z[:, 0 * hidden : 1 * hidden]
+    f = z[:, 1 * hidden : 2 * hidden]
+    g = z[:, 2 * hidden : 3 * hidden]
+    o = z[:, 3 * hidden : 4 * hidden]
+    i = jnp.reciprocal(1.0 + jnp.exp(-i))
+    f = jnp.reciprocal(1.0 + jnp.exp(-f))
+    o = jnp.reciprocal(1.0 + jnp.exp(-o))
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    ho_ref[...] = h_new.astype(ho_ref.dtype)
+    co_ref[...] = c_new.astype(co_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell(x, h, c, wx, wh, b, interpret: bool = True):
+    """Fused LSTM cell step.
+
+    x: (B, I), h/c: (B, H), wx: (I, 4H), wh: (H, 4H), b: (4H,).
+    Returns (h', c'), both (B, H) f32.
+    """
+    batch, _ = x.shape
+    hidden = h.shape[-1]
+    assert wx.shape[-1] == 4 * hidden and wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+    b2 = b.reshape(1, 4 * hidden)
+    out_shape = (
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+    )
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32),
+        h.astype(jnp.float32),
+        c.astype(jnp.float32),
+        wx.astype(jnp.float32),
+        wh.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )

@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+reference implementation here. pytest (python/tests/test_kernels.py) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and oracle;
+this is the core correctness signal for Layer 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "relu"):
+    """Reference batched dense layer: activation(x @ w + b).
+
+    x: (M, K) activations, w: (K, N) weights, b: (N,) bias.
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return apply_activation(y, activation)
+
+
+def apply_activation(y, activation: str):
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "gelu":
+        # tanh-approximated gelu, matching the kernel
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def mlp_ref(x, params, activation: str = "relu"):
+    """Reference MLP forward: chain of dense layers, last layer linear."""
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        act = activation if i + 1 < n else "none"
+        x = dense_ref(x, w, b, act)
+    return x
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference fused LSTM cell.
+
+    x: (B, I), h: (B, H), c: (B, H)
+    wx: (I, 4H), wh: (H, 4H), b: (4H,)
+    Gate order along the 4H axis: input, forget, cell(g), output.
+    Returns (h', c').
+    """
+    z = jnp.dot(x, wx, preferred_element_type=jnp.float32) + jnp.dot(
+        h, wh, preferred_element_type=jnp.float32
+    ) + b
+    hidden = h.shape[-1]
+    i, f, g, o = (
+        z[:, 0 * hidden : 1 * hidden],
+        z[:, 1 * hidden : 2 * hidden],
+        z[:, 2 * hidden : 3 * hidden],
+        z[:, 3 * hidden : 4 * hidden],
+    )
+    i = jnp.reciprocal(1.0 + jnp.exp(-i))
+    f = jnp.reciprocal(1.0 + jnp.exp(-f))
+    o = jnp.reciprocal(1.0 + jnp.exp(-o))
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

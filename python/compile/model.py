@@ -1,0 +1,190 @@
+"""Layer-2: JAX compute graphs for the Fifer workload (build-time only).
+
+Two families of graphs, both of which lower into HLO-text artifacts that the
+Rust runtime executes via PJRT (Python is never on the request path):
+
+1. **Microservice inference models** — one small MLP per Djinn&Tonic-style
+   microservice (paper Table 3). The Rust "containers" run these for real in
+   live-serving mode, batched at Fifer's per-stage batch size. Layer sizes
+   scale roughly with the paper's mean execution times (relative, not
+   absolute — see DESIGN.md §2 substitutions). Every dense layer is the
+   Pallas kernel from kernels/batched_mlp.py.
+
+2. **Load-predictor networks** — the 2-layer/32-unit LSTM (paper §4.5.1) and
+   the simple feed-forward baseline from Fig. 6, built on the fused Pallas
+   LSTM cell. Trained by lstm_train.py; the trained weights are baked into
+   the exported artifact as constants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batched_mlp, lstm_cell
+
+# ---------------------------------------------------------------------------
+# Microservice catalog (paper Table 3).
+#
+# name -> (input_dim, hidden_dims, output_dim, paper_exec_ms)
+# Hidden sizes are chosen so relative FLOPs roughly track paper exec times.
+# "NLP" is the composite POS+NER stage used by the IMG / IPA chains (Table 4).
+# ---------------------------------------------------------------------------
+MICROSERVICES = {
+    # Image services
+    "IMC":   (1024, [1024, 1024, 512], 10, 43.5),   # Image Classification (Alexnet)
+    "AP":    (1024, [768, 768, 256], 16, 30.3),     # Human Activity Pose (DeepPose)
+    "HS":    (2048, [2048, 2048, 1024, 512], 64, 151.2),  # Human Segmentation (VGG16)
+    "FACER": (256, [256, 128], 32, 5.5),            # Facial Recognition (VGGNET)
+    "FACED": (256, [256, 160], 4, 6.1),             # Face Detection (Xception)
+    # Speech services
+    "ASR":   (1280, [1024, 1024, 512], 48, 46.1),   # Auto Speech Recognition (NNet3)
+    # NLP services
+    "POS":   (64, [32], 12, 0.100),                 # Parts-of-Speech (SENNA)
+    "NER":   (64, [32], 8, 0.090),                  # Named Entity Recognition (SENNA)
+    "NLP":   (64, [48], 16, 0.190),                 # composite POS+NER chain stage
+    "QA":    (1024, [1024, 768, 512], 32, 56.1),    # Question Answering
+}
+
+# Application chains (paper Table 4) and their measured average slack (ms).
+CHAINS = {
+    "FaceSecurity":  (["FACED", "FACER"], 788.0),
+    "IMG":           (["IMC", "NLP", "QA"], 700.0),
+    "IPA":           (["ASR", "NLP", "QA"], 697.0),
+    "DetectFatigue": (["HS", "AP", "FACED", "FACER"], 572.0),
+}
+
+SLO_MS = 1000.0  # paper §4.1: fixed end-to-end response latency
+
+
+def layer_dims(name: str):
+    """(in_dim, [hidden...], out_dim) for a microservice."""
+    in_dim, hidden, out_dim, _ = MICROSERVICES[name]
+    return in_dim, hidden, out_dim
+
+
+def init_mlp_params(name: str, seed: int = 0):
+    """Deterministic He-init weights for a microservice model."""
+    in_dim, hidden, out_dim = layer_dims(name)
+    dims = [in_dim] + hidden + [out_dim]
+    key = jax.random.PRNGKey(hash(name) % (2**31) + seed)
+    params = []
+    for i in range(len(dims) - 1):
+        key, kw = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        w = jax.random.normal(kw, (dims[i], dims[i + 1]), jnp.float32) * scale
+        b = jnp.zeros((dims[i + 1],), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def microservice_forward(name: str, params, x, interpret: bool = True):
+    """Batched inference for one microservice: (B, in_dim) -> (B, out_dim)."""
+    return batched_mlp.mlp(x, params, activation="relu", interpret=interpret)
+
+
+def microservice_forward_ref(name: str, params, x):
+    """Pure-jnp oracle for the same forward (tests & HLO diffing)."""
+    from .kernels import ref
+
+    return ref.mlp_ref(x, params, activation="relu")
+
+
+# ---------------------------------------------------------------------------
+# Load predictor networks (paper §4.5.1 / Fig. 6).
+#
+# Input: WINDOW normalized arrival-rate samples (5 s windows over the last
+# 100 s -> 20 samples). Output: predicted (normalized) max arrival rate for
+# the next monitoring window.
+# ---------------------------------------------------------------------------
+WINDOW = 20          # 100 s history / 5 s sampling windows (paper W_s)
+LSTM_HIDDEN = 32     # paper: 2 layers x 32 neurons
+LSTM_LAYERS = 2
+
+
+def init_lstm_params(seed: int = 7):
+    key = jax.random.PRNGKey(seed)
+    params = {"layers": [], "w_out": None, "b_out": None}
+    in_dim = 1
+    for _ in range(LSTM_LAYERS):
+        key, k1, k2 = jax.random.split(key, 3)
+        sx = jnp.sqrt(1.0 / max(in_dim, 1))
+        sh = jnp.sqrt(1.0 / LSTM_HIDDEN)
+        wx = jax.random.normal(k1, (in_dim, 4 * LSTM_HIDDEN), jnp.float32) * sx
+        wh = jax.random.normal(k2, (LSTM_HIDDEN, 4 * LSTM_HIDDEN), jnp.float32) * sh
+        b = jnp.zeros((4 * LSTM_HIDDEN,), jnp.float32)
+        # forget-gate bias init to 1.0 for training stability
+        b = b.at[LSTM_HIDDEN : 2 * LSTM_HIDDEN].set(1.0)
+        params["layers"].append({"wx": wx, "wh": wh, "b": b})
+        in_dim = LSTM_HIDDEN
+    key, k3 = jax.random.split(key)
+    params["w_out"] = jax.random.normal(k3, (LSTM_HIDDEN, 1), jnp.float32) * 0.1
+    params["b_out"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def lstm_forward(params, x, interpret: bool = True):
+    """LSTM predictor forward: x (B, WINDOW) -> (B,) forecast.
+
+    Unrolls WINDOW steps of the fused Pallas LSTM cell per layer.
+    """
+    batch = x.shape[0]
+    seq = x.reshape(batch, -1, 1)  # (B, T, 1)
+    for layer in params["layers"]:
+        h = jnp.zeros((batch, LSTM_HIDDEN), jnp.float32)
+        c = jnp.zeros((batch, LSTM_HIDDEN), jnp.float32)
+        outs = []
+        for t in range(seq.shape[1]):
+            h, c = lstm_cell.lstm_cell(
+                seq[:, t, :], h, c, layer["wx"], layer["wh"], layer["b"],
+                interpret=interpret,
+            )
+            outs.append(h)
+        seq = jnp.stack(outs, axis=1)  # (B, T, H)
+    last = seq[:, -1, :]
+    out = batched_mlp.dense(
+        last, params["w_out"], params["b_out"], activation="none",
+        interpret=interpret,
+    )
+    return out[:, 0]
+
+
+def lstm_forward_ref(params, x):
+    """Pure-jnp oracle for lstm_forward."""
+    from .kernels import ref
+
+    batch = x.shape[0]
+    seq = x.reshape(batch, -1, 1)
+    for layer in params["layers"]:
+        h = jnp.zeros((batch, LSTM_HIDDEN), jnp.float32)
+        c = jnp.zeros((batch, LSTM_HIDDEN), jnp.float32)
+        outs = []
+        for t in range(seq.shape[1]):
+            h, c = ref.lstm_cell_ref(
+                seq[:, t, :], h, c, layer["wx"], layer["wh"], layer["b"]
+            )
+            outs.append(h)
+        seq = jnp.stack(outs, axis=1)
+    last = seq[:, -1, :]
+    return (jnp.dot(last, params["w_out"]) + params["b_out"])[:, 0]
+
+
+def init_ff_params(seed: int = 11):
+    """Simple feed-forward predictor baseline (Fig. 6): WINDOW -> 32 -> 1."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (WINDOW, 32), jnp.float32) * jnp.sqrt(2.0 / WINDOW)
+    b1 = jnp.zeros((32,), jnp.float32)
+    w2 = jax.random.normal(k2, (32, 1), jnp.float32) * jnp.sqrt(2.0 / 32)
+    b2 = jnp.zeros((1,), jnp.float32)
+    return [(w1, b1), (w2, b2)]
+
+
+def ff_forward(params, x, interpret: bool = True):
+    """Feed-forward predictor: (B, WINDOW) -> (B,)."""
+    return batched_mlp.mlp(x, params, activation="relu", interpret=interpret)[:, 0]
+
+
+def ff_forward_ref(params, x):
+    from .kernels import ref
+
+    return ref.mlp_ref(x, params, activation="relu")[:, 0]

@@ -1,0 +1,95 @@
+"""AOT pipeline: HLO-text round-trip, weight binaries, manifest integrity."""
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    def fn(x):
+        return (jnp.tanh(x) * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text
+
+
+def test_lower_microservice_has_params():
+    """Weights must be runtime parameters, not baked constants."""
+    params = model.init_mlp_params("POS")
+    hlo = aot.lower_microservice("POS", 2, params)
+    assert "HloModule" in hlo
+    # 1 hidden layer -> w1,b1,w2,b2 + x = 5 parameters
+    n_params = hlo.count("parameter(")
+    assert n_params >= 5, f"expected >=5 HLO parameters, got {n_params}"
+
+
+def test_write_weights_bin_roundtrip(tmp_path):
+    params = model.init_mlp_params("NER")
+    path = tmp_path / "ner.bin"
+    layers = aot.write_weights_bin(str(path), params)
+    raw = path.read_bytes()
+    total = sum(
+        int(np.prod(l["w"])) + int(np.prod(l["b"])) for l in layers
+    )
+    assert len(raw) == 4 * total
+    # first float must equal params[0] w[0,0] in little-endian f32
+    first = struct.unpack("<f", raw[:4])[0]
+    assert abs(first - float(np.asarray(params[0][0])[0, 0])) < 1e-6
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_integrity():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["slo_ms"] == 1000.0
+    assert set(m["chains"]) == set(model.CHAINS)
+    for name, entry in m["microservices"].items():
+        for b, fname in entry["batches"].items():
+            assert os.path.exists(os.path.join(ART, fname)), fname
+        wpath = os.path.join(ART, entry["weights"]["path"])
+        assert os.path.exists(wpath)
+        total = sum(
+            int(np.prod(l["w"])) + int(np.prod(l["b"]))
+            for l in entry["weights"]["layers"]
+        )
+        assert os.path.getsize(wpath) == 4 * total, name
+    for p in m["predictors"].values():
+        assert os.path.exists(os.path.join(ART, p["path"]))
+    for t in m["traces"].values():
+        assert os.path.exists(os.path.join(ART, t["path"]))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "predictor_weights.json")),
+    reason="artifacts not built",
+)
+def test_trained_lstm_beats_naive_baseline():
+    """The trained LSTM must out-predict 'last value' persistence on WITS."""
+    from compile import lstm_train, traces
+
+    lstm_w, _, _scale = lstm_train.load_weights(
+        os.path.join(ART, "predictor_weights.json")
+    )
+    rate = traces.wits_trace()
+    x, y = traces.make_dataset(rate, history=model.WINDOW, horizon=2)
+    split = int(0.6 * len(x))
+    xn, _, m = lstm_train.relative_normalize(x, y)
+    x_te, y_te, m_te = xn[split:], y[split:], m[split:]
+    pred = np.asarray(model.lstm_forward_ref(lstm_w, x_te)) * m_te
+    lstm_rmse = np.sqrt(np.mean((pred - y_te) ** 2))
+    naive_rmse = np.sqrt(np.mean((x[split:, -1] - y_te) ** 2))
+    assert lstm_rmse < naive_rmse, (lstm_rmse, naive_rmse)

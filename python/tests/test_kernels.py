@@ -1,0 +1,174 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and batch sizes; assert_allclose against ref is the
+core correctness signal for everything the Rust runtime will execute.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import batched_mlp, lstm_cell, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ACTIVATIONS = ["relu", "tanh", "gelu", "none"]
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from(ACTIVATIONS),
+)
+def test_dense_matches_ref(m, k, n, act):
+    x = _rand(m * 7 + 1, (m, k))
+    w = _rand(k * 13 + 2, (k, n))
+    b = _rand(n * 17 + 3, (n,))
+    got = batched_mlp.dense(x, w, b, activation=act)
+    want = ref.dense_ref(x, w, b, activation=act)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (130, 200, 257), (1, 2048, 64)])
+def test_dense_block_boundaries(m, k, n):
+    """Exercise exact-tile, ragged-tile, and single-row shapes."""
+    x = _rand(1, (m, k))
+    w = _rand(2, (k, n))
+    b = _rand(3, (n,))
+    got = batched_mlp.dense(x, w, b, activation="relu")
+    want = ref.dense_ref(x, w, b, activation="relu")
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 64), (128, 128), (256, 128)])
+def test_dense_block_shape_sweep(bm, bn):
+    """Any legal block shape must give identical numerics (perf knob only)."""
+    x, w, b = _rand(4, (33, 70)), _rand(5, (70, 41)), _rand(6, (41,))
+    got = batched_mlp.dense(x, w, b, activation="gelu", block_m=bm, block_n=bn)
+    want = ref.dense_ref(x, w, b, activation="gelu")
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_rejects_bad_shapes():
+    x, w, b = _rand(1, (4, 8)), _rand(2, (9, 3)), _rand(3, (3,))
+    with pytest.raises(AssertionError):
+        batched_mlp.dense(x, w, b)
+
+
+def test_dense_bias_broadcast_and_zero_input():
+    x = jnp.zeros((5, 12), jnp.float32)
+    w = _rand(8, (12, 7))
+    b = jnp.arange(7, dtype=jnp.float32)
+    got = batched_mlp.dense(x, w, b, activation="none")
+    assert_allclose(np.asarray(got), np.tile(np.arange(7, dtype=np.float32), (5, 1)))
+
+
+# ---------------------------------------------------------------------------
+# mlp composition
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    batch=st.integers(1, 16),
+    dims=st.lists(st.integers(1, 48), min_size=2, max_size=5),
+)
+def test_mlp_matches_ref(batch, dims):
+    params = []
+    for i in range(len(dims) - 1):
+        params.append((_rand(i * 3 + 1, (dims[i], dims[i + 1])), _rand(i * 3 + 2, (dims[i + 1],))))
+    x = _rand(99, (batch, dims[0]))
+    got = batched_mlp.mlp(x, params)
+    want = ref.mlp_ref(x, params)
+    assert got.shape == (batch, dims[-1])
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_final_layer_is_linear():
+    """The last layer must have no activation (can go negative)."""
+    params = [(-jnp.ones((4, 4), jnp.float32), jnp.zeros((4,), jnp.float32))]
+    x = jnp.ones((2, 4), jnp.float32)
+    out = np.asarray(batched_mlp.mlp(x, params))
+    assert (out < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# lstm cell kernel
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    in_dim=st.integers(1, 16),
+    hidden=st.integers(1, 48),
+)
+def test_lstm_cell_matches_ref(batch, in_dim, hidden):
+    x = _rand(1, (batch, in_dim))
+    h = _rand(2, (batch, hidden))
+    c = _rand(3, (batch, hidden))
+    wx = _rand(4, (in_dim, 4 * hidden)) * 0.3
+    wh = _rand(5, (hidden, 4 * hidden)) * 0.3
+    b = _rand(6, (4 * hidden,)) * 0.1
+    h2, c2 = lstm_cell.lstm_cell(x, h, c, wx, wh, b)
+    h2r, c2r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    assert_allclose(np.asarray(h2), np.asarray(h2r), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(c2), np.asarray(c2r), rtol=1e-5, atol=1e-5)
+
+
+def test_lstm_cell_state_bounds():
+    """h' = o * tanh(c') must stay in (-1, 1)."""
+    x = _rand(1, (4, 2)) * 10
+    h = _rand(2, (4, 8)) * 10
+    c = _rand(3, (4, 8)) * 10
+    wx = _rand(4, (2, 32))
+    wh = _rand(5, (8, 32))
+    b = _rand(6, (32,))
+    h2, _ = lstm_cell.lstm_cell(x, h, c, wx, wh, b)
+    assert np.abs(np.asarray(h2)).max() <= 1.0
+
+
+def test_lstm_cell_forget_gate_saturation():
+    """With f ~= 1 and i ~= 0, the cell state must carry through."""
+    batch, hidden = 2, 4
+    x = jnp.zeros((batch, 1), jnp.float32)
+    h = jnp.zeros((batch, hidden), jnp.float32)
+    c = jnp.full((batch, hidden), 0.7, jnp.float32)
+    wx = jnp.zeros((1, 4 * hidden), jnp.float32)
+    wh = jnp.zeros((hidden, 4 * hidden), jnp.float32)
+    b = jnp.concatenate([
+        jnp.full((hidden,), -20.0),  # i -> 0
+        jnp.full((hidden,), 20.0),   # f -> 1
+        jnp.zeros((hidden,)),        # g
+        jnp.full((hidden,), 20.0),   # o -> 1
+    ]).astype(jnp.float32)
+    h2, c2 = lstm_cell.lstm_cell(x, h, c, wx, wh, b)
+    assert_allclose(np.asarray(c2), 0.7 * np.ones((batch, hidden)), rtol=1e-5)
+    assert_allclose(np.asarray(h2), np.tanh(0.7) * np.ones((batch, hidden)), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# perf model helpers
+# ---------------------------------------------------------------------------
+def test_vmem_budget_for_paper_models():
+    """Every (block, K) combination used by the catalog fits VMEM (16 MiB)."""
+    from compile import model as m
+
+    for name, (in_dim, hidden, out_dim, _) in m.MICROSERVICES.items():
+        dims = [in_dim] + hidden + [out_dim]
+        for k in dims[:-1]:
+            assert batched_mlp.vmem_bytes(128, 128, k) < 16 * 2**20, name
+
+
+def test_mxu_utilization_bounds():
+    assert batched_mlp.mxu_utilization(128, 128, 128) == 1.0
+    u = batched_mlp.mxu_utilization(1, 10, 64)
+    assert 0.0 < u <= 1.0

@@ -1,0 +1,73 @@
+"""Layer-2 correctness: microservice models and predictor nets vs oracles."""
+import jax
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", sorted(model.MICROSERVICES))
+def test_microservice_forward_shape_and_ref(name):
+    in_dim, _, out_dim = model.layer_dims(name)
+    params = model.init_mlp_params(name)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, in_dim))
+    got = model.microservice_forward(name, params, x)
+    want = model.microservice_forward_ref(name, params, x)
+    assert got.shape == (2, out_dim)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_params_deterministic():
+    a = model.init_mlp_params("IMC")
+    b = model.init_mlp_params("IMC")
+    for (w1, b1), (w2, b2) in zip(a, b):
+        assert_allclose(np.asarray(w1), np.asarray(w2))
+        assert_allclose(np.asarray(b1), np.asarray(b2))
+
+
+def test_chain_catalog_consistent():
+    """Every chain stage exists; Table 4 slack < SLO; exec sums sane."""
+    for name, (stages, slack) in model.CHAINS.items():
+        assert 0 < slack < model.SLO_MS, name
+        total_exec = 0.0
+        for s in stages:
+            assert s in model.MICROSERVICES, f"{name} references unknown {s}"
+            total_exec += model.MICROSERVICES[s][3]
+        assert total_exec + 1e-9 < model.SLO_MS, name
+
+
+def test_detect_fatigue_stage1_dominates():
+    """Paper Fig. 3a: HS is ~81% of DetectFatigue's execution time."""
+    stages, _ = model.CHAINS["DetectFatigue"]
+    times = [model.MICROSERVICES[s][3] for s in stages]
+    assert times[0] / sum(times) > 0.75
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_lstm_forward_matches_ref(batch):
+    params = model.init_lstm_params()
+    x = jax.random.uniform(jax.random.PRNGKey(3), (batch, model.WINDOW))
+    got = model.lstm_forward(params, x)
+    want = model.lstm_forward_ref(params, x)
+    assert got.shape == (batch,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ff_forward_matches_ref():
+    params = model.init_ff_params()
+    x = jax.random.uniform(jax.random.PRNGKey(4), (5, model.WINDOW))
+    got = model.ff_forward(params, x)
+    want = model.ff_forward_ref(params, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_lstm_param_topology():
+    """Paper §4.5.1: 2 layers x 32 neurons."""
+    p = model.init_lstm_params()
+    assert len(p["layers"]) == 2
+    assert p["layers"][0]["wx"].shape == (1, 4 * 32)
+    assert p["layers"][1]["wx"].shape == (32, 4 * 32)
+    assert p["w_out"].shape == (32, 1)

@@ -1,0 +1,47 @@
+"""Trace generators must match the statistics the paper publishes (§5.3)."""
+import numpy as np
+
+from compile import traces
+
+
+def test_wits_statistics():
+    rate = traces.wits_trace()
+    # paper: average ~240-300 req/s, peak ~1200 req/s, peak ~5x median
+    assert 200 <= rate.mean() <= 360, rate.mean()
+    assert 1000 <= rate.max() <= 1500, rate.max()
+    assert rate.max() / np.median(rate) >= 3.5
+    assert (rate >= 1.0).all()
+
+
+def test_wiki_statistics():
+    rate = traces.wiki_trace()
+    # paper: average ~1500 req/s, recurring pattern, no extreme spikes
+    assert 1200 <= rate.mean() <= 1800, rate.mean()
+    assert rate.max() / np.median(rate) <= 2.5  # diurnal, not bursty
+    # recurring pattern: strong autocorrelation at the 600 s harmonic
+    r = rate - rate.mean()
+    lag = 600
+    ac = np.corrcoef(r[:-lag], r[lag:])[0, 1]
+    assert ac > 0.3, ac
+
+
+def test_traces_deterministic():
+    a, b = traces.wits_trace(), traces.wits_trace()
+    np.testing.assert_allclose(a, b)
+
+
+def test_window_maxima():
+    rate = np.arange(20, dtype=float)
+    w = traces.window_maxima(rate, window_s=5)
+    np.testing.assert_allclose(w, [4, 9, 14, 19])
+
+
+def test_make_dataset_shapes_and_alignment():
+    rate = traces.wits_trace(duration_s=600)
+    x, y = traces.make_dataset(rate, history=20, horizon=2)
+    assert x.shape[1] == 20
+    assert len(x) == len(y)
+    # target is the max of the next two windows after the history
+    w = traces.window_maxima(rate, 5)
+    np.testing.assert_allclose(y[0], w[20:22].max())
+    np.testing.assert_allclose(x[0], w[:20])

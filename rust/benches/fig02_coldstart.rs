@@ -1,0 +1,55 @@
+//! Fig. 2 — implications of cold starts for ML inference functions.
+//!
+//! Regenerates both panels: (a) cold-start breakdown (spawn / image pull /
+//! runtime init / exec) and (b) warm-start totals, per model ordered by
+//! image size — the paper's squeezenet→resnet-200 axis. Expected shape:
+//! cold start adds ~2000–7500 ms on top of execution (paper §2.2.1), warm
+//! totals stay ~exec time.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::fig2_coldstart;
+
+fn main() {
+    section("Fig. 2a", "cold-start breakdown per model (ms, 500 samples)");
+    let rows = fig2_coldstart(500, 1);
+    let mut t = Table::new(&[
+        "model", "exec", "spawn", "image pull", "init", "cold total", "cold-exec",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.1}", r.exec_ms),
+            format!("{:.0}", r.spawn_ms),
+            format!("{:.0}", r.pull_ms),
+            format!("{:.0}", r.init_ms),
+            format!("{:.0}", r.cold_total_ms),
+            format!("{:.0}", r.cold_total_ms - r.exec_ms),
+        ]);
+    }
+    t.print();
+
+    section("Fig. 2b", "warm-start totals per model (ms)");
+    let mut t = Table::new(&["model", "warm total", "cold/warm ratio"]);
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.1}", r.warm_total_ms),
+            format!("{:.0}x", r.cold_total_ms / r.warm_total_ms),
+        ]);
+    }
+    t.print();
+
+    // paper check: cold start adds 2000-7500ms over exec
+    let overhead_min = rows
+        .iter()
+        .map(|r| r.cold_total_ms - r.exec_ms)
+        .fold(f64::INFINITY, f64::min);
+    let overhead_max = rows
+        .iter()
+        .map(|r| r.cold_total_ms - r.exec_ms)
+        .fold(0.0, f64::max);
+    println!(
+        "\ncold-start overhead range: {overhead_min:.0}–{overhead_max:.0} ms \
+         (paper: ~2000–7500 ms)"
+    );
+}

@@ -1,0 +1,59 @@
+//! Fig. 3 — microservice characterization.
+//!
+//! (a) per-stage breakdown of each chain's execution time (paper: stage-1
+//! of Detect-Fatigue ≈ 81% of the total); (b) execution-time variation
+//! across 100 runs (paper: std-dev within 20 ms). When artifacts are
+//! present, panel (b) is additionally re-measured on the *real* PJRT
+//! models rather than the analytic sampler.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::{fig3a_breakdown, fig3b_variation};
+
+fn main() {
+    section("Fig. 3a", "per-stage breakdown of chain execution time");
+    let mut t = Table::new(&["chain", "stage", "exec ms", "% of total"]);
+    for b in fig3a_breakdown() {
+        for (i, (name, exec, pct)) in b.stages.iter().enumerate() {
+            t.row(&[
+                if i == 0 { b.chain.to_string() } else { String::new() },
+                name.to_string(),
+                format!("{exec:.2}"),
+                format!("{pct:.1}"),
+            ]);
+        }
+    }
+    t.print();
+
+    section("Fig. 3b", "execution-time variation over 100 runs (model)");
+    let mut t = Table::new(&["microservice", "mean ms", "std ms"]);
+    for (name, mean, std) in fig3b_variation(100, 7) {
+        t.row(&[name.to_string(), format!("{mean:.2}"), format!("{std:.2}")]);
+    }
+    t.print();
+    println!("(paper claim: std-dev within 20 ms for every microservice)");
+
+    // live re-measurement against the real artifacts, if present
+    let art = std::path::Path::new("artifacts");
+    if art.join("manifest.json").exists() {
+        section("Fig. 3b-live", "PJRT batch-1 latency over 30 runs (ms)");
+        let mut rt = fifer::runtime::Runtime::new(art).expect("runtime");
+        let mut t = Table::new(&["microservice", "mean ms", "std ms"]);
+        for name in ["FACER", "NLP", "IMC", "QA"] {
+            let dim = rt.manifest.microservices[name].input_dim;
+            let x = vec![0.1f32; dim];
+            rt.infer(name, 1, &x).unwrap(); // compile outside timing
+            let mut samples = Vec::new();
+            for _ in 0..30 {
+                let t0 = std::time::Instant::now();
+                rt.infer(name, 1, &x).unwrap();
+                samples.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            t.row(&[
+                name.to_string(),
+                format!("{:.2}", fifer::util::stats::mean(&samples)),
+                format!("{:.2}", fifer::util::stats::std_dev(&samples)),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,43 @@
+//! Fig. 8 — prototype: SLO violations + containers, 5 RMs × 3 mixes.
+//!
+//! Poisson λ=50 on the 80-core cluster, everything normalized to Bline
+//! (as the paper plots it). Expected shape: SBatch fewest containers but
+//! the most violations; Fifer/RScale far fewer containers than
+//! Bline/BPred; Fifer's violations ≈ Bline's.
+
+use fifer::bench::{norm, section, Table};
+use fifer::experiments::run_prototype;
+
+fn main() {
+    let duration = 1500;
+    for mix in ["Heavy", "Medium", "Light"] {
+        section(
+            "Fig. 8",
+            &format!("{mix} mix — Poisson λ=50, {duration} s, prototype cluster"),
+        );
+        let runs = run_prototype(mix, duration, 42);
+        let base = runs[0].summary.clone();
+        let mut t = Table::new(&[
+            "policy",
+            "SLO viol %",
+            "viol norm",
+            "avg containers",
+            "cont norm",
+            "spawned",
+        ]);
+        for r in &runs {
+            t.row(&[
+                r.policy.name().to_string(),
+                format!("{:.2}", r.summary.slo_violation_pct),
+                norm(
+                    r.summary.slo_violation_pct.max(0.01),
+                    base.slo_violation_pct.max(0.01),
+                ),
+                format!("{:.1}", r.summary.avg_containers),
+                norm(r.summary.avg_containers, base.avg_containers),
+                format!("{}", r.summary.total_spawned),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,29 @@
+//! Fig. 9 — P99 tail-latency breakdown (exec / cold-start / batching).
+//!
+//! Heavy mix, prototype cluster. Paper shape: RScale/SBatch P99 up to 3×
+//! Bline/BPred (cold-start + queueing congestion); Fifer ~2× Bline with a
+//! much smaller cold-start component than RScale.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::run_prototype;
+
+fn main() {
+    section("Fig. 9", "P99 tail latency breakdown — heavy mix (ms)");
+    let runs = run_prototype("Heavy", 1500, 42);
+    let base_p99 = runs[0].summary.p99_ms;
+    let mut t = Table::new(&[
+        "policy", "p99", "p99/Bline", "tail exec", "tail cold-start", "tail batching",
+    ]);
+    for r in &runs {
+        let b = &r.summary.tail_breakdown;
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.0}", r.summary.p99_ms),
+            format!("{:.2}x", r.summary.p99_ms / base_p99),
+            format!("{:.0}", b.exec_ms),
+            format!("{:.0}", b.cold_ms),
+            format!("{:.0}", b.batch_ms),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,58 @@
+//! Fig. 10 — latency and queuing-time distributions, heavy mix.
+//!
+//! (a) response-latency CDF up to P95 (paper: batching RMs shift the
+//! median right but stay within SLO); (b) queuing-time distribution
+//! (paper: Fifer/RScale queue heavily by design; Bline/BPred irregular).
+
+use fifer::bench::{section, Table};
+use fifer::config::Policy;
+use fifer::experiments::run_prototype;
+
+fn main() {
+    let runs = run_prototype("Heavy", 1500, 42);
+
+    section("Fig. 10a", "response-latency CDF to P95 (ms)");
+    let quantiles = [10.0, 25.0, 50.0, 75.0, 90.0, 95.0];
+    let mut t = Table::new(&["policy", "p10", "p25", "p50", "p75", "p90", "p95"]);
+    for r in &runs {
+        let mut responses: Vec<f64> = r
+            .recorder
+            .jobs
+            .iter()
+            .map(|j| fifer::util::to_ms(j.response()))
+            .collect();
+        responses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut row = vec![r.policy.name().to_string()];
+        for q in quantiles {
+            row.push(format!(
+                "{:.0}",
+                fifer::util::stats::percentile_sorted(&responses, q)
+            ));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    section("Fig. 10b", "stage queuing-time distribution (ms)");
+    let mut t = Table::new(&["policy", "q50", "q90", "q99"]);
+    for r in &runs {
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.1}", r.summary.queue_wait_median_ms),
+            {
+                let cdf = r.recorder.queue_cdf(10);
+                format!("{:.1}", cdf.get(8).map(|p| p.0).unwrap_or(0.0))
+            },
+            format!("{:.1}", r.summary.queue_wait_p99_ms),
+        ]);
+    }
+    t.print();
+
+    let fifer = runs.iter().find(|r| r.policy == Policy::Fifer).unwrap();
+    let bline = runs.iter().find(|r| r.policy == Policy::Bline).unwrap();
+    println!(
+        "\nmedian queuing: Fifer {:.1} ms vs Bline {:.1} ms — slack absorbed \
+         into queues by design (paper §6.1.3)",
+        fifer.summary.queue_wait_median_ms, bline.summary.queue_wait_median_ms
+    );
+}

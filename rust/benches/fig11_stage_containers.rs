@@ -1,0 +1,25 @@
+//! Fig. 11 — distribution of containers across IPA's three stages.
+//!
+//! Heavy mix. Paper shape: Bline/BPred concentrate containers on stage-1
+//! (ASR, the bottleneck); Fifer evens out stages 1/3 and keeps stage-2
+//! (NLP, <2% of exec) minimal thanks to early scale-in.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::{run_prototype, stage_distribution};
+
+fn main() {
+    section("Fig. 11", "containers per IPA stage (% of chain total)");
+    let runs = run_prototype("Heavy", 1500, 42);
+    let mut t = Table::new(&["policy", "S1:ASR %", "S2:NLP %", "S3:QA %"]);
+    for r in &runs {
+        let dist = stage_distribution(&r, "IPA");
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.1}", dist[0].1),
+            format!("{:.1}", dist[1].1),
+            format!("{:.1}", dist[2].1),
+        ]);
+    }
+    t.print();
+    println!("(paper: Fifer ≈ 38/21/36, with NLP lowest because it scales in early)");
+}

@@ -1,0 +1,54 @@
+//! Fig. 12 — sources of improvement: container utilization.
+//!
+//! (a) average requests executed per container (RPC) per IPA stage —
+//! paper: Fifer highest everywhere, Bline/BPred worst on the short NLP
+//! stage; (b) containers alive over time in 10 s bins — paper: RScale and
+//! Fifer track the request rate with far fewer containers than Bline.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::run_prototype;
+use fifer::model::Catalog;
+
+fn main() {
+    let cat = Catalog::paper();
+    let runs = run_prototype("Heavy", 1500, 42);
+
+    section("Fig. 12a", "requests per container (RPC) per IPA stage");
+    let ipa = &cat.chains[cat.chain_id("IPA").unwrap()];
+    let mut t = Table::new(&["policy", "ASR", "NLP", "QA", "all-stage avg"]);
+    for r in &runs {
+        let mut row = vec![r.policy.name().to_string()];
+        let mut total_jobs = 0u64;
+        let mut total_cont = 0u64;
+        for &s in &ipa.stages {
+            let st = r.summary.per_stage.get(&s).copied().unwrap_or_default();
+            row.push(format!("{:.1}", st.rpc()));
+        }
+        for st in r.summary.per_stage.values() {
+            total_jobs += st.jobs;
+            total_cont += st.containers;
+        }
+        row.push(format!("{:.1}", total_jobs as f64 / total_cont.max(1) as f64));
+        t.row(&row);
+    }
+    t.print();
+
+    section("Fig. 12b", "containers alive over time (10 s bins, sampled)");
+    let mut t = Table::new(&["t (s)", "Bline", "SBatch", "RScale", "BPred", "Fifer"]);
+    let series: Vec<Vec<(f64, usize)>> = runs
+        .iter()
+        .map(|r| r.recorder.containers_over_time(10))
+        .collect();
+    let n = series[0].len();
+    for i in (0..n).step_by(15) {
+        t.row(&[
+            format!("{:.0}", series[0][i].0),
+            format!("{}", series[0][i].1),
+            format!("{}", series[1][i].1),
+            format!("{}", series[2][i].1),
+            format!("{}", series[3][i].1),
+            format!("{}", series[4][i].1),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,30 @@
+//! Fig. 13 — cluster-wide energy, normalized to Bline.
+//!
+//! All three mixes, prototype cluster. Paper shape: Fifer ~31% more
+//! energy-efficient than Bline (heavy mix), ~17% better than RScale, and
+//! within ~4% of SBatch — driven by bin-packing active containers onto
+//! fewer powered nodes.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::run_prototype;
+
+fn main() {
+    section("Fig. 13", "cluster energy normalized to Bline (lower is better)");
+    let mut t = Table::new(&["mix", "Bline", "SBatch", "RScale", "BPred", "Fifer", "Fifer saving"]);
+    for mix in ["Heavy", "Medium", "Light"] {
+        let runs = run_prototype(mix, 1500, 42);
+        let base = runs[0].summary.energy_wh;
+        let fifer = runs[4].summary.energy_wh;
+        t.row(&[
+            mix.to_string(),
+            "1.00".to_string(),
+            format!("{:.2}", runs[1].summary.energy_wh / base),
+            format!("{:.2}", runs[2].summary.energy_wh / base),
+            format!("{:.2}", runs[3].summary.energy_wh / base),
+            format!("{:.2}", fifer / base),
+            format!("{:.1}%", 100.0 * (1.0 - fifer / base)),
+        ]);
+    }
+    t.print();
+    println!("(paper: Fifer ≈ 31% savings vs Bline on the heavy mix)");
+}

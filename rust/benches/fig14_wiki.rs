@@ -1,0 +1,40 @@
+//! Fig. 14 — macro benchmark: Wiki trace, 2500-core simulated cluster.
+//!
+//! All three workload mixes; SLO violations and average containers
+//! normalized to Bline. Paper shape: RScale/BPred spawn up to 3.5× more
+//! containers than Fifer while still violating ~5% more SLOs; Fifer rides
+//! the diurnal pattern via the LSTM.
+
+use fifer::bench::{norm, section, Table};
+use fifer::experiments::{run_macro, TraceKind};
+
+fn main() {
+    // duration bounded for single-core CI; EXPERIMENTS.md records the
+    // long-run numbers (the trace tiles to any duration).
+    let duration = 600;
+    for mix in ["Heavy", "Medium", "Light"] {
+        section(
+            "Fig. 14",
+            &format!("Wiki trace — {mix} mix, {duration} s, 2500 cores"),
+        );
+        let runs = run_macro(TraceKind::Wiki, mix, duration, 42);
+        let base = runs[0].summary.clone();
+        let mut t = Table::new(&[
+            "policy",
+            "SLO viol %",
+            "avg containers",
+            "norm to Bline",
+            "cold starts",
+        ]);
+        for r in &runs {
+            t.row(&[
+                r.policy.name().to_string(),
+                format!("{:.2}", r.summary.slo_violation_pct),
+                format!("{:.0}", r.summary.avg_containers),
+                norm(r.summary.avg_containers, base.avg_containers),
+                format!("{}", r.summary.cold_starts),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,37 @@
+//! Fig. 15 — macro benchmark: WITS trace, 2500-core simulated cluster.
+//!
+//! All three workload mixes. Paper shape: sudden 5× peak-to-median spikes
+//! make reactive RMs over-spawn — Fifer uses 7.7× / 2.7× fewer containers
+//! than BPred / RScale while keeping SLO compliance near Bline's.
+
+use fifer::bench::{norm, section, Table};
+use fifer::experiments::{run_macro, TraceKind};
+
+fn main() {
+    let duration = 900; // covers multiple WITS spikes
+    for mix in ["Heavy", "Medium", "Light"] {
+        section(
+            "Fig. 15",
+            &format!("WITS trace — {mix} mix, {duration} s, 2500 cores"),
+        );
+        let runs = run_macro(TraceKind::Wits, mix, duration, 42);
+        let base = runs[0].summary.clone();
+        let mut t = Table::new(&[
+            "policy",
+            "SLO viol %",
+            "avg containers",
+            "norm to Bline",
+            "cold starts",
+        ]);
+        for r in &runs {
+            t.row(&[
+                r.policy.name().to_string(),
+                format!("{:.2}", r.summary.slo_violation_pct),
+                format!("{:.0}", r.summary.avg_containers),
+                norm(r.summary.avg_containers, base.avg_containers),
+                format!("{}", r.summary.cold_starts),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,48 @@
+//! Fig. 16 — number of cold starts over a 2-hour-scale snapshot.
+//!
+//! Paper shape: Fifer incurs up to 7× / 3.5× fewer cold starts than BPred
+//! on Wiki / WITS, and ~3× fewer than RScale, because proactive spawning
+//! replaces reactive cold spawns.
+
+use fifer::bench::{norm, section, Table};
+use fifer::config::Policy;
+use fifer::experiments::{run_macro, TraceKind};
+
+fn main() {
+    let duration = 900;
+    for kind in [TraceKind::Wiki, TraceKind::Wits] {
+        section(
+            "Fig. 16",
+            &format!("cold starts — {} trace, heavy mix, {duration} s", kind.name()),
+        );
+        let runs = run_macro(kind, "Heavy", duration, 42);
+        let fifer = runs
+            .iter()
+            .find(|r| r.policy == Policy::Fifer)
+            .unwrap()
+            .summary
+            .cold_starts;
+        let mut t = Table::new(&["policy", "cold starts", "vs Fifer"]);
+        for r in &runs {
+            if matches!(r.policy, Policy::SBatch) {
+                continue; // fixed pool: cold starts only at t=0 (as in paper)
+            }
+            t.row(&[
+                r.policy.name().to_string(),
+                format!("{}", r.summary.cold_starts),
+                norm(r.summary.cold_starts as f64, fifer.max(1) as f64),
+            ]);
+        }
+        t.print();
+
+        // time series, coarse
+        let f = runs.iter().find(|r| r.policy == Policy::Fifer).unwrap();
+        let series = f.recorder.coldstarts_over_time(60);
+        let line: Vec<String> = series
+            .iter()
+            .step_by(2)
+            .map(|(t, n)| format!("{}s:{}", t, n))
+            .collect();
+        println!("Fifer cold starts per 60 s: {}", line.join(" "));
+    }
+}

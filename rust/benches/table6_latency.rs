@@ -1,0 +1,35 @@
+//! Table 6 — median and tail (P99) latencies, Wiki & WITS, heavy mix.
+//!
+//! Paper values (ms):
+//! ```text
+//!          Wiki med/tail    WITS med/tail
+//! Bline      233 /  3967      237 /  5807
+//! SBatch     458 / 13349      437 / 17736
+//! RScale     251 / 10245      252 / 12164
+//! BPred      281 /  4240      290 /  5914
+//! Fifer      413 /  4952      354 /  6151
+//! ```
+//! Shape to hold: batching raises medians; SBatch/RScale tails blow up;
+//! Fifer's tail stays near Bline/BPred.
+
+use fifer::bench::{section, Table};
+use fifer::experiments::{run_macro, TraceKind};
+
+fn main() {
+    section("Table 6", "median and tail latency (ms), heavy workload mix");
+    let wiki = run_macro(TraceKind::Wiki, "Heavy", 600, 42);
+    let wits = run_macro(TraceKind::Wits, "Heavy", 900, 42);
+    let mut t = Table::new(&[
+        "policy", "Wiki med", "Wiki tail", "WITS med", "WITS tail",
+    ]);
+    for (a, b) in wiki.iter().zip(&wits) {
+        t.row(&[
+            a.policy.name().to_string(),
+            format!("{:.0}", a.summary.median_ms),
+            format!("{:.0}", a.summary.p99_ms),
+            format!("{:.0}", b.summary.median_ms),
+            format!("{:.0}", b.summary.p99_ms),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,180 @@
+//! Micro-benchmark harness + table printer (criterion substitute).
+//!
+//! Every `rust/benches/*.rs` target is `harness = false` and uses this
+//! module to time closures and print paper-style tables (the same rows the
+//! paper's figures plot). Results can also be dumped as JSON for
+//! EXPERIMENTS.md bookkeeping.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Timing result for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` adaptively: warm up, then run batches until `target_ms` of
+/// samples or `max_iters` is reached. Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> Timing {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let target = std::time::Duration::from_millis(target_ms);
+    let max_iters = 1_000_000u64;
+    let mut iters = 0u64;
+    while start.elapsed() < target && iters < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples_ns),
+        p50_ns: stats::percentile_sorted(&samples_ns, 50.0),
+        p99_ns: stats::percentile_sorted(&samples_ns, 99.0),
+        min_ns: samples_ns.first().copied().unwrap_or(0.0),
+    }
+}
+
+/// Fixed-width table printer for bench output (the "figure" in text form).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(
+            &cells
+                .iter()
+                .map(|c| format!("{c}"))
+                .collect::<Vec<String>>(),
+        );
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let line = |s: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                if i + 1 < ncol {
+                    s.push_str("  ");
+                }
+            }
+            s.push('\n');
+        };
+        line(&mut s, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        s.push_str(&"-".repeat(total));
+        s.push('\n');
+        for row in &self.rows {
+            line(&mut s, row);
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Pretty banner for bench sections, mirroring the paper's figure ids.
+pub fn section(fig: &str, caption: &str) {
+    println!("\n=== {fig} — {caption} ===");
+}
+
+/// Format a normalized value as the paper plots it ("x.xx" of baseline).
+pub fn norm(v: f64, base: f64) -> String {
+    if base == 0.0 {
+        "n/a".to_string()
+    } else {
+        format!("{:.2}", v / base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let t = bench("noop", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(t.iters > 0);
+        assert!(t.mean_ns >= 0.0);
+        assert!(t.p99_ns >= t.p50_ns);
+        assert!(t.p50_ns >= t.min_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["policy", "value"]);
+        t.row(&["Bline".into(), "1.00".into()]);
+        t.row(&["Fifer".into(), "0.20".into()]);
+        let out = t.render();
+        assert!(out.contains("policy"));
+        assert_eq!(out.lines().count(), 4);
+        // columns aligned: both data rows have the same prefix width
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(
+            lines[2].find("1.00").unwrap(),
+            lines[3].find("0.20").unwrap()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn norm_formats() {
+        assert_eq!(norm(2.0, 4.0), "0.50");
+        assert_eq!(norm(1.0, 0.0), "n/a");
+    }
+}

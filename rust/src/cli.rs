@@ -1,0 +1,157 @@
+//! Command-line argument parser (clap substitute).
+//!
+//! Supports `fifer <subcommand> [--flag] [--key value] [--key=value]`
+//! with typed accessors, defaults, and generated help text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name). The first non-flag token
+    /// is the subcommand; everything after is options/positionals.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    a.values.insert(k.to_string(), v[1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap().clone();
+                    a.values.insert(stripped.to_string(), v);
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options are not supported: {tok}");
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects a number, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    /// Render help for a set of subcommands.
+    pub fn render_help(binary: &str, about: &str, commands: &[(&str, &str)]) -> String {
+        let mut s = format!(
+            "{binary} — {about}\n\nUSAGE:\n  {binary} <command> [options]\n\nCOMMANDS:\n"
+        );
+        let w = commands.iter().map(|(c, _)| c.len()).max().unwrap_or(0);
+        for (c, h) in commands {
+            s.push_str(&format!("  {c:<w$}  {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let a = Args::parse(&argv("simulate --trace wits --duration 600")).unwrap();
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("trace"), Some("wits"));
+        assert_eq!(a.u64_or("duration", 0).unwrap(), 600);
+    }
+
+    #[test]
+    fn parses_eq_form_and_flags() {
+        let a = Args::parse(&argv("bench --policy=fifer --verbose")).unwrap();
+        assert_eq!(a.get("policy"), Some("fifer"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positionals_and_defaults() {
+        let a = Args::parse(&argv("run file1 file2 --n 3")).unwrap();
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+        assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = Args::parse(&argv("x --offset -5")).unwrap();
+        assert_eq!(a.get("offset"), Some("-5"));
+    }
+
+    #[test]
+    fn help_rendering() {
+        let h = Args::render_help("fifer", "about", &[("serve", "run"), ("sim", "simulate")]);
+        assert!(h.contains("serve") && h.contains("simulate"));
+    }
+}

@@ -1,0 +1,173 @@
+//! Cold-start latency model (paper §2.2.1 / Fig. 2 substitute).
+//!
+//! The paper characterizes AWS Lambda cold starts for ML inference and
+//! finds they add ~2000–7500 ms on top of execution time, dominated by
+//! application/runtime initialization and image fetch, and that container
+//! spawn (including remote image pull) takes 2–9 s in their prototype
+//! (§6.1.5). We model cold start as three additive components:
+//!
+//! ```text
+//! cold = spawn (pod create)           ~ U[0.5, 1.5] s
+//!      + image pull                   ~ image_mb / pull_bw (± jitter)
+//!      + runtime/framework init       ~ U[0.4, 1.2] s + model-load term
+//! ```
+//!
+//! Calibrated so the catalog's smallest image lands near 2 s and the
+//! largest near 9 s — reproducing the paper's range and, crucially for the
+//! RM comparison, the *cold-start ≫ exec-time* disparity (Fig. 2a).
+
+use crate::model::Microservice;
+use crate::util::rng::Pcg;
+use crate::util::{secs, Micros};
+
+#[derive(Debug, Clone)]
+pub struct ColdStartModel {
+    /// Pod/container creation time bounds (s).
+    pub spawn_min_s: f64,
+    pub spawn_max_s: f64,
+    /// Image pull bandwidth (MB/s) — remote registry (dockerhub-like).
+    pub pull_bw_mbps: f64,
+    /// Multiplicative jitter sigma on pull time (lognormal).
+    pub pull_jitter_sigma: f64,
+    /// Runtime/framework initialization bounds (s).
+    pub init_min_s: f64,
+    pub init_max_s: f64,
+    /// Model-load seconds per MB of image (proxy for model size).
+    pub model_load_s_per_mb: f64,
+    /// Warm-start overhead (scheduling + IPC) in ms.
+    pub warm_overhead_ms: f64,
+}
+
+impl Default for ColdStartModel {
+    fn default() -> Self {
+        ColdStartModel {
+            spawn_min_s: 0.5,
+            spawn_max_s: 1.5,
+            pull_bw_mbps: 400.0,
+            pull_jitter_sigma: 0.15,
+            init_min_s: 0.4,
+            init_max_s: 1.2,
+            model_load_s_per_mb: 0.0025,
+            warm_overhead_ms: 2.0,
+        }
+    }
+}
+
+/// Breakdown of one sampled cold start (for Fig. 2's stacked bars).
+#[derive(Debug, Clone, Copy)]
+pub struct ColdStartSample {
+    pub spawn: Micros,
+    pub pull: Micros,
+    pub init: Micros,
+}
+
+impl ColdStartSample {
+    pub fn total(&self) -> Micros {
+        self.spawn + self.pull + self.init
+    }
+}
+
+impl ColdStartModel {
+    /// Sample a full cold start for a microservice's container image.
+    pub fn sample(&self, ms: &Microservice, rng: &mut Pcg) -> ColdStartSample {
+        let spawn = rng.range(self.spawn_min_s, self.spawn_max_s);
+        let pull = (ms.image_mb / self.pull_bw_mbps)
+            * rng.lognormal(0.0, self.pull_jitter_sigma);
+        let init = rng.range(self.init_min_s, self.init_max_s)
+            + ms.image_mb * self.model_load_s_per_mb;
+        ColdStartSample {
+            spawn: secs(spawn),
+            pull: secs(pull),
+            init: secs(init),
+        }
+    }
+
+    /// Deterministic expected cold-start total — what the RScale policy
+    /// compares the queuing-delay threshold D_f against (C_d, §4.2).
+    pub fn expected_micros(&self, ms: &Microservice) -> Micros {
+        let spawn = (self.spawn_min_s + self.spawn_max_s) / 2.0;
+        let pull = ms.image_mb / self.pull_bw_mbps;
+        let init =
+            (self.init_min_s + self.init_max_s) / 2.0 + ms.image_mb * self.model_load_s_per_mb;
+        secs(spawn + pull + init)
+    }
+
+    /// Warm-start overhead (scheduling to an existing container).
+    pub fn warm_overhead(&self) -> Micros {
+        crate::util::ms(self.warm_overhead_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Catalog;
+    use crate::util::to_secs;
+
+    #[test]
+    fn cold_starts_in_paper_range() {
+        let cat = Catalog::paper();
+        let model = ColdStartModel::default();
+        let mut rng = Pcg::new(1);
+        for ms in &cat.microservices {
+            for _ in 0..50 {
+                let s = model.sample(ms, &mut rng);
+                let total = to_secs(s.total());
+                assert!(
+                    (0.9..=12.0).contains(&total),
+                    "{}: cold start {total}s out of range",
+                    ms.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn big_images_cost_more() {
+        let cat = Catalog::paper();
+        let model = ColdStartModel::default();
+        let hs = &cat.microservices[cat.ms_id("HS").unwrap()];
+        let ner = &cat.microservices[cat.ms_id("NER").unwrap()];
+        assert!(model.expected_micros(hs) > 2 * model.expected_micros(ner));
+        // largest image lands in the upper half of the 2-9s band
+        assert!(to_secs(model.expected_micros(hs)) > 5.0);
+        assert!(to_secs(model.expected_micros(ner)) < 3.0);
+    }
+
+    #[test]
+    fn cold_start_dominates_exec_time() {
+        // The Fig. 2a observation that motivates the whole paper.
+        let cat = Catalog::paper();
+        let model = ColdStartModel::default();
+        for ms in &cat.microservices {
+            let cold_ms = to_secs(model.expected_micros(ms)) * 1000.0;
+            assert!(
+                cold_ms > 10.0 * ms.exec_ms_mean,
+                "{}: cold {cold_ms}ms vs exec {}ms",
+                ms.name,
+                ms.exec_ms_mean
+            );
+        }
+    }
+
+    #[test]
+    fn expected_close_to_sample_mean() {
+        let cat = Catalog::paper();
+        let model = ColdStartModel::default();
+        let imc = &cat.microservices[cat.ms_id("IMC").unwrap()];
+        let mut rng = Pcg::new(9);
+        let n = 2000;
+        let mean: f64 = (0..n)
+            .map(|_| to_secs(model.sample(imc, &mut rng).total()))
+            .sum::<f64>()
+            / n as f64;
+        let expected = to_secs(model.expected_micros(imc));
+        assert!((mean - expected).abs() / expected < 0.05, "{mean} vs {expected}");
+    }
+
+    #[test]
+    fn warm_overhead_small() {
+        let model = ColdStartModel::default();
+        assert!(to_secs(model.warm_overhead()) < 0.01);
+    }
+}

@@ -1,0 +1,366 @@
+//! Configuration system: cluster shape, RM policy knobs, file loading.
+//!
+//! Defaults reproduce the paper's two testbeds:
+//! * [`ClusterConfig::prototype`] — the 80-compute-core Kubernetes cluster
+//!   (5 × dual-socket 16-core nodes per Table 1; one head node).
+//! * [`ClusterConfig::simulation`] — the 2500-core simulated cluster
+//!   (30× the prototype, §5.3).
+//!
+//! Config files use a TOML subset (see [`toml`]); every knob can also be
+//! overridden programmatically — examples/ show both styles.
+
+pub mod toml;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use self::toml::TomlDoc;
+
+/// Cluster shape + power model parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+    /// CPU share per container (paper: 0.5 core).
+    pub cpu_per_container: f64,
+    /// Node idle power draw in watts (sockets powered, no work).
+    pub idle_watts: f64,
+    /// Node peak power draw in watts (all cores busy).
+    pub peak_watts: f64,
+    /// Seconds of complete inactivity after which a node powers off.
+    pub node_off_after_s: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's real-system testbed: 80 compute cores.
+    /// Xeon Gold 6242 (2 sockets × 16 cores): idle ~110 W, peak ~300 W.
+    pub fn prototype() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 5,
+            cores_per_node: 16,
+            cpu_per_container: 0.5,
+            idle_watts: 110.0,
+            peak_watts: 300.0,
+            node_off_after_s: 60.0,
+        }
+    }
+
+    /// The paper's large-scale simulation: ~2500 cores (30× prototype).
+    pub fn simulation() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 78,
+            cores_per_node: 32,
+            cpu_per_container: 0.5,
+            idle_watts: 180.0,
+            peak_watts: 520.0,
+            node_off_after_s: 60.0,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Max containers one node can host.
+    pub fn containers_per_node(&self) -> usize {
+        (self.cores_per_node as f64 / self.cpu_per_container).floor() as usize
+    }
+
+    pub fn max_containers(&self) -> usize {
+        self.nodes * self.containers_per_node()
+    }
+}
+
+/// Which RM framework drives the cluster (paper §5.3 "Metrics and RM
+/// Policies"). `RScale` is Fifer minus prediction (GrandSLAm-like);
+/// `BPred` is Bline plus LSF plus EWMA prediction (Archipelago-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    Bline,
+    SBatch,
+    RScale,
+    BPred,
+    Fifer,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 5] = [
+        Policy::Bline,
+        Policy::SBatch,
+        Policy::RScale,
+        Policy::BPred,
+        Policy::Fifer,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Bline => "Bline",
+            Policy::SBatch => "SBatch",
+            Policy::RScale => "RScale",
+            Policy::BPred => "BPred",
+            Policy::Fifer => "Fifer",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Policy> {
+        Policy::ALL
+            .iter()
+            .copied()
+            .find(|p| p.name().eq_ignore_ascii_case(s))
+            .ok_or_else(|| anyhow!("unknown policy {s:?} (want one of Bline/SBatch/RScale/BPred/Fifer)"))
+    }
+
+    /// Does this RM batch requests (local queues > 1)?
+    pub fn batching(&self) -> bool {
+        matches!(self, Policy::SBatch | Policy::RScale | Policy::Fifer)
+    }
+
+    /// Does this RM scale proactively from a load forecast?
+    pub fn proactive(&self) -> bool {
+        matches!(self, Policy::BPred | Policy::Fifer)
+    }
+
+    /// Does this RM use LSF (least-slack-first) queue ordering?
+    pub fn lsf(&self) -> bool {
+        // Bline/SBatch are FIFO; BPred/RScale/Fifer use LSF (§5.3).
+        matches!(self, Policy::RScale | Policy::BPred | Policy::Fifer)
+    }
+}
+
+/// Slack distribution across stages (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlackPolicy {
+    /// Proportional to stage execution time (Fifer's default).
+    Proportional,
+    /// Equal division across stages (used by SBatch).
+    EqualDivision,
+}
+
+/// RM framework knobs (paper §4 and §5).
+#[derive(Debug, Clone)]
+pub struct RmConfig {
+    pub policy: Policy,
+    pub slack_policy: SlackPolicy,
+    /// Monitoring interval T (paper: 10 s).
+    pub monitor_interval_s: f64,
+    /// Arrival-rate sampling window W_s (paper: 5 s).
+    pub sample_window_s: f64,
+    /// History length fed to predictors (paper: last 100 s).
+    pub history_s: f64,
+    /// Idle-container reclamation timeout (paper: 10 min).
+    pub idle_timeout_s: f64,
+    /// Cap on per-stage batch size (compiled artifact sizes cap at 32).
+    pub max_batch: usize,
+    /// Safety factor on SBatch's fixed pool sizing.
+    pub sbatch_headroom: f64,
+    /// Smoothing factor for the EWMA predictor used by BPred.
+    pub ewma_alpha: f64,
+    /// Cluster-capacity guard: max fraction of total container slots one
+    /// stage may hold. Prevents a transient stage-0 backlog from starving
+    /// downstream stages of the chain (engineering detail on top of the
+    /// paper's Algorithm 1, which assumes an uncapped cluster).
+    pub max_stage_fraction: f64,
+    /// Marginal cost of adding one request to an inference batch:
+    /// exec(B) = exec(1) · (1 + γ·(B−1)). γ=1 is serial execution; the
+    /// default 0.25 matches batched-matmul amortization measured on the
+    /// real PJRT artifacts (see EXPERIMENTS.md §Perf calibration).
+    pub batch_cost_gamma: f64,
+}
+
+impl RmConfig {
+    pub fn paper(policy: Policy) -> RmConfig {
+        RmConfig {
+            policy,
+            slack_policy: if policy == Policy::SBatch {
+                SlackPolicy::EqualDivision
+            } else {
+                SlackPolicy::Proportional
+            },
+            monitor_interval_s: 10.0,
+            sample_window_s: 5.0,
+            history_s: 100.0,
+            idle_timeout_s: 600.0,
+            max_batch: 32,
+            sbatch_headroom: 2.0,
+            ewma_alpha: 0.5,
+            max_stage_fraction: 0.5,
+            batch_cost_gamma: 0.25,
+        }
+    }
+}
+
+/// Top-level config: cluster + RM + experiment knobs.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub cluster: ClusterConfig,
+    pub rm: RmConfig,
+    /// Directory with AOT artifacts (manifest.json etc).
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl SystemConfig {
+    pub fn prototype(policy: Policy) -> SystemConfig {
+        SystemConfig {
+            cluster: ClusterConfig::prototype(),
+            rm: RmConfig::paper(policy),
+            artifacts_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+
+    pub fn simulation(policy: Policy) -> SystemConfig {
+        SystemConfig {
+            cluster: ClusterConfig::simulation(),
+            rm: RmConfig::paper(policy),
+            artifacts_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+
+    /// Load overrides from a TOML-subset file on top of paper defaults.
+    pub fn from_file(path: &Path) -> Result<SystemConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = toml::parse(&text)?;
+        SystemConfig::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<SystemConfig> {
+        let root = doc.get("").cloned().unwrap_or_default();
+        let policy = match root.get("policy") {
+            Some(v) => Policy::from_name(v.as_str()?)?,
+            None => Policy::Fifer,
+        };
+        let mut cfg = SystemConfig::prototype(policy);
+        if let Some(v) = root.get("seed") {
+            cfg.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = root.get("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(c) = doc.get("cluster") {
+            let g = |k: &str, d: f64| -> Result<f64> {
+                c.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
+            };
+            if let Some(v) = c.get("preset") {
+                cfg.cluster = match v.as_str()? {
+                    "prototype" => ClusterConfig::prototype(),
+                    "simulation" => ClusterConfig::simulation(),
+                    other => anyhow::bail!("unknown cluster preset {other:?}"),
+                };
+            }
+            cfg.cluster.nodes = g("nodes", cfg.cluster.nodes as f64)? as usize;
+            cfg.cluster.cores_per_node =
+                g("cores_per_node", cfg.cluster.cores_per_node as f64)? as usize;
+            cfg.cluster.cpu_per_container =
+                g("cpu_per_container", cfg.cluster.cpu_per_container)?;
+            cfg.cluster.idle_watts = g("idle_watts", cfg.cluster.idle_watts)?;
+            cfg.cluster.peak_watts = g("peak_watts", cfg.cluster.peak_watts)?;
+            cfg.cluster.node_off_after_s =
+                g("node_off_after_s", cfg.cluster.node_off_after_s)?;
+        }
+        if let Some(r) = doc.get("rm") {
+            let g = |k: &str, d: f64| -> Result<f64> {
+                r.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
+            };
+            cfg.rm.monitor_interval_s = g("monitor_interval_s", cfg.rm.monitor_interval_s)?;
+            cfg.rm.sample_window_s = g("sample_window_s", cfg.rm.sample_window_s)?;
+            cfg.rm.history_s = g("history_s", cfg.rm.history_s)?;
+            cfg.rm.idle_timeout_s = g("idle_timeout_s", cfg.rm.idle_timeout_s)?;
+            cfg.rm.max_batch = g("max_batch", cfg.rm.max_batch as f64)? as usize;
+            cfg.rm.sbatch_headroom = g("sbatch_headroom", cfg.rm.sbatch_headroom)?;
+            cfg.rm.ewma_alpha = g("ewma_alpha", cfg.rm.ewma_alpha)?;
+            if let Some(v) = r.get("slack_policy") {
+                cfg.rm.slack_policy = match v.as_str()? {
+                    "proportional" => SlackPolicy::Proportional,
+                    "equal" => SlackPolicy::EqualDivision,
+                    other => anyhow::bail!("unknown slack_policy {other:?}"),
+                };
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prototype_matches_paper() {
+        let c = ClusterConfig::prototype();
+        assert_eq!(c.total_cores(), 80);
+        assert_eq!(c.containers_per_node(), 32);
+    }
+
+    #[test]
+    fn simulation_scale() {
+        let c = ClusterConfig::simulation();
+        assert!((2400..=2600).contains(&c.total_cores()), "{}", c.total_cores());
+        // ~30x the prototype, per §5.3
+        assert!(c.total_cores() >= 30 * 80);
+    }
+
+    #[test]
+    fn policy_traits() {
+        assert!(!Policy::Bline.batching() && !Policy::Bline.proactive());
+        assert!(Policy::SBatch.batching() && !Policy::SBatch.proactive());
+        assert!(Policy::RScale.batching() && !Policy::RScale.proactive());
+        assert!(!Policy::BPred.batching() && Policy::BPred.proactive());
+        assert!(Policy::Fifer.batching() && Policy::Fifer.proactive());
+        assert!(Policy::Fifer.lsf() && !Policy::Bline.lsf());
+    }
+
+    #[test]
+    fn policy_from_name() {
+        assert_eq!(Policy::from_name("fifer").unwrap(), Policy::Fifer);
+        assert_eq!(Policy::from_name("BLINE").unwrap(), Policy::Bline);
+        assert!(Policy::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn sbatch_defaults_to_equal_division() {
+        assert_eq!(
+            RmConfig::paper(Policy::SBatch).slack_policy,
+            SlackPolicy::EqualDivision
+        );
+        assert_eq!(
+            RmConfig::paper(Policy::Fifer).slack_policy,
+            SlackPolicy::Proportional
+        );
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = toml::parse(
+            r#"
+policy = "rscale"
+seed = 7
+[cluster]
+preset = "simulation"
+nodes = 10
+[rm]
+idle_timeout_s = 30
+slack_policy = "equal"
+"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.rm.policy, Policy::RScale);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.cluster.nodes, 10);
+        assert_eq!(cfg.cluster.cores_per_node, 32); // from simulation preset
+        assert_eq!(cfg.rm.idle_timeout_s, 30.0);
+        assert_eq!(cfg.rm.slack_policy, SlackPolicy::EqualDivision);
+    }
+
+    #[test]
+    fn from_doc_rejects_bad_values() {
+        let doc = toml::parse("policy = \"zzz\"").unwrap();
+        assert!(SystemConfig::from_doc(&doc).is_err());
+        let doc = toml::parse("[cluster]\npreset = \"zzz\"").unwrap();
+        assert!(SystemConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supports what fifer config files need: `[section]` headers,
+//! `key = value` with string / integer / float / bool / flat-array values,
+//! `#` comments and blank lines. Nested tables and multi-line values are
+//! intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// section -> key -> value
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: unterminated section header", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        doc.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Arr(
+            items
+                .iter()
+                .map(|i| parse_value(i.trim()))
+                .collect::<Result<Vec<_>>>()?,
+        ));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| anyhow!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow!("unbalanced ]"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# cluster shape
+[cluster]
+nodes = 5
+cores_per_node = 16
+name = "prototype"   # inline comment
+off_when_idle = true
+batches = [1, 2, 4]
+"#,
+        )
+        .unwrap();
+        let c = &doc["cluster"];
+        assert_eq!(c["nodes"].as_usize().unwrap(), 5);
+        assert_eq!(c["name"].as_str().unwrap(), "prototype");
+        assert!(c["off_when_idle"].as_bool().unwrap());
+        assert_eq!(
+            c["batches"],
+            TomlValue::Arr(vec![
+                TomlValue::Num(1.0),
+                TomlValue::Num(2.0),
+                TomlValue::Num(4.0)
+            ])
+        );
+    }
+
+    #[test]
+    fn root_section_keys() {
+        let doc = parse("x = 1.5\n[s]\ny = 2").unwrap();
+        assert_eq!(doc[""]["x"].as_f64().unwrap(), 1.5);
+        assert_eq!(doc["s"]["y"].as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = \"x").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let doc = parse("k = 5").unwrap();
+        assert!(doc[""]["k"].as_str().is_err());
+        assert!(doc[""]["k"].as_bool().is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! The Fifer coordinator — the paper's system contribution (§4).
+//!
+//! Submodules:
+//! * [`slack`] — slack estimation/distribution + Eq. 1 batch sizing (§4.1)
+//! * [`queue`] — per-stage global queues, LSF ordering (§4.3)
+//! * [`state`] — container/node state store + greedy bin-packing (§4.4)
+//! * [`scaling`] — reactive (RScale) and proactive scaling math (§4.2/§4.5)
+//!
+//! These are pure, clock-agnostic primitives; the event-driven simulator
+//! (`crate::sim`) and the live serving runtime (`crate::server`) drive the
+//! *same* decision logic with virtual and wall-clock time respectively.
+
+pub mod queue;
+pub mod scaling;
+pub mod slack;
+pub mod state;
+
+use crate::model::{Catalog, ChainId, MsId};
+use crate::util::{ms, Micros};
+
+/// LSF priority key for a job at a given stage: `arrival + SLO − mean
+/// remaining exec` in µs (time-invariant form of "remaining slack";
+/// see [`queue`] docs). Smaller = more urgent.
+pub fn lsf_key(cat: &Catalog, chain: ChainId, stage_idx: usize, arrival: Micros) -> Micros {
+    let c = &cat.chains[chain];
+    let remaining_exec: f64 = c.stages[stage_idx..]
+        .iter()
+        .map(|&s| cat.microservices[s].exec_ms_mean)
+        .sum();
+    (arrival + ms(c.slo_ms)).saturating_sub(ms(remaining_exec))
+}
+
+/// Fraction of arriving jobs that pass through a microservice under a
+/// uniform chain mix (used to split a global load forecast per stage).
+pub fn stage_share(cat: &Catalog, chains: &[ChainId], ms_id: MsId) -> f64 {
+    if chains.is_empty() {
+        return 0.0;
+    }
+    let hits = chains
+        .iter()
+        .filter(|&&c| cat.chains[c].stages.contains(&ms_id))
+        .count();
+    hits as f64 / chains.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lsf_key_orders_by_urgency() {
+        let cat = Catalog::paper();
+        let ipa = cat.chain_id("IPA").unwrap();
+        let df = cat.chain_id("DetectFatigue").unwrap();
+        // same arrival: DetectFatigue has more remaining exec at stage 0
+        // -> smaller key -> scheduled first
+        let k_ipa = lsf_key(&cat, ipa, 0, 1_000_000);
+        let k_df = lsf_key(&cat, df, 0, 1_000_000);
+        assert!(k_df < k_ipa);
+        // later stages have larger keys (less remaining work)
+        assert!(lsf_key(&cat, df, 3, 1_000_000) > k_df);
+        // later arrival -> larger key
+        assert!(lsf_key(&cat, ipa, 0, 2_000_000) > k_ipa);
+    }
+
+    #[test]
+    fn stage_share_counts_chains() {
+        let cat = Catalog::paper();
+        let chains = vec![
+            cat.chain_id("IPA").unwrap(),
+            cat.chain_id("IMG").unwrap(),
+        ];
+        let qa = cat.ms_id("QA").unwrap();
+        let asr = cat.ms_id("ASR").unwrap();
+        let hs = cat.ms_id("HS").unwrap();
+        assert_eq!(stage_share(&cat, &chains, qa), 1.0); // both chains
+        assert_eq!(stage_share(&cat, &chains, asr), 0.5); // IPA only
+        assert_eq!(stage_share(&cat, &chains, hs), 0.0); // neither
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-stage global request queues with LSF or FIFO ordering (§4.3).
+//!
+//! One queue per *microservice* — chains that share a stage share its
+//! queue (the case LSF exists for: queries from different applications
+//! with different remaining slack meet in one queue). Fifer pops the entry
+//! with the least remaining slack; baselines pop FIFO.
+//!
+//! The LSF key is time-invariant: at any instant t, remaining slack =
+//! (arrival + SLO) − t − remaining_exec; the `t` term is common to all
+//! entries, so ordering by `arrival + SLO − remaining_exec` (computed once
+//! at enqueue) is equivalent and keeps the heap stable.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::Micros;
+
+/// One queued (job, stage) awaiting a container slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueEntry {
+    pub job_id: u64,
+    /// LSF priority key in µs (smaller = less slack = first).
+    pub lsf_key: Micros,
+    pub enqueued: Micros,
+    /// FIFO tiebreaker / sequence.
+    pub seq: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    Fifo,
+    LeastSlackFirst,
+}
+
+/// A single stage's global queue.
+#[derive(Debug)]
+pub struct StageQueue {
+    order: Ordering,
+    fifo: VecDeque<QueueEntry>,
+    heap: BinaryHeap<Reverse<(Micros, u64, QueueEntryBits)>>,
+    pushed: u64,
+    popped: u64,
+}
+
+/// BinaryHeap needs Ord; pack the payload alongside the key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct QueueEntryBits {
+    job_id: u64,
+    enqueued: Micros,
+}
+
+impl StageQueue {
+    pub fn new(order: Ordering) -> StageQueue {
+        StageQueue {
+            order,
+            fifo: VecDeque::new(),
+            heap: BinaryHeap::new(),
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    pub fn push(&mut self, e: QueueEntry) {
+        self.pushed += 1;
+        match self.order {
+            Ordering::Fifo => self.fifo.push_back(e),
+            Ordering::LeastSlackFirst => self.heap.push(Reverse((
+                e.lsf_key,
+                e.seq,
+                QueueEntryBits {
+                    job_id: e.job_id,
+                    enqueued: e.enqueued,
+                },
+            ))),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<QueueEntry> {
+        let e = match self.order {
+            Ordering::Fifo => self.fifo.pop_front(),
+            Ordering::LeastSlackFirst => self.heap.pop().map(|Reverse((key, seq, bits))| {
+                QueueEntry {
+                    job_id: bits.job_id,
+                    lsf_key: key,
+                    enqueued: bits.enqueued,
+                    seq,
+                }
+            }),
+        };
+        if e.is_some() {
+            self.popped += 1;
+        }
+        e
+    }
+
+    pub fn len(&self) -> usize {
+        match self.order {
+            Ordering::Fifo => self.fifo.len(),
+            Ordering::LeastSlackFirst => self.heap.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Oldest enqueue time still waiting (for queuing-delay monitoring).
+    pub fn oldest_enqueued(&self) -> Option<Micros> {
+        match self.order {
+            Ordering::Fifo => self.fifo.front().map(|e| e.enqueued),
+            Ordering::LeastSlackFirst => self.heap.iter().map(|Reverse((_, _, b))| b.enqueued).min(),
+        }
+    }
+
+    /// Conservation counters: (pushed, popped). pushed - popped == len.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.pushed, self.popped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(job: u64, key: Micros, seq: u64) -> QueueEntry {
+        QueueEntry {
+            job_id: job,
+            lsf_key: key,
+            enqueued: seq * 10,
+            seq,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = StageQueue::new(Ordering::Fifo);
+        q.push(e(1, 500, 0));
+        q.push(e(2, 100, 1));
+        q.push(e(3, 300, 2));
+        assert_eq!(q.pop().unwrap().job_id, 1);
+        assert_eq!(q.pop().unwrap().job_id, 2);
+        assert_eq!(q.pop().unwrap().job_id, 3);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn lsf_pops_least_slack() {
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        q.push(e(1, 500, 0));
+        q.push(e(2, 100, 1));
+        q.push(e(3, 300, 2));
+        assert_eq!(q.pop().unwrap().job_id, 2);
+        assert_eq!(q.pop().unwrap().job_id, 3);
+        assert_eq!(q.pop().unwrap().job_id, 1);
+    }
+
+    #[test]
+    fn lsf_ties_broken_by_arrival_order() {
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        q.push(e(1, 100, 0));
+        q.push(e(2, 100, 1));
+        q.push(e(3, 100, 2));
+        assert_eq!(q.pop().unwrap().job_id, 1);
+        assert_eq!(q.pop().unwrap().job_id, 2);
+        assert_eq!(q.pop().unwrap().job_id, 3);
+    }
+
+    #[test]
+    fn conservation_counters() {
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        for i in 0..10 {
+            q.push(e(i, i * 7 % 5, i));
+        }
+        for _ in 0..4 {
+            q.pop();
+        }
+        let (pushed, popped) = q.counters();
+        assert_eq!(pushed, 10);
+        assert_eq!(popped, 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn oldest_enqueued() {
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        assert_eq!(q.oldest_enqueued(), None);
+        q.push(e(1, 900, 3)); // enqueued 30
+        q.push(e(2, 100, 1)); // enqueued 10
+        assert_eq!(q.oldest_enqueued(), Some(10));
+        q.pop(); // pops job 2 (least slack) -> oldest now 30
+        assert_eq!(q.oldest_enqueued(), Some(30));
+    }
+}

@@ -1,0 +1,164 @@
+//! Container scaling decisions: reactive (RScale, §4.2) and proactive
+//! (prediction-driven, §4.5 / Algorithm 1).
+
+/// Dynamic reactive scaling (RScale): decide how many containers a stage
+/// needs *right now* given its pending queue.
+///
+/// Paper §4.2: the queuing-delay threshold for stage S is
+/// `D_f = T_d / L` with `T_d = PQ_len · S_r` (time to satisfy all pending
+/// requests) and `L = Σ B_size_i` (requests servable within SLO across the
+/// N live containers). New containers `N_c = PQ_len / B_size` are spawned
+/// only when `D_f > C_d` — i.e. when queuing the backlog on existing
+/// containers would take longer than a cold start would.
+#[derive(Debug, Clone, Copy)]
+pub struct ReactiveDecision {
+    /// Estimated queuing delay D_f in ms.
+    pub d_f_ms: f64,
+    /// Containers to spawn now.
+    pub spawn: usize,
+}
+
+pub fn reactive_scale(
+    pending: usize,
+    batch: usize,
+    s_r_ms: f64,
+    live_containers: usize,
+    cold_start_ms: f64,
+) -> ReactiveDecision {
+    let batch = batch.max(1);
+    if pending == 0 {
+        return ReactiveDecision {
+            d_f_ms: 0.0,
+            spawn: 0,
+        };
+    }
+    let l = (live_containers * batch) as f64;
+    let t_d = pending as f64 * s_r_ms;
+    let d_f = if l > 0.0 { t_d / l } else { f64::INFINITY };
+    let spawn = if d_f > cold_start_ms {
+        // N_c = PQ_len / B_size as a *target* container count; containers
+        // already live (whose slots the backlog is counted against) are
+        // subtracted so repeated monitor ticks don't compound the estimate.
+        let target = (pending as f64 / batch as f64).ceil() as usize;
+        target.saturating_sub(live_containers).max(1)
+    } else {
+        0
+    };
+    ReactiveDecision { d_f_ms: d_f, spawn }
+}
+
+/// Sustainable per-container service rate (req/s) under batched
+/// inference: a container drains `batch` requests per batched pass,
+/// where `exec(B) = exec(1) · (1 + γ·(B−1))` (see RmConfig docs).
+pub fn container_rate(batch: usize, exec_ms: f64, gamma: f64) -> f64 {
+    let b = batch.max(1) as f64;
+    let batch_exec_ms = exec_ms.max(1e-6) * (1.0 + gamma * (b - 1.0));
+    b * 1000.0 / batch_exec_ms
+}
+
+/// Proactive scaling (Algorithm 1b): containers needed so that forecast
+/// load fits the per-stage batched service capacity, minus live ones.
+pub fn proactive_scale(
+    forecast_rate_per_s: f64,
+    batch: usize,
+    exec_ms: f64,
+    gamma: f64,
+    live_containers: usize,
+) -> usize {
+    if forecast_rate_per_s <= 0.0 || exec_ms <= 0.0 {
+        return 0;
+    }
+    let needed = (forecast_rate_per_s / container_rate(batch, exec_ms, gamma)).ceil() as usize;
+    needed.saturating_sub(live_containers)
+}
+
+/// SBatch's fixed pool size (§5.3): sized once from the trace's average
+/// arrival rate with a small headroom factor, never scaled after.
+pub fn sbatch_pool(
+    avg_rate_per_s: f64,
+    batch: usize,
+    exec_ms: f64,
+    gamma: f64,
+    headroom: f64,
+) -> usize {
+    ((avg_rate_per_s / container_rate(batch, exec_ms, gamma)) * headroom)
+        .ceil()
+        .max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_pending_no_spawn() {
+        let d = reactive_scale(0, 4, 100.0, 2, 3000.0);
+        assert_eq!(d.spawn, 0);
+        assert_eq!(d.d_f_ms, 0.0);
+    }
+
+    #[test]
+    fn queue_below_coldstart_threshold_queues() {
+        // 10 pending, 2 containers x batch 4 -> D_f = 10*100/8 = 125ms
+        // cold start 3000ms -> queuing wins, no spawn
+        let d = reactive_scale(10, 4, 100.0, 2, 3000.0);
+        assert!((d.d_f_ms - 125.0).abs() < 1e-9);
+        assert_eq!(d.spawn, 0);
+    }
+
+    #[test]
+    fn large_backlog_spawns() {
+        // 400 pending, 2x4 slots -> D_f = 400*100/8 = 5000ms > 3000ms
+        let d = reactive_scale(400, 4, 100.0, 2, 3000.0);
+        assert_eq!(d.spawn, 98); // target 400/4 = 100, minus 2 live
+    }
+
+    #[test]
+    fn triggered_threshold_spawns_at_least_one() {
+        // D_f over threshold but live already exceeds the naive target
+        let d = reactive_scale(10, 4, 10_000.0, 5, 3000.0);
+        assert!(d.d_f_ms > 3000.0);
+        assert_eq!(d.spawn, 1);
+    }
+
+    #[test]
+    fn zero_containers_always_spawns() {
+        let d = reactive_scale(1, 4, 100.0, 0, 3000.0);
+        assert!(d.d_f_ms.is_infinite());
+        assert_eq!(d.spawn, 1);
+    }
+
+    #[test]
+    fn container_rate_model() {
+        // serial: batch 1 -> 1/exec
+        assert!((container_rate(1, 100.0, 0.25) - 10.0).abs() < 1e-9);
+        // gamma = 1 is serial regardless of batch
+        assert!((container_rate(8, 100.0, 1.0) - 10.0).abs() < 1e-9);
+        // gamma = 0.25, batch 8: exec(8) = 275ms -> 29.1 req/s
+        let r = container_rate(8, 100.0, 0.25);
+        assert!((r - 8.0 * 1000.0 / 275.0).abs() < 1e-9);
+        // batching never reduces throughput
+        assert!(container_rate(32, 100.0, 0.25) > container_rate(1, 100.0, 0.25));
+    }
+
+    #[test]
+    fn proactive_sizing() {
+        // 100 req/s, batch 1, exec 100ms -> 10 req/s/container -> 10
+        assert_eq!(proactive_scale(100.0, 1, 100.0, 0.25, 0), 10);
+        assert_eq!(proactive_scale(100.0, 1, 100.0, 0.25, 7), 3);
+        assert_eq!(proactive_scale(100.0, 1, 100.0, 0.25, 15), 0);
+        assert_eq!(proactive_scale(0.0, 1, 100.0, 0.25, 0), 0);
+        // batching shrinks the pool
+        assert!(
+            proactive_scale(100.0, 8, 100.0, 0.25, 0)
+                < proactive_scale(100.0, 1, 100.0, 0.25, 0)
+        );
+    }
+
+    #[test]
+    fn sbatch_pool_headroom() {
+        // 50 req/s, batch 1, exec 100ms -> 10/s per container -> 5 x1.2 = 6
+        assert_eq!(sbatch_pool(50.0, 1, 100.0, 0.25, 1.2), 6);
+        assert!(sbatch_pool(0.1, 1, 100.0, 0.25, 1.0) >= 1);
+    }
+}

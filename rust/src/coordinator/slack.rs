@@ -1,0 +1,217 @@
+//! Slack estimation, distribution, and batch-size calculation (§3, §4.1).
+//!
+//! * **Slack** of a chain = response-latency SLO minus end-to-end
+//!   execution time (the paper uses the measured Table 4 values, which
+//!   also fold in measured framework overheads; we support both).
+//! * **Distribution** splits chain slack across stages — proportional to
+//!   stage execution time (Fifer) or equal division (SBatch).
+//! * **Batch size** per stage is Eq. 1: `B_size = stage_slack / exec`.
+//!   Queuing at most `B_size` requests back-to-back on one container keeps
+//!   the worst queued request within its stage's slack budget.
+
+use std::collections::HashMap;
+
+use crate::config::{RmConfig, SlackPolicy};
+use crate::model::{Catalog, ChainId, MsId};
+
+/// Per-stage plan derived from the catalog for one workload mix.
+#[derive(Debug, Clone)]
+pub struct SlackPlan {
+    /// (chain, stage_idx) -> allocated slack in ms.
+    pub stage_slack_ms: HashMap<(ChainId, usize), f64>,
+    /// Per microservice: batch size for its containers. Shared stages take
+    /// the *minimum* across chains (conservative: strictest SLO wins).
+    pub batch: HashMap<MsId, usize>,
+    /// Per microservice: per-stage response budget S_r = slack + exec (ms),
+    /// again minimized across sharing chains.
+    pub s_r_ms: HashMap<MsId, f64>,
+    /// Per microservice: mean remaining exec from each chain position is
+    /// needed for LSF keys; this caches mean exec per ms.
+    pub exec_ms: HashMap<MsId, f64>,
+}
+
+/// Distribute a chain's slack across its stages.
+pub fn distribute_slack(
+    cat: &Catalog,
+    chain: ChainId,
+    policy: SlackPolicy,
+    use_table4_slack: bool,
+) -> Vec<f64> {
+    let c = &cat.chains[chain];
+    let total_slack = if use_table4_slack {
+        c.slack_ms
+    } else {
+        (c.slo_ms - c.total_exec_ms(cat)).max(0.0)
+    };
+    let n = c.stages.len();
+    match policy {
+        SlackPolicy::EqualDivision => vec![total_slack / n as f64; n],
+        SlackPolicy::Proportional => {
+            let total_exec: f64 = c.total_exec_ms(cat);
+            c.stages
+                .iter()
+                .map(|&s| total_slack * cat.microservices[s].exec_ms_mean / total_exec)
+                .collect()
+        }
+    }
+}
+
+/// Eq. 1, clamped to [1, max_batch].
+pub fn batch_size(stage_slack_ms: f64, exec_ms: f64, max_batch: usize) -> usize {
+    if exec_ms <= 0.0 {
+        return max_batch.max(1);
+    }
+    ((stage_slack_ms / exec_ms).floor() as usize).clamp(1, max_batch.max(1))
+}
+
+impl SlackPlan {
+    /// Build the plan for the chains of a workload mix.
+    ///
+    /// `batching = false` (Bline/BPred) forces batch size 1 at every stage
+    /// and a per-stage budget equal to the exec time only.
+    pub fn build(cat: &Catalog, chains: &[ChainId], rm: &RmConfig, batching: bool) -> SlackPlan {
+        let mut plan = SlackPlan {
+            stage_slack_ms: HashMap::new(),
+            batch: HashMap::new(),
+            s_r_ms: HashMap::new(),
+            exec_ms: HashMap::new(),
+        };
+        for &cid in chains {
+            let slacks = distribute_slack(cat, cid, rm.slack_policy, true);
+            for (idx, &ms_id) in cat.chains[cid].stages.iter().enumerate() {
+                let exec = cat.microservices[ms_id].exec_ms_mean;
+                plan.exec_ms.insert(ms_id, exec);
+                let sl = if batching { slacks[idx] } else { 0.0 };
+                plan.stage_slack_ms.insert((cid, idx), sl);
+                let b = if batching {
+                    batch_size(sl, exec, rm.max_batch)
+                } else {
+                    1
+                };
+                let s_r = sl + exec;
+                plan.batch
+                    .entry(ms_id)
+                    .and_modify(|e| *e = (*e).min(b))
+                    .or_insert(b);
+                plan.s_r_ms
+                    .entry(ms_id)
+                    .and_modify(|e: &mut f64| *e = e.min(s_r))
+                    .or_insert(s_r);
+            }
+        }
+        plan
+    }
+
+    pub fn batch_for(&self, ms_id: MsId) -> usize {
+        self.batch.get(&ms_id).copied().unwrap_or(1)
+    }
+
+    pub fn s_r_for(&self, ms_id: MsId) -> f64 {
+        self.s_r_ms
+            .get(&ms_id)
+            .copied()
+            .unwrap_or_else(|| self.exec_ms.get(&ms_id).copied().unwrap_or(1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+
+    #[test]
+    fn proportional_sums_to_total() {
+        let cat = Catalog::paper();
+        for cid in 0..cat.chains.len() {
+            let s = distribute_slack(&cat, cid, SlackPolicy::Proportional, true);
+            let total: f64 = s.iter().sum();
+            assert!((total - cat.chains[cid].slack_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn equal_division_uniform() {
+        let cat = Catalog::paper();
+        let cid = cat.chain_id("IPA").unwrap();
+        let s = distribute_slack(&cat, cid, SlackPolicy::EqualDivision, true);
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - s[1]).abs() < 1e-9 && (s[1] - s[2]).abs() < 1e-9);
+        assert!((s.iter().sum::<f64>() - 697.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proportional_tracks_exec_time() {
+        // DetectFatigue: HS (151.2ms) gets the lion's share of 572ms slack
+        let cat = Catalog::paper();
+        let cid = cat.chain_id("DetectFatigue").unwrap();
+        let s = distribute_slack(&cat, cid, SlackPolicy::Proportional, true);
+        assert!(s[0] > 0.75 * 572.0, "{:?}", s);
+    }
+
+    #[test]
+    fn computed_slack_mode() {
+        let cat = Catalog::paper();
+        let cid = cat.chain_id("FaceSecurity").unwrap();
+        let s = distribute_slack(&cat, cid, SlackPolicy::Proportional, false);
+        // SLO 1000 - exec (11.6) = 988.4 total
+        assert!((s.iter().sum::<f64>() - 988.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_size_eq1() {
+        assert_eq!(batch_size(100.0, 10.0, 32), 10);
+        assert_eq!(batch_size(5.0, 10.0, 32), 1); // floor 0 -> clamp 1
+        assert_eq!(batch_size(10_000.0, 0.1, 32), 32); // cap
+        assert_eq!(batch_size(10.0, 0.0, 32), 32); // degenerate exec
+    }
+
+    #[test]
+    fn plan_shared_stage_takes_min_batch() {
+        let cat = Catalog::paper();
+        let rm = RmConfig::paper(Policy::Fifer);
+        // IPA and IMG share NLP and QA with different slacks
+        let chains = vec![
+            cat.chain_id("IPA").unwrap(),
+            cat.chain_id("IMG").unwrap(),
+        ];
+        let plan = SlackPlan::build(&cat, &chains, &rm, true);
+        let qa = cat.ms_id("QA").unwrap();
+        let b_ipa = {
+            let sl = plan.stage_slack_ms[&(chains[0], 2)];
+            batch_size(sl, 56.1, rm.max_batch)
+        };
+        let b_img = {
+            let sl = plan.stage_slack_ms[&(chains[1], 2)];
+            batch_size(sl, 56.1, rm.max_batch)
+        };
+        assert_eq!(plan.batch_for(qa), b_ipa.min(b_img));
+    }
+
+    #[test]
+    fn plan_non_batching_forces_one() {
+        let cat = Catalog::paper();
+        let rm = RmConfig::paper(Policy::Bline);
+        let chains: Vec<ChainId> = (0..cat.chains.len()).collect();
+        let plan = SlackPlan::build(&cat, &chains, &rm, false);
+        for (&ms, &b) in &plan.batch {
+            assert_eq!(b, 1, "ms {ms}");
+            // S_r reduces to exec time
+            assert!((plan.s_r_for(ms) - plan.exec_ms[&ms]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn plan_batch_sizes_sane_for_paper_mixes() {
+        let cat = Catalog::paper();
+        let rm = RmConfig::paper(Policy::Fifer);
+        let mix = cat.mix("Heavy").unwrap().clone();
+        let plan = SlackPlan::build(&cat, &mix.chains, &rm, true);
+        // every stage of the heavy mix gets a batch in [1, 32]
+        for &ms in &cat.mix_stages(&mix) {
+            let b = plan.batch_for(ms);
+            assert!((1..=32).contains(&b), "ms {ms} batch {b}");
+        }
+        // the bottleneck ASR stage gets a meaningful batch (> 1)
+        assert!(plan.batch_for(cat.ms_id("ASR").unwrap()) > 1);
+    }
+}

@@ -1,0 +1,407 @@
+//! Cluster state store: containers, nodes, placement (§4.4, §5.1).
+//!
+//! This is the in-process substitute for the paper's MongoDB statistics
+//! store (container free-slots, lastUsedTime, batch size — §5.1) plus the
+//! Kubernetes scheduler's view of node resources. Two greedy policies live
+//! here:
+//!
+//! * **Container selection** — submit a request to the warm container with
+//!   the *least remaining free slots* (§4.4.1), which drains lightly-loaded
+//!   containers and enables early scale-in.
+//! * **Node selection** — place new containers on the node with the
+//!   *least available cores* that still fits (the paper's modified
+//!   `MostRequestedPriority`, §4.4.2 / §5.1), consolidating for energy.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::model::MsId;
+use crate::util::Micros;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CState {
+    /// Cold-starting; becomes Idle at `ready_at`.
+    Starting,
+    /// Warm, not executing.
+    Idle,
+    /// Executing a request (head of `local`).
+    Busy,
+}
+
+/// One container (Kubernetes pod hosting one microservice instance).
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: u64,
+    pub ms_id: MsId,
+    pub node: usize,
+    /// Local-queue capacity = the stage's batch size (free slots counted
+    /// against `in_flight()`).
+    pub batch_size: usize,
+    /// Queued job ids (head is executing when state == Busy).
+    pub local: VecDeque<u64>,
+    pub state: CState,
+    /// Number of head-of-local-queue jobs in the currently executing batch.
+    pub cur_batch: usize,
+    pub ready_at: Micros,
+    /// Spawn latency (cold-start duration) for delay attribution.
+    pub spawn_latency: Micros,
+    pub started_cold: bool,
+    pub last_used: Micros,
+    pub jobs_executed: u64,
+}
+
+impl Container {
+    /// Jobs currently owned by this container (executing + queued).
+    pub fn in_flight(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.batch_size.saturating_sub(self.in_flight())
+    }
+
+    pub fn is_warm(&self) -> bool {
+        matches!(self.state, CState::Idle | CState::Busy)
+    }
+}
+
+/// One server (VM / bare-metal node).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub total_cores: f64,
+    pub alloc_cores: f64,
+    pub containers: usize,
+}
+
+impl Node {
+    pub fn free_cores(&self) -> f64 {
+        self.total_cores - self.alloc_cores
+    }
+}
+
+/// The state store: all containers + nodes, indexed per stage.
+#[derive(Debug)]
+pub struct StateStore {
+    pub containers: HashMap<u64, Container>,
+    /// Container ids per microservice (the per-stage pool).
+    pub by_stage: HashMap<MsId, Vec<u64>>,
+    pub nodes: Vec<Node>,
+    pub cpu_per_container: f64,
+    next_cid: u64,
+}
+
+impl StateStore {
+    pub fn new(nodes: usize, cores_per_node: usize, cpu_per_container: f64) -> StateStore {
+        StateStore {
+            containers: HashMap::new(),
+            by_stage: HashMap::new(),
+            nodes: (0..nodes)
+                .map(|id| Node {
+                    id,
+                    total_cores: cores_per_node as f64,
+                    alloc_cores: 0.0,
+                    containers: 0,
+                })
+                .collect(),
+            cpu_per_container,
+            next_cid: 1,
+        }
+    }
+
+    /// Greedy node selection: lowest-numbered node with the *least free
+    /// cores* that still fits one container (§4.4.2). None if cluster full.
+    pub fn pick_node(&self) -> Option<usize> {
+        let need = self.cpu_per_container;
+        self.nodes
+            .iter()
+            .filter(|n| n.free_cores() >= need - 1e-9)
+            .min_by(|a, b| {
+                a.free_cores()
+                    .partial_cmp(&b.free_cores())
+                    .unwrap()
+                    .then(a.id.cmp(&b.id))
+            })
+            .map(|n| n.id)
+    }
+
+    /// Spawn a container (Starting until `ready_at`). Returns its id, or
+    /// None when no node has capacity.
+    pub fn spawn(
+        &mut self,
+        ms_id: MsId,
+        batch_size: usize,
+        now: Micros,
+        spawn_latency: Micros,
+        cold: bool,
+    ) -> Option<u64> {
+        let node = self.pick_node()?;
+        let id = self.next_cid;
+        self.next_cid += 1;
+        self.nodes[node].alloc_cores += self.cpu_per_container;
+        self.nodes[node].containers += 1;
+        let ready_at = now + spawn_latency;
+        self.containers.insert(
+            id,
+            Container {
+                id,
+                ms_id,
+                node,
+                batch_size: batch_size.max(1),
+                local: VecDeque::new(),
+                state: if spawn_latency == 0 {
+                    CState::Idle
+                } else {
+                    CState::Starting
+                },
+                cur_batch: 0,
+                ready_at,
+                spawn_latency,
+                started_cold: cold,
+                last_used: now,
+                jobs_executed: 0,
+            },
+        );
+        self.by_stage.entry(ms_id).or_default().push(id);
+        Some(id)
+    }
+
+    /// Remove a container and release its node resources.
+    pub fn remove(&mut self, cid: u64) -> Option<Container> {
+        let c = self.containers.remove(&cid)?;
+        let node = &mut self.nodes[c.node];
+        node.alloc_cores = (node.alloc_cores - self.cpu_per_container).max(0.0);
+        node.containers = node.containers.saturating_sub(1);
+        if let Some(v) = self.by_stage.get_mut(&c.ms_id) {
+            if let Some(pos) = v.iter().position(|&x| x == cid) {
+                v.swap_remove(pos);
+            }
+        }
+        Some(c)
+    }
+
+    /// Greedy container selection (§4.4.1): among warm containers of this
+    /// stage with at least one free slot, pick the one with the least
+    /// remaining free slots; ties prefer containers on the *most packed*
+    /// node. Work funnels onto crowded nodes, so containers on sparse
+    /// nodes idle out first and their nodes can power off — the
+    /// consolidation that drives the paper's Fig. 13 energy savings.
+    pub fn pick_container(&self, ms_id: MsId) -> Option<u64> {
+        let ids = self.by_stage.get(&ms_id)?;
+        ids.iter()
+            .filter_map(|&id| {
+                let c = &self.containers[&id];
+                (c.is_warm() && c.free_slots() > 0).then_some((
+                    c.free_slots(),
+                    std::cmp::Reverse(self.nodes[c.node].containers),
+                    id,
+                ))
+            })
+            .min()
+            .map(|(_, _, id)| id)
+    }
+
+    /// Total free slots across warm containers of a stage.
+    pub fn warm_free_slots(&self, ms_id: MsId) -> usize {
+        self.by_stage
+            .get(&ms_id)
+            .map(|ids| {
+                ids.iter()
+                    .map(|id| {
+                        let c = &self.containers[id];
+                        if c.is_warm() {
+                            c.free_slots()
+                        } else {
+                            0
+                        }
+                    })
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Slots that will come online from still-starting containers.
+    pub fn starting_slots(&self, ms_id: MsId) -> usize {
+        self.by_stage
+            .get(&ms_id)
+            .map(|ids| {
+                ids.iter()
+                    .map(|id| {
+                        let c = &self.containers[id];
+                        if c.state == CState::Starting {
+                            c.batch_size
+                        } else {
+                            0
+                        }
+                    })
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Live container count for a stage (warm + starting).
+    pub fn stage_containers(&self, ms_id: MsId) -> usize {
+        self.by_stage.get(&ms_id).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Idle containers of a stage unused since before `cutoff`.
+    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> Vec<u64> {
+        self.by_stage
+            .get(&ms_id)
+            .map(|ids| {
+                ids.iter()
+                    .filter(|&&id| {
+                        let c = &self.containers[&id];
+                        c.state == CState::Idle && c.local.is_empty() && c.last_used < cutoff
+                    })
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Globally least-recently-used idle container (any stage). Used for
+    /// eviction when the cluster is full but a stage with pending work has
+    /// no capacity — the same pressure-driven reclaim a real cluster
+    /// scheduler performs on idle pods.
+    pub fn lru_idle(&self) -> Option<u64> {
+        self.lru_idle_since(Micros::MAX)
+    }
+
+    /// LRU idle container last used before `cutoff` (grace-period variant:
+    /// only containers idle "long enough" are eviction victims).
+    pub fn lru_idle_since(&self, cutoff: Micros) -> Option<u64> {
+        self.containers
+            .values()
+            .filter(|c| c.state == CState::Idle && c.local.is_empty() && c.last_used < cutoff)
+            .min_by_key(|c| (c.last_used, c.id))
+            .map(|c| c.id)
+    }
+
+    /// (busy_cores, alloc_cores) per node — feeds the energy model.
+    pub fn node_loads(&self) -> Vec<(f64, f64)> {
+        let mut loads = vec![(0.0f64, 0.0f64); self.nodes.len()];
+        for c in self.containers.values() {
+            loads[c.node].1 += self.cpu_per_container;
+            if c.state == CState::Busy {
+                loads[c.node].0 += self.cpu_per_container;
+            }
+        }
+        loads
+    }
+
+    /// Total containers alive.
+    pub fn total_containers(&self) -> usize {
+        self.containers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> StateStore {
+        StateStore::new(2, 2, 0.5) // 2 nodes x 2 cores, 4 containers/node
+    }
+
+    #[test]
+    fn spawn_places_greedily() {
+        let mut s = store();
+        // first container goes to node 0 (tie -> lowest id)
+        let a = s.spawn(0, 4, 0, 1000, true).unwrap();
+        assert_eq!(s.containers[&a].node, 0);
+        // node 0 now has less free capacity -> next goes there too
+        let b = s.spawn(0, 4, 0, 1000, true).unwrap();
+        assert_eq!(s.containers[&b].node, 0);
+    }
+
+    #[test]
+    fn cluster_capacity_enforced() {
+        let mut s = store();
+        let mut spawned = 0;
+        while s.spawn(0, 1, 0, 0, false).is_some() {
+            spawned += 1;
+        }
+        assert_eq!(spawned, 8); // 2 nodes * 2 cores / 0.5
+        assert!(s.pick_node().is_none());
+        // removing frees capacity
+        let any = *s.containers.keys().next().unwrap();
+        s.remove(any);
+        assert!(s.pick_node().is_some());
+    }
+
+    #[test]
+    fn pick_container_least_free_slots() {
+        let mut s = store();
+        let a = s.spawn(3, 4, 0, 0, false).unwrap();
+        let b = s.spawn(3, 4, 0, 0, false).unwrap();
+        s.containers.get_mut(&a).unwrap().local.push_back(101);
+        s.containers.get_mut(&a).unwrap().local.push_back(102);
+        s.containers.get_mut(&b).unwrap().local.push_back(103);
+        // a has 2 free, b has 3 free -> pick a
+        assert_eq!(s.pick_container(3), Some(a));
+        // fill a completely -> pick b
+        let ca = s.containers.get_mut(&a).unwrap();
+        ca.local.push_back(104);
+        ca.local.push_back(105);
+        assert_eq!(s.pick_container(3), Some(b));
+    }
+
+    #[test]
+    fn starting_containers_not_pickable() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 5_000_000, true).unwrap();
+        assert_eq!(s.containers[&a].state, CState::Starting);
+        assert_eq!(s.pick_container(1), None);
+        assert_eq!(s.warm_free_slots(1), 0);
+        assert_eq!(s.starting_slots(1), 2);
+        // warm it up
+        s.containers.get_mut(&a).unwrap().state = CState::Idle;
+        assert_eq!(s.pick_container(1), Some(a));
+        assert_eq!(s.warm_free_slots(1), 2);
+    }
+
+    #[test]
+    fn zero_latency_spawn_is_warm() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 100, 0, false).unwrap();
+        assert_eq!(s.containers[&a].state, CState::Idle);
+    }
+
+    #[test]
+    fn idle_reclaim_candidates() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 0, false).unwrap();
+        let b = s.spawn(1, 2, 0, 0, false).unwrap();
+        s.containers.get_mut(&a).unwrap().last_used = 100;
+        s.containers.get_mut(&b).unwrap().last_used = 900;
+        let idle = s.idle_since(1, 500);
+        assert_eq!(idle, vec![a]);
+        // busy containers are never reclaimed
+        s.containers.get_mut(&a).unwrap().state = CState::Busy;
+        assert!(s.idle_since(1, 500).is_empty());
+    }
+
+    #[test]
+    fn node_loads_track_busy() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 0, false).unwrap();
+        let _b = s.spawn(1, 2, 0, 0, false).unwrap();
+        s.containers.get_mut(&a).unwrap().state = CState::Busy;
+        let loads = s.node_loads();
+        assert_eq!(loads[0], (0.5, 1.0));
+        assert_eq!(loads[1], (0.0, 0.0));
+    }
+
+    #[test]
+    fn remove_cleans_indexes() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 0, false).unwrap();
+        assert_eq!(s.stage_containers(1), 1);
+        let c = s.remove(a).unwrap();
+        assert_eq!(c.id, a);
+        assert_eq!(s.stage_containers(1), 0);
+        assert_eq!(s.nodes[0].containers, 0);
+        assert_eq!(s.nodes[0].alloc_cores, 0.0);
+        assert!(s.remove(a).is_none());
+    }
+}

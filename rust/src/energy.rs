@@ -1,0 +1,209 @@
+//! Cluster energy model (Intel Power Gadget substitute, paper §5.3/§6.1.4).
+//!
+//! The paper's energy win comes from *consolidation*: greedy bin-packing
+//! keeps active containers on few nodes, so the remaining nodes go fully
+//! idle and can be powered down. We model node power with the standard
+//! linear form
+//!
+//! ```text
+//! P(node) = 0                                   if powered off
+//!         = P_idle + (P_peak - P_idle) · u      otherwise
+//! ```
+//!
+//! where `u` is the busy-core fraction, and integrate over time as the
+//! simulator/server transitions utilization levels. A node powers off after
+//! `node_off_after_s` with zero allocated containers, and pays nothing
+//! while off (power-on is folded into container cold-start spawn time).
+
+use crate::config::ClusterConfig;
+use crate::util::{to_secs, Micros};
+
+/// Per-node energy integrator.
+#[derive(Debug, Clone)]
+pub struct NodeEnergy {
+    /// Wh accumulated so far.
+    energy_wh: f64,
+    /// Time of the last state transition.
+    last_t: Micros,
+    /// Busy cores at the current level (actively executing containers × share).
+    busy_cores: f64,
+    /// Allocated cores (warm containers × share) — keeps the node on.
+    alloc_cores: f64,
+    /// Time since which the node has had zero allocation (None = active).
+    idle_since: Option<Micros>,
+    powered: bool,
+}
+
+impl NodeEnergy {
+    pub fn new() -> NodeEnergy {
+        NodeEnergy {
+            energy_wh: 0.0,
+            last_t: 0,
+            busy_cores: 0.0,
+            alloc_cores: 0.0,
+            idle_since: Some(0),
+            powered: false, // nodes start powered off until first placement
+        }
+    }
+
+    fn power_watts(&self, cfg: &ClusterConfig) -> f64 {
+        if !self.powered {
+            return 0.0;
+        }
+        let u = (self.busy_cores / cfg.cores_per_node as f64).clamp(0.0, 1.0);
+        cfg.idle_watts + (cfg.peak_watts - cfg.idle_watts) * u
+    }
+
+    /// Integrate energy up to `now`, applying power-off if the idle window
+    /// has elapsed, then record the new utilization level.
+    pub fn update(&mut self, now: Micros, busy_cores: f64, alloc_cores: f64, cfg: &ClusterConfig) {
+        debug_assert!(now >= self.last_t);
+        let off_after = crate::util::secs(cfg.node_off_after_s);
+        // Did a power-off boundary fall inside [last_t, now]?
+        if self.powered {
+            if let Some(idle0) = self.idle_since {
+                let off_at = idle0.saturating_add(off_after);
+                if off_at < now {
+                    // integrate idle power until off_at, nothing after
+                    let dt_h = to_secs(off_at.saturating_sub(self.last_t)) / 3600.0;
+                    self.energy_wh += self.power_watts(cfg) * dt_h;
+                    self.powered = false;
+                    self.last_t = off_at;
+                }
+            }
+        }
+        let dt_h = to_secs(now.saturating_sub(self.last_t)) / 3600.0;
+        self.energy_wh += self.power_watts(cfg) * dt_h;
+        self.last_t = now;
+        self.busy_cores = busy_cores;
+        self.alloc_cores = alloc_cores;
+        if alloc_cores > 0.0 {
+            self.powered = true;
+            self.idle_since = None;
+        } else if self.idle_since.is_none() {
+            self.idle_since = Some(now);
+        }
+    }
+
+    pub fn energy_wh(&self) -> f64 {
+        self.energy_wh
+    }
+
+    pub fn is_powered(&self) -> bool {
+        self.powered
+    }
+}
+
+impl Default for NodeEnergy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Whole-cluster energy tracking.
+#[derive(Debug, Clone)]
+pub struct ClusterEnergy {
+    pub nodes: Vec<NodeEnergy>,
+}
+
+impl ClusterEnergy {
+    pub fn new(n: usize) -> ClusterEnergy {
+        ClusterEnergy {
+            nodes: (0..n).map(|_| NodeEnergy::new()).collect(),
+        }
+    }
+
+    pub fn total_wh(&self) -> f64 {
+        self.nodes.iter().map(|n| n.energy_wh()).sum()
+    }
+
+    pub fn powered_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_powered()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::secs;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 1,
+            cores_per_node: 10,
+            cpu_per_container: 0.5,
+            idle_watts: 100.0,
+            peak_watts: 300.0,
+            node_off_after_s: 60.0,
+        }
+    }
+
+    #[test]
+    fn off_node_consumes_nothing() {
+        let mut n = NodeEnergy::new();
+        n.update(secs(3600.0), 0.0, 0.0, &cfg());
+        assert_eq!(n.energy_wh(), 0.0);
+        assert!(!n.is_powered());
+    }
+
+    #[test]
+    fn idle_power_integrates() {
+        let mut n = NodeEnergy::new();
+        n.update(0, 0.0, 1.0, &cfg()); // node on, fully idle
+        n.update(secs(3600.0), 0.0, 1.0, &cfg());
+        assert!((n.energy_wh() - 100.0).abs() < 1e-6, "{}", n.energy_wh());
+    }
+
+    #[test]
+    fn busy_power_scales_linearly() {
+        let mut n = NodeEnergy::new();
+        n.update(0, 5.0, 5.0, &cfg()); // 50% busy
+        n.update(secs(3600.0), 5.0, 5.0, &cfg());
+        assert!((n.energy_wh() - 200.0).abs() < 1e-6, "{}", n.energy_wh());
+    }
+
+    #[test]
+    fn full_load_hits_peak() {
+        let mut n = NodeEnergy::new();
+        n.update(0, 10.0, 10.0, &cfg());
+        n.update(secs(1800.0), 10.0, 10.0, &cfg());
+        assert!((n.energy_wh() - 150.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn powers_off_after_idle_window() {
+        let mut n = NodeEnergy::new();
+        n.update(0, 0.0, 1.0, &cfg()); // on
+        n.update(secs(100.0), 0.0, 0.0, &cfg()); // deallocated at t=100
+        // 2 hours later: only 100s (until t=100) + 60s idle window at 100W
+        n.update(secs(7300.0), 0.0, 0.0, &cfg());
+        let expected = 100.0 * (160.0 / 3600.0);
+        assert!((n.energy_wh() - expected).abs() < 1e-3, "{}", n.energy_wh());
+        assert!(!n.is_powered());
+    }
+
+    #[test]
+    fn reallocation_cancels_power_off() {
+        let mut n = NodeEnergy::new();
+        n.update(0, 0.0, 1.0, &cfg());
+        n.update(secs(30.0), 0.0, 0.0, &cfg()); // idle at t=30
+        n.update(secs(50.0), 0.0, 2.0, &cfg()); // reallocated before off
+        n.update(secs(3650.0), 0.0, 2.0, &cfg());
+        assert!(n.is_powered());
+        // continuously idle-powered for the whole 3650 s
+        let expected = 100.0 * 3650.0 / 3600.0;
+        assert!((n.energy_wh() - expected).abs() < 1e-3, "{}", n.energy_wh());
+    }
+
+    #[test]
+    fn cluster_rollup() {
+        let c = cfg();
+        let mut ce = ClusterEnergy::new(3);
+        for n in &mut ce.nodes {
+            n.update(0, 0.0, 1.0, &c);
+            n.update(secs(3600.0), 0.0, 1.0, &c);
+        }
+        assert!((ce.total_wh() - 300.0).abs() < 1e-6);
+        assert_eq!(ce.powered_nodes(), 3);
+    }
+}

@@ -1,0 +1,47 @@
+//! # Fifer
+//!
+//! A reproduction of *"Fifer: Tackling Underutilization in the Serverless
+//! Era"* (Gunasekaran et al., Middleware 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Fifer is a stage-aware resource-management (RM) framework for serverless
+//! *function chains*: sequences of short-lived ML microservices with a
+//! shared end-to-end SLO. The core ideas reproduced here:
+//!
+//! * **Slack-aware request batching** — the gap between a chain's execution
+//!   time and its SLO ("slack") is distributed across stages proportionally
+//!   to stage execution time; the per-stage batch size is
+//!   `B_size = stage_slack / stage_exec_time` (paper Eq. 1).
+//! * **Stage-aware reactive scaling (RScale)** — per-stage queuing-delay
+//!   monitoring spawns containers only when the queuing delay exceeds the
+//!   cold-start delay.
+//! * **Proactive scaling** — an LSTM load predictor (trained offline in JAX,
+//!   executed via an AOT-compiled XLA artifact) forecasts arrivals so
+//!   containers are spawned *before* the load hits, hiding cold starts.
+//! * **Greedy bin-packing** — least-free-slots container selection and
+//!   least-available-resources node selection consolidate load onto few
+//!   servers for energy savings.
+//!
+//! The crate contains both a **live serving runtime** (real batched ML
+//! inference through PJRT-compiled XLA artifacts; Python never on the
+//! request path) and a **high-fidelity event-driven cluster simulator**
+//! used for the paper's large-scale trace-driven experiments.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coldstart;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod predictor;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,210 @@
+//! `fifer` — CLI for the Fifer serverless function-chain RM framework.
+//!
+//! Subcommands map onto the paper's evaluation (DESIGN.md §4):
+//!
+//! ```text
+//! fifer serve      live serving: real PJRT batched inference (needs artifacts)
+//! fifer simulate   event-driven cluster simulation of one policy/mix/trace
+//! fifer compare    run all five RMs and print the Fig. 8-style table
+//! fifer predict    score the Fig. 6 predictor zoo on a trace
+//! fifer coldstart  print the Fig. 2 cold/warm characterization
+//! fifer stages     print the Fig. 3 per-stage breakdown
+//! ```
+
+use anyhow::Result;
+use fifer::bench::Table;
+use fifer::cli::Args;
+use fifer::config::Policy;
+use fifer::experiments::{self, TraceKind};
+use fifer::server::{serve, ServeParams};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn trace_kind(name: &str) -> Result<TraceKind> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "poisson" => TraceKind::Poisson,
+        "wiki" => TraceKind::Wiki,
+        "wits" => TraceKind::Wits,
+        other => anyhow::bail!("unknown trace {other:?} (poisson|wiki|wits)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "predict" => cmd_predict(&args),
+        "coldstart" => cmd_coldstart(&args),
+        "stages" => cmd_stages(&args),
+        _ => {
+            print!(
+                "{}",
+                Args::render_help(
+                    "fifer",
+                    "stage-aware serverless function-chain resource manager \
+                     (Fifer, Middleware'20 reproduction)",
+                    &[
+                        ("serve", "live serving with real PJRT batched inference"),
+                        ("simulate", "event-driven cluster simulation (one policy)"),
+                        ("compare", "all five RMs side by side (Fig. 8 style)"),
+                        ("predict", "score load predictors on a trace (Fig. 6)"),
+                        ("coldstart", "cold/warm start characterization (Fig. 2)"),
+                        ("stages", "per-stage execution breakdown (Fig. 3)"),
+                    ]
+                )
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut p = ServeParams::quick(
+        args.f64_or("rate", 20.0)?,
+        args.f64_or("duration", 10.0)?,
+    );
+    p.executors = args.usize_or("executors", 2)?;
+    p.batching = !args.flag("no-batching");
+    p.cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
+    println!(
+        "live serve: rate={} req/s, {}s, batching={}",
+        p.rate, p.duration_s, p.batching
+    );
+    let r = serve(p)?;
+    println!(
+        "jobs={} throughput={:.1} req/s median={:.1}ms p99={:.1}ms \
+         slo-violations={:.2}% batches={} avg-batch={:.2} cold-compiles={}",
+        r.jobs,
+        r.throughput_rps,
+        r.median_ms,
+        r.p99_ms,
+        r.slo_violation_pct,
+        r.batches,
+        r.avg_batch,
+        r.cold_compiles
+    );
+    let mut t = Table::new(&["stage", "mean batch exec (ms)"]);
+    let mut rows: Vec<_> = r.stage_exec_ms.iter().collect();
+    rows.sort_by_key(|(name, _)| **name);
+    for (name, ms) in rows {
+        t.row(&[name.to_string(), format!("{ms:.2}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let policy = Policy::from_name(&args.str_or("policy", "fifer"))?;
+    let kind = trace_kind(&args.str_or("trace", "poisson"))?;
+    let mix = args.str_or("mix", "Heavy");
+    let duration = args.usize_or("duration", 900)?;
+    let prototype = !args.flag("large");
+    let seed = args.u64_or("seed", 42)?;
+    let run = experiments::run_policy(policy, &mix, kind, duration, prototype, seed);
+    let s = &run.summary;
+    println!(
+        "{} on {}/{} ({}s, {} cluster):",
+        policy.name(),
+        kind.name(),
+        mix,
+        duration,
+        if prototype { "prototype" } else { "2500-core" }
+    );
+    println!(
+        "  jobs={} slo-violations={:.2}% median={:.0}ms p95={:.0}ms p99={:.0}ms",
+        s.jobs, s.slo_violation_pct, s.median_ms, s.p95_ms, s.p99_ms
+    );
+    println!(
+        "  avg-containers={:.1} spawned={} cold-starts={} energy={:.1}Wh",
+        s.avg_containers, s.total_spawned, s.cold_starts, s.energy_wh
+    );
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let kind = trace_kind(&args.str_or("trace", "poisson"))?;
+    let mix = args.str_or("mix", "Heavy");
+    let duration = args.usize_or("duration", 900)?;
+    let prototype = !args.flag("large");
+    let seed = args.u64_or("seed", 42)?;
+    let runs: Vec<_> = Policy::ALL
+        .iter()
+        .map(|&p| experiments::run_policy(p, &mix, kind, duration, prototype, seed))
+        .collect();
+    let base = runs[0].summary.clone(); // Bline
+    let mut t = Table::new(&[
+        "policy", "viol%", "avg cont", "cont/Bline", "median ms", "p99 ms", "cold", "energy Wh",
+    ]);
+    for r in &runs {
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.2}", r.summary.slo_violation_pct),
+            format!("{:.1}", r.summary.avg_containers),
+            fifer::bench::norm(r.summary.avg_containers, base.avg_containers),
+            format!("{:.0}", r.summary.median_ms),
+            format!("{:.0}", r.summary.p99_ms),
+            format!("{}", r.summary.cold_starts),
+            format!("{:.1}", r.summary.energy_wh),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let art = args.str_or("artifacts", "artifacts");
+    let results = experiments::fig6_predictors(&art, 0.15);
+    let mut t = Table::new(&["model", "RMSE (req/s)", "latency (µs)", "accuracy %"]);
+    for r in &results {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.1}", r.rmse),
+            format!("{:.1}", r.latency_us),
+            format!("{:.1}", r.accuracy_pct),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_coldstart(args: &Args) -> Result<()> {
+    let samples = args.usize_or("samples", 100)?;
+    let rows = experiments::fig2_coldstart(samples, 1);
+    let mut t = Table::new(&[
+        "model", "exec ms", "spawn ms", "pull ms", "init ms", "cold total", "warm total",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.1}", r.exec_ms),
+            format!("{:.0}", r.spawn_ms),
+            format!("{:.0}", r.pull_ms),
+            format!("{:.0}", r.init_ms),
+            format!("{:.0}", r.cold_total_ms),
+            format!("{:.1}", r.warm_total_ms),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_stages(_args: &Args) -> Result<()> {
+    for b in experiments::fig3a_breakdown() {
+        println!("{}:", b.chain);
+        for (name, exec, pct) in &b.stages {
+            println!("  {name:<6} {exec:>7.2} ms  {pct:>5.1}%");
+        }
+    }
+    println!("\nexecution-time variation (100 runs):");
+    for (name, mean, std) in experiments::fig3b_variation(100, 7) {
+        println!("  {name:<6} mean {mean:>7.2} ms  std {std:>5.2} ms");
+    }
+    Ok(())
+}

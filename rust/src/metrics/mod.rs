@@ -1,0 +1,475 @@
+//! Metrics: per-request timelines, container accounting, summaries.
+//!
+//! Everything the paper's evaluation reports is computed here (§5.3):
+//! (i) % SLO violations, (ii) average containers spawned, (iii) median and
+//! P99 tail latency with its breakdown (exec / cold-start / batching),
+//! (iv) container utilization as requests-per-container (RPC),
+//! (v) cluster energy — plus the time series for Figs. 10/12/16.
+
+use std::collections::HashMap;
+
+use crate::model::{Catalog, ChainId, MsId};
+use crate::util::{stats, to_ms, Micros, MICROS_PER_S};
+
+/// Timeline of one stage of one job.
+#[derive(Debug, Clone, Copy)]
+pub struct StageRecord {
+    pub ms_id: MsId,
+    /// When the request entered the stage's global queue.
+    pub enqueued: Micros,
+    /// When execution began in a container.
+    pub exec_start: Micros,
+    /// When execution finished.
+    pub exec_end: Micros,
+    /// Portion of the wait caused by a container cold start.
+    pub cold_wait: Micros,
+}
+
+impl StageRecord {
+    pub fn queue_wait(&self) -> Micros {
+        self.exec_start.saturating_sub(self.enqueued)
+    }
+
+    pub fn exec(&self) -> Micros {
+        self.exec_end.saturating_sub(self.exec_start)
+    }
+
+    /// Wait not attributable to cold start = batching/queuing delay.
+    pub fn batch_wait(&self) -> Micros {
+        self.queue_wait().saturating_sub(self.cold_wait)
+    }
+}
+
+/// Timeline of one job (one request through a whole chain).
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub chain: ChainId,
+    pub arrival: Micros,
+    pub completion: Micros,
+    pub stages: Vec<StageRecord>,
+}
+
+impl JobRecord {
+    pub fn response(&self) -> Micros {
+        self.completion.saturating_sub(self.arrival)
+    }
+
+    pub fn exec_total(&self) -> Micros {
+        self.stages.iter().map(|s| s.exec()).sum()
+    }
+
+    pub fn cold_total(&self) -> Micros {
+        self.stages.iter().map(|s| s.cold_wait).sum()
+    }
+
+    pub fn batch_total(&self) -> Micros {
+        self.stages.iter().map(|s| s.batch_wait()).sum()
+    }
+}
+
+/// Per-container usage record (for RPC / Fig. 12a).
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerRecord {
+    pub ms_id: MsId,
+    pub spawned_at: Micros,
+    pub retired_at: Option<Micros>,
+    pub jobs_executed: u64,
+    pub was_cold: bool,
+}
+
+/// Event log + aggregation for one run.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub jobs: Vec<JobRecord>,
+    pub containers: Vec<ContainerRecord>,
+    container_index: HashMap<u64, usize>,
+    pub cold_starts: u64,
+    pub energy_wh: f64,
+    /// Cumulative cluster energy sampled over time (µs, Wh) — lets
+    /// summaries exclude the warm-up transient consistently.
+    pub energy_series: Vec<(Micros, f64)>,
+    /// Wall-clock (sim) duration of the run.
+    pub horizon: Micros,
+    /// Per-scheduling-decision latencies (µs of *host* time), §6.1.5.
+    pub decision_ns: Vec<u64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn job(&mut self, rec: JobRecord) {
+        self.jobs.push(rec);
+    }
+
+    pub fn container_spawned(&mut self, cid: u64, ms_id: MsId, t: Micros, cold: bool) {
+        if cold {
+            self.cold_starts += 1;
+        }
+        self.container_index.insert(cid, self.containers.len());
+        self.containers.push(ContainerRecord {
+            ms_id,
+            spawned_at: t,
+            retired_at: None,
+            jobs_executed: 0,
+            was_cold: cold,
+        });
+    }
+
+    pub fn container_executed(&mut self, cid: u64, jobs: u64) {
+        if let Some(&i) = self.container_index.get(&cid) {
+            self.containers[i].jobs_executed += jobs;
+        }
+    }
+
+    pub fn container_retired(&mut self, cid: u64, t: Micros) {
+        if let Some(&i) = self.container_index.get(&cid) {
+            self.containers[i].retired_at = Some(t);
+        }
+    }
+
+    /// Containers alive at each `bin_s`-second boundary (Fig. 12b).
+    pub fn containers_over_time(&self, bin_s: u64) -> Vec<(f64, usize)> {
+        if self.horizon == 0 {
+            return Vec::new();
+        }
+        let bins = (self.horizon / (bin_s * MICROS_PER_S)) as usize + 1;
+        let mut out = Vec::with_capacity(bins);
+        for b in 0..bins {
+            let t = b as u64 * bin_s * MICROS_PER_S;
+            let alive = self
+                .containers
+                .iter()
+                .filter(|c| c.spawned_at <= t && c.retired_at.map(|r| r > t).unwrap_or(true))
+                .count();
+            out.push((t as f64 / MICROS_PER_S as f64, alive));
+        }
+        out
+    }
+
+    /// Time-averaged number of live containers (the paper's "average
+    /// number of containers spawned" metric).
+    pub fn avg_containers(&self) -> f64 {
+        self.avg_containers_after(0)
+    }
+
+    /// Time-averaged live containers over [from, horizon].
+    pub fn avg_containers_after(&self, from: Micros) -> f64 {
+        if self.horizon <= from {
+            return 0.0;
+        }
+        let mut area = 0.0f64;
+        for c in &self.containers {
+            let start = c.spawned_at.max(from);
+            let end = c.retired_at.unwrap_or(self.horizon).min(self.horizon);
+            area += end.saturating_sub(start) as f64;
+        }
+        area / (self.horizon - from) as f64
+    }
+
+    /// Cold starts binned over time (Fig. 16).
+    pub fn coldstarts_over_time(&self, bin_s: u64) -> Vec<(f64, u64)> {
+        if self.horizon == 0 {
+            return Vec::new();
+        }
+        let nbins = (self.horizon / (bin_s * MICROS_PER_S)) as usize + 1;
+        let mut bins = vec![0u64; nbins];
+        for c in self.containers.iter().filter(|c| c.was_cold) {
+            let b = (c.spawned_at / (bin_s * MICROS_PER_S)) as usize;
+            if b < nbins {
+                bins[b] += 1;
+            }
+        }
+        bins.iter()
+            .enumerate()
+            .map(|(i, &n)| (i as f64 * bin_s as f64, n))
+            .collect()
+    }
+
+    pub fn summarize(&self, cat: &Catalog) -> Summary {
+        self.summarize_after(cat, 0)
+    }
+
+    /// Summarize jobs arriving at or after `warmup` (µs). Experiments use
+    /// this to exclude the initial cold-start transient, matching the
+    /// paper's steady-state measurements on long-running clusters.
+    pub fn summarize_after(&self, cat: &Catalog, warmup: Micros) -> Summary {
+        let mut responses: Vec<f64> = Vec::with_capacity(self.jobs.len());
+        let mut violations = 0u64;
+        let mut queue_waits: Vec<f64> = Vec::new();
+        let (mut exec_sum, mut cold_sum, mut batch_sum) = (0.0f64, 0.0f64, 0.0f64);
+        let jobs: Vec<&JobRecord> = self.jobs.iter().filter(|j| j.arrival >= warmup).collect();
+        for j in &jobs {
+            let resp = to_ms(j.response());
+            responses.push(resp);
+            if resp > cat.chains[j.chain].slo_ms {
+                violations += 1;
+            }
+            exec_sum += to_ms(j.exec_total());
+            cold_sum += to_ms(j.cold_total());
+            batch_sum += to_ms(j.batch_total());
+            for s in &j.stages {
+                queue_waits.push(to_ms(s.queue_wait()));
+            }
+        }
+        responses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        queue_waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // P99 breakdown: average composition of the top 1% of jobs by
+        // response time (strict top-k avoids dilution by ties at P99).
+        let p99 = stats::percentile_sorted(&responses, 99.0);
+        let mut tail = Breakdown::default();
+        if !jobs.is_empty() {
+            let k = (jobs.len() / 100).max(1);
+            let mut by_resp: Vec<&JobRecord> = jobs.clone();
+            by_resp.sort_by_key(|j| std::cmp::Reverse(j.response()));
+            for j in &by_resp[..k] {
+                tail.exec_ms += to_ms(j.exec_total());
+                tail.cold_ms += to_ms(j.cold_total());
+                tail.batch_ms += to_ms(j.batch_total());
+            }
+            tail.exec_ms /= k as f64;
+            tail.cold_ms /= k as f64;
+            tail.batch_ms /= k as f64;
+        }
+
+        // RPC per stage (containers still alive in the measurement window)
+        let mut per_stage: HashMap<MsId, StageStats> = HashMap::new();
+        for c in &self.containers {
+            if c.retired_at.map(|r| r < warmup).unwrap_or(false) {
+                continue;
+            }
+            let e = per_stage.entry(c.ms_id).or_default();
+            e.containers += 1;
+            e.jobs += c.jobs_executed;
+            if c.was_cold {
+                e.cold_starts += 1;
+            }
+        }
+
+        // energy over the measurement window [warmup, horizon]
+        let energy_wh = if warmup == 0 || self.energy_series.is_empty() {
+            self.energy_wh
+        } else {
+            let at_warmup = self
+                .energy_series
+                .iter()
+                .take_while(|(t, _)| *t <= warmup)
+                .last()
+                .map(|(_, e)| *e)
+                .unwrap_or(0.0);
+            (self.energy_wh - at_warmup).max(0.0)
+        };
+
+        let n = jobs.len().max(1) as f64;
+        Summary {
+            jobs: jobs.len() as u64,
+            slo_violation_pct: 100.0 * violations as f64 / n,
+            median_ms: stats::percentile_sorted(&responses, 50.0),
+            p95_ms: stats::percentile_sorted(&responses, 95.0),
+            p99_ms: p99,
+            mean_ms: stats::mean(&responses),
+            avg_containers: self.avg_containers_after(warmup),
+            total_spawned: self.containers.len() as u64,
+            cold_starts: self.cold_starts,
+            energy_wh,
+            tail_breakdown: tail,
+            avg_breakdown: Breakdown {
+                exec_ms: exec_sum / n,
+                cold_ms: cold_sum / n,
+                batch_ms: batch_sum / n,
+            },
+            queue_wait_median_ms: stats::percentile_sorted(&queue_waits, 50.0),
+            queue_wait_p99_ms: stats::percentile_sorted(&queue_waits, 99.0),
+            per_stage,
+        }
+    }
+
+    /// Response-latency CDF in ms (Fig. 10a).
+    pub fn latency_cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        let r: Vec<f64> = self.jobs.iter().map(|j| to_ms(j.response())).collect();
+        stats::cdf_points(&r, points)
+    }
+
+    /// Queuing-time CDF in ms across all stages (Fig. 10b).
+    pub fn queue_cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        let q: Vec<f64> = self
+            .jobs
+            .iter()
+            .flat_map(|j| j.stages.iter().map(|s| to_ms(s.queue_wait())))
+            .collect();
+        stats::cdf_points(&q, points)
+    }
+}
+
+/// Latency composition (exec vs cold-start vs batching delay) — Fig. 9.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Breakdown {
+    pub exec_ms: f64,
+    pub cold_ms: f64,
+    pub batch_ms: f64,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StageStats {
+    pub containers: u64,
+    pub jobs: u64,
+    pub cold_starts: u64,
+}
+
+impl StageStats {
+    /// Requests executed per container (paper's container-utilization
+    /// metric, Fig. 12a).
+    pub fn rpc(&self) -> f64 {
+        if self.containers == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / self.containers as f64
+        }
+    }
+}
+
+/// Aggregated results of one run — one row of the paper's figures.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub jobs: u64,
+    pub slo_violation_pct: f64,
+    pub median_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub avg_containers: f64,
+    pub total_spawned: u64,
+    pub cold_starts: u64,
+    pub energy_wh: f64,
+    pub tail_breakdown: Breakdown,
+    pub avg_breakdown: Breakdown,
+    pub queue_wait_median_ms: f64,
+    pub queue_wait_p99_ms: f64,
+    pub per_stage: HashMap<MsId, StageStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Catalog;
+    use crate::util::ms;
+
+    fn job(chain: ChainId, arrival_ms: f64, resp_ms: f64, stages: Vec<StageRecord>) -> JobRecord {
+        JobRecord {
+            chain,
+            arrival: ms(arrival_ms),
+            completion: ms(arrival_ms + resp_ms),
+            stages,
+        }
+    }
+
+    fn stage(msid: MsId, enq: f64, start: f64, end: f64, cold: f64) -> StageRecord {
+        StageRecord {
+            ms_id: msid,
+            enqueued: ms(enq),
+            exec_start: ms(start),
+            exec_end: ms(end),
+            cold_wait: ms(cold),
+        }
+    }
+
+    #[test]
+    fn stage_record_decomposition() {
+        let s = stage(0, 0.0, 100.0, 150.0, 30.0);
+        assert_eq!(s.queue_wait(), ms(100.0));
+        assert_eq!(s.exec(), ms(50.0));
+        assert_eq!(s.batch_wait(), ms(70.0));
+    }
+
+    #[test]
+    fn slo_violations_counted() {
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        r.job(job(0, 0.0, 500.0, vec![]));
+        r.job(job(0, 0.0, 1500.0, vec![])); // violates 1000ms SLO
+        r.job(job(0, 0.0, 900.0, vec![]));
+        let s = r.summarize(&cat);
+        assert!((s.slo_violation_pct - 33.333).abs() < 0.01);
+        assert_eq!(s.jobs, 3);
+    }
+
+    #[test]
+    fn container_accounting_and_rpc() {
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(100_000.0);
+        r.container_spawned(1, 0, ms(0.0), true);
+        r.container_spawned(2, 0, ms(0.0), false);
+        r.container_executed(1, 30);
+        r.container_executed(2, 10);
+        r.container_retired(2, ms(50_000.0));
+        let s = r.summarize(&cat);
+        assert_eq!(s.cold_starts, 1);
+        assert_eq!(s.total_spawned, 2);
+        let st = s.per_stage.get(&0).unwrap();
+        assert_eq!(st.rpc(), 20.0);
+        // container 1 alive 100s, container 2 alive 50s -> avg 1.5
+        assert!((s.avg_containers - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn containers_over_time_series() {
+        let mut r = Recorder::new();
+        r.horizon = ms(30_000.0);
+        r.container_spawned(1, 0, ms(0.0), true);
+        r.container_spawned(2, 0, ms(12_000.0), true);
+        r.container_retired(1, ms(25_000.0));
+        let ts = r.containers_over_time(10);
+        assert_eq!(ts.len(), 4); // t = 0, 10, 20, 30
+        assert_eq!(ts[0].1, 1);
+        assert_eq!(ts[2].1, 2);
+        assert_eq!(ts[3].1, 1);
+    }
+
+    #[test]
+    fn tail_breakdown_composition() {
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        // 100 fast jobs + 1 huge tail job dominated by cold start
+        for i in 0..100 {
+            r.job(job(
+                0,
+                i as f64,
+                100.0,
+                vec![stage(0, i as f64, i as f64 + 50.0, i as f64 + 100.0, 0.0)],
+            ));
+        }
+        r.job(job(
+            0,
+            0.0,
+            5000.0,
+            vec![stage(0, 0.0, 4900.0, 5000.0, 4500.0)],
+        ));
+        let s = r.summarize(&cat);
+        assert!(s.tail_breakdown.cold_ms > 1000.0);
+        assert!(s.p99_ms >= 100.0);
+    }
+
+    #[test]
+    fn cdf_shapes() {
+        let mut r = Recorder::new();
+        r.horizon = ms(1000.0);
+        for i in 1..=100 {
+            r.job(job(0, 0.0, i as f64, vec![]));
+        }
+        let cdf = r.latency_cdf(20);
+        assert_eq!(cdf.len(), 20);
+        assert!((cdf.last().unwrap().0 - 100.0).abs() < 1e-9);
+        assert!(cdf.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn avg_containers_empty() {
+        let r = Recorder::new();
+        assert_eq!(r.avg_containers(), 0.0);
+    }
+}

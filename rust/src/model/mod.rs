@@ -1,0 +1,275 @@
+//! Domain model: microservices, function chains, workload mixes.
+//!
+//! This is the runtime-side catalog of the paper's workload (Tables 3–5):
+//! nine Djinn&Tonic-style ML microservices, four chains with their measured
+//! slack, three workload mixes. Execution-time sampling follows the paper's
+//! characterization (§2.2.2): near-deterministic per-stage times with a
+//! standard deviation well under 20 ms across runs.
+
+use crate::util::rng::Pcg;
+
+/// Index into [`Catalog::microservices`].
+pub type MsId = usize;
+/// Index into [`Catalog::chains`].
+pub type ChainId = usize;
+
+/// One microservice ("function", "stage", "task") — paper Table 3.
+#[derive(Debug, Clone)]
+pub struct Microservice {
+    pub name: &'static str,
+    pub long_name: &'static str,
+    pub ml_model: &'static str,
+    /// Mean execution time (MET) in ms, from offline profiling (Table 3).
+    pub exec_ms_mean: f64,
+    /// Std-dev of execution time (paper Fig. 3b: within 20 ms).
+    pub exec_ms_std: f64,
+    /// Container image size (MB) — drives image-pull time in cold starts.
+    pub image_mb: f64,
+    /// CPU share per container (paper §5.1: 0.5 core).
+    pub cpu_share: f64,
+    /// Memory per container (paper §5.1: within 1 GB).
+    pub mem_mb: f64,
+}
+
+impl Microservice {
+    /// Sample an execution time in ms (truncated normal, never < 5% mean).
+    #[inline]
+    pub fn sample_exec_ms(&self, rng: &mut Pcg) -> f64 {
+        let x = rng.normal_ms(self.exec_ms_mean, self.exec_ms_std);
+        x.max(self.exec_ms_mean * 0.05).max(0.01)
+    }
+}
+
+/// One application = a linear chain of microservices — paper Table 4.
+#[derive(Debug, Clone)]
+pub struct Chain {
+    pub name: &'static str,
+    pub stages: Vec<MsId>,
+    /// Measured average slack in ms (Table 4).
+    pub slack_ms: f64,
+    /// End-to-end response-latency SLO in ms (paper §4.1: 1000 ms).
+    pub slo_ms: f64,
+}
+
+impl Chain {
+    /// Total mean execution time across stages.
+    pub fn total_exec_ms(&self, cat: &Catalog) -> f64 {
+        self.stages
+            .iter()
+            .map(|&s| cat.microservices[s].exec_ms_mean)
+            .sum()
+    }
+}
+
+/// A workload mix of two applications — paper Table 5.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    pub name: &'static str,
+    pub chains: Vec<ChainId>,
+}
+
+/// The full workload catalog.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    pub microservices: Vec<Microservice>,
+    pub chains: Vec<Chain>,
+    pub mixes: Vec<WorkloadMix>,
+}
+
+/// Std-dev model: grows with MET but capped at the paper's 20 ms bound.
+fn std_for(mean_ms: f64) -> f64 {
+    (0.5 + 0.08 * mean_ms).min(18.0)
+}
+
+impl Catalog {
+    /// The paper's workload: Tables 3, 4 and 5 verbatim.
+    pub fn paper() -> Catalog {
+        let m = |name, long_name, ml_model, exec, image_mb| Microservice {
+            name,
+            long_name,
+            ml_model,
+            exec_ms_mean: exec,
+            exec_ms_std: std_for(exec),
+            image_mb,
+            cpu_share: 0.5,
+            mem_mb: 1024.0,
+        };
+        // Table 3. Image sizes scale with model size (drives cold starts).
+        let microservices = vec![
+            m("IMC", "Image Classification", "Alexnet", 43.5, 850.0),
+            m("AP", "Human Activity Pose", "DeepPose", 30.3, 700.0),
+            m("HS", "Human Segmentation", "VGG16", 151.2, 1400.0),
+            m("FACER", "Facial Recognition", "VGGNET", 5.5, 500.0),
+            m("FACED", "Face Detection", "Xception", 6.1, 520.0),
+            m("ASR", "Auto Speech Recognition", "NNet3", 46.1, 900.0),
+            m("POS", "Parts of Speech Tagging", "SENNA", 0.100, 180.0),
+            m("NER", "Name Entity Recognition", "SENNA", 0.090, 180.0),
+            m("NLP", "POS+NER composite stage", "SENNA", 0.190, 200.0),
+            m("QA", "Question Answering", "memnet", 56.1, 950.0),
+        ];
+        let id = |name: &str| {
+            microservices
+                .iter()
+                .position(|ms| ms.name == name)
+                .unwrap()
+        };
+        // Table 4 (slack), chained per the paper.
+        let chains = vec![
+            Chain {
+                name: "FaceSecurity",
+                stages: vec![id("FACED"), id("FACER")],
+                slack_ms: 788.0,
+                slo_ms: 1000.0,
+            },
+            Chain {
+                name: "IMG",
+                stages: vec![id("IMC"), id("NLP"), id("QA")],
+                slack_ms: 700.0,
+                slo_ms: 1000.0,
+            },
+            Chain {
+                name: "IPA",
+                stages: vec![id("ASR"), id("NLP"), id("QA")],
+                slack_ms: 697.0,
+                slo_ms: 1000.0,
+            },
+            Chain {
+                name: "DetectFatigue",
+                stages: vec![id("HS"), id("AP"), id("FACED"), id("FACER")],
+                slack_ms: 572.0,
+                slo_ms: 1000.0,
+            },
+        ];
+        let cid = |name: &str| chains.iter().position(|c| c.name == name).unwrap();
+        // Table 5, ordered by increasing total available slack.
+        let mixes = vec![
+            WorkloadMix {
+                name: "Heavy",
+                chains: vec![cid("IPA"), cid("DetectFatigue")],
+            },
+            WorkloadMix {
+                name: "Medium",
+                chains: vec![cid("IPA"), cid("IMG")],
+            },
+            WorkloadMix {
+                name: "Light",
+                chains: vec![cid("IMG"), cid("FaceSecurity")],
+            },
+        ];
+        Catalog {
+            microservices,
+            chains,
+            mixes,
+        }
+    }
+
+    pub fn ms_id(&self, name: &str) -> Option<MsId> {
+        self.microservices.iter().position(|m| m.name == name)
+    }
+
+    pub fn chain_id(&self, name: &str) -> Option<ChainId> {
+        self.chains.iter().position(|c| c.name == name)
+    }
+
+    pub fn mix(&self, name: &str) -> Option<&WorkloadMix> {
+        self.mixes
+            .iter()
+            .find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+
+    /// All distinct stages used by a mix (shared stages appear once).
+    pub fn mix_stages(&self, mix: &WorkloadMix) -> Vec<MsId> {
+        let mut out: Vec<MsId> = Vec::new();
+        for &cid in &mix.chains {
+            for &s in &self.chains[cid].stages {
+                if !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        let cat = Catalog::paper();
+        assert_eq!(cat.microservices.len(), 10);
+        let hs = &cat.microservices[cat.ms_id("HS").unwrap()];
+        assert_eq!(hs.exec_ms_mean, 151.2);
+        let ner = &cat.microservices[cat.ms_id("NER").unwrap()];
+        assert_eq!(ner.exec_ms_mean, 0.090);
+        for ms in &cat.microservices {
+            assert!(ms.exec_ms_std <= 20.0, "{} std too large", ms.name);
+            assert!(ms.cpu_share == 0.5 && ms.mem_mb <= 1024.0);
+        }
+    }
+
+    #[test]
+    fn table4_chains() {
+        let cat = Catalog::paper();
+        assert_eq!(cat.chains.len(), 4);
+        let df = &cat.chains[cat.chain_id("DetectFatigue").unwrap()];
+        assert_eq!(df.stages.len(), 4);
+        assert_eq!(df.slack_ms, 572.0);
+        // every chain fits its SLO
+        for c in &cat.chains {
+            assert!(c.total_exec_ms(&cat) < c.slo_ms);
+            assert!(c.slack_ms < c.slo_ms);
+        }
+        // paper Fig 3a: HS dominates DetectFatigue (~81%)
+        let hs_frac =
+            cat.microservices[df.stages[0]].exec_ms_mean / df.total_exec_ms(&cat);
+        assert!(hs_frac > 0.75, "{hs_frac}");
+    }
+
+    #[test]
+    fn table5_mixes_ordered_by_slack() {
+        let cat = Catalog::paper();
+        assert_eq!(cat.mixes.len(), 3);
+        let avg_slack = |mix: &WorkloadMix| {
+            mix.chains
+                .iter()
+                .map(|&c| cat.chains[c].slack_ms)
+                .sum::<f64>()
+                / mix.chains.len() as f64
+        };
+        let heavy = avg_slack(cat.mix("Heavy").unwrap());
+        let medium = avg_slack(cat.mix("Medium").unwrap());
+        let light = avg_slack(cat.mix("Light").unwrap());
+        assert!(heavy < medium && medium < light, "{heavy} {medium} {light}");
+    }
+
+    #[test]
+    fn exec_sampling_bounds() {
+        let cat = Catalog::paper();
+        let mut rng = Pcg::new(5);
+        for ms in &cat.microservices {
+            let mut vals = Vec::new();
+            for _ in 0..100 {
+                let v = ms.sample_exec_ms(&mut rng);
+                assert!(v > 0.0);
+                vals.push(v);
+            }
+            let mean = crate::util::stats::mean(&vals);
+            assert!(
+                (mean - ms.exec_ms_mean).abs() < ms.exec_ms_mean.max(1.0) * 0.5,
+                "{}: {mean} vs {}",
+                ms.name,
+                ms.exec_ms_mean
+            );
+        }
+    }
+
+    #[test]
+    fn shared_stages_deduplicated() {
+        let cat = Catalog::paper();
+        // Medium = IPA + IMG share NLP and QA
+        let stages = cat.mix_stages(cat.mix("Medium").unwrap());
+        assert_eq!(stages.len(), 4); // ASR, NLP, QA, IMC
+    }
+}

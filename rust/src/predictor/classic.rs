@@ -1,0 +1,438 @@
+//! Non-ML predictors, fitted online over the trailing history (Fig. 6).
+
+use std::collections::VecDeque;
+
+use super::Predictor;
+use crate::util::stats;
+
+/// Bounded trailing history of window maxima.
+#[derive(Debug, Clone)]
+pub(crate) struct History {
+    buf: VecDeque<f64>,
+    cap: usize,
+}
+
+impl History {
+    pub fn new(cap: usize) -> History {
+        History {
+            buf: VecDeque::with_capacity(cap),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn last(&self) -> f64 {
+        self.buf.back().copied().unwrap_or(0.0)
+    }
+
+    pub fn as_vec(&self) -> Vec<f64> {
+        self.buf.iter().copied().collect()
+    }
+}
+
+/// Moving Window Average: mean of the last `k` windows.
+#[derive(Debug, Clone)]
+pub struct Mwa {
+    hist: History,
+}
+
+impl Mwa {
+    pub fn new(k: usize) -> Mwa {
+        Mwa {
+            hist: History::new(k),
+        }
+    }
+}
+
+impl Predictor for Mwa {
+    fn name(&self) -> &'static str {
+        "MWA"
+    }
+
+    fn observe(&mut self, w: f64) {
+        self.hist.push(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        stats::mean(&self.hist.as_vec())
+    }
+}
+
+/// Exponentially Weighted Moving Average with smoothing factor alpha.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+}
+
+impl Predictor for Ewma {
+    fn name(&self) -> &'static str {
+        "EWMA"
+    }
+
+    fn observe(&mut self, w: f64) {
+        self.value = Some(match self.value {
+            None => w,
+            Some(v) => self.alpha * w + (1.0 - self.alpha) * v,
+        });
+    }
+
+    fn forecast(&mut self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    fn warmup(&self) -> usize {
+        1
+    }
+}
+
+/// Linear regression over the last `k` windows, extrapolated one step.
+#[derive(Debug, Clone)]
+pub struct LinReg {
+    hist: History,
+}
+
+impl LinReg {
+    pub fn new(k: usize) -> LinReg {
+        LinReg {
+            hist: History::new(k),
+        }
+    }
+}
+
+impl Predictor for LinReg {
+    fn name(&self) -> &'static str {
+        "LinearR"
+    }
+
+    fn observe(&mut self, w: f64) {
+        self.hist.push(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        let ys = self.hist.as_vec();
+        if ys.len() < 2 {
+            return self.hist.last();
+        }
+        let xs: Vec<f64> = (0..ys.len()).map(|i| i as f64).collect();
+        let (a, b) = stats::linear_fit(&xs, &ys);
+        (a + b * ys.len() as f64).max(0.0)
+    }
+}
+
+/// Logistic regression: linear fit in logit space of the rate normalized
+/// by the running max (the paper's "Logistic R." rate forecaster).
+#[derive(Debug, Clone)]
+pub struct LogisticReg {
+    hist: History,
+    max_seen: f64,
+}
+
+impl LogisticReg {
+    pub fn new(k: usize) -> LogisticReg {
+        LogisticReg {
+            hist: History::new(k),
+            max_seen: 1.0,
+        }
+    }
+}
+
+impl Predictor for LogisticReg {
+    fn name(&self) -> &'static str {
+        "LogisticR"
+    }
+
+    fn observe(&mut self, w: f64) {
+        self.max_seen = self.max_seen.max(w);
+        self.hist.push(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        let ys = self.hist.as_vec();
+        if ys.len() < 2 {
+            return self.hist.last();
+        }
+        let cap = self.max_seen * 1.1;
+        let logits: Vec<f64> = ys
+            .iter()
+            .map(|&y| {
+                let p = (y / cap).clamp(1e-4, 1.0 - 1e-4);
+                (p / (1.0 - p)).ln()
+            })
+            .collect();
+        let xs: Vec<f64> = (0..logits.len()).map(|i| i as f64).collect();
+        let (a, b) = stats::linear_fit(&xs, &logits);
+        let z: f64 = a + b * logits.len() as f64;
+        let p = 1.0 / (1.0 + (-z).exp());
+        (p * cap).max(0.0)
+    }
+}
+
+/// Online autoregressive model AR(p), least-squares-fitted over the last
+/// `k` windows (DeepAREstimator substitute — see module docs).
+#[derive(Debug, Clone)]
+pub struct Ar {
+    p: usize,
+    hist: History,
+}
+
+impl Ar {
+    pub fn new(p: usize, k: usize) -> Ar {
+        assert!(p >= 1);
+        Ar {
+            p,
+            hist: History::new(k.max(p + 2)),
+        }
+    }
+
+    /// Solve the p x p normal equations by Gaussian elimination.
+    fn fit(&self, ys: &[f64]) -> Option<Vec<f64>> {
+        let p = self.p;
+        let n = ys.len();
+        if n < p + 2 {
+            return None;
+        }
+        // X[i] = ys[i..i+p], target ys[i+p]
+        let rows = n - p;
+        let mut xtx = vec![vec![0.0f64; p + 1]; p + 1]; // + intercept
+        let mut xty = vec![0.0f64; p + 1];
+        for i in 0..rows {
+            let mut x = vec![1.0f64];
+            x.extend_from_slice(&ys[i..i + p]);
+            let y = ys[i + p];
+            for a in 0..=p {
+                for b in 0..=p {
+                    xtx[a][b] += x[a] * x[b];
+                }
+                xty[a] += x[a] * y;
+            }
+        }
+        // ridge for stability
+        for (a, row) in xtx.iter_mut().enumerate() {
+            row[a] += 1e-6;
+        }
+        gaussian_solve(&mut xtx, &mut xty)
+    }
+}
+
+fn gaussian_solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for r in col + 1..n {
+            let f = a[r][col] / a[col][col];
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in r + 1..n {
+            s -= a[r][c] * x[c];
+        }
+        x[r] = s / a[r][r];
+    }
+    Some(x)
+}
+
+impl Predictor for Ar {
+    fn name(&self) -> &'static str {
+        "AR3(DeepAR-sub)"
+    }
+
+    fn observe(&mut self, w: f64) {
+        self.hist.push(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        let ys = self.hist.as_vec();
+        match self.fit(&ys) {
+            None => self.hist.last(),
+            Some(coef) => {
+                let tail = &ys[ys.len() - self.p..];
+                let mut pred = coef[0];
+                for (i, &y) in tail.iter().enumerate() {
+                    pred += coef[i + 1] * y;
+                }
+                pred.max(0.0)
+            }
+        }
+    }
+
+    fn warmup(&self) -> usize {
+        self.p + 2
+    }
+}
+
+/// Holt's double exponential smoothing: level + trend (WeaveNet
+/// substitute — see module docs).
+#[derive(Debug, Clone)]
+pub struct Holt {
+    alpha: f64,
+    beta: f64,
+    level: Option<f64>,
+    trend: f64,
+}
+
+impl Holt {
+    pub fn new(alpha: f64, beta: f64) -> Holt {
+        Holt {
+            alpha,
+            beta,
+            level: None,
+            trend: 0.0,
+        }
+    }
+}
+
+impl Predictor for Holt {
+    fn name(&self) -> &'static str {
+        "Holt(WeaveNet-sub)"
+    }
+
+    fn observe(&mut self, w: f64) {
+        match self.level {
+            None => self.level = Some(w),
+            Some(l0) => {
+                let l1 = self.alpha * w + (1.0 - self.alpha) * (l0 + self.trend);
+                self.trend = self.beta * (l1 - l0) + (1.0 - self.beta) * self.trend;
+                self.level = Some(l1);
+            }
+        }
+    }
+
+    fn forecast(&mut self) -> f64 {
+        (self.level.unwrap_or(0.0) + self.trend).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(p: &mut dyn Predictor, xs: &[f64]) {
+        for &x in xs {
+            p.observe(x);
+        }
+    }
+
+    #[test]
+    fn mwa_is_windowed_mean() {
+        let mut p = Mwa::new(3);
+        feed(&mut p, &[1.0, 2.0, 3.0, 4.0]);
+        assert!((p.forecast() - 3.0).abs() < 1e-12); // last 3: 2,3,4
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut p = Ewma::new(0.5);
+        feed(&mut p, &[10.0; 20]);
+        assert!((p.forecast() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_tracks_step() {
+        let mut p = Ewma::new(0.5);
+        feed(&mut p, &[0.0; 5]);
+        feed(&mut p, &[100.0; 5]);
+        let f = p.forecast();
+        assert!(f > 90.0 && f <= 100.0, "{f}");
+    }
+
+    #[test]
+    fn linreg_extrapolates_trend() {
+        let mut p = LinReg::new(10);
+        feed(&mut p, &[10.0, 20.0, 30.0, 40.0]);
+        assert!((p.forecast() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linreg_never_negative() {
+        let mut p = LinReg::new(10);
+        feed(&mut p, &[40.0, 30.0, 20.0, 10.0, 1.0]);
+        assert!(p.forecast() >= 0.0);
+    }
+
+    #[test]
+    fn logistic_bounded_by_cap() {
+        let mut p = LogisticReg::new(10);
+        feed(&mut p, &[100.0, 200.0, 400.0, 800.0]);
+        let f = p.forecast();
+        assert!(f <= 800.0 * 1.1 + 1e-9, "{f}");
+        assert!(f > 400.0, "{f}");
+    }
+
+    #[test]
+    fn ar_learns_linear_recurrence() {
+        // y[t] = y[t-1] + 5
+        let mut p = Ar::new(3, 30);
+        let xs: Vec<f64> = (0..20).map(|i| 5.0 * i as f64).collect();
+        feed(&mut p, &xs);
+        let f = p.forecast();
+        assert!((f - 100.0).abs() < 1.0, "{f}");
+    }
+
+    #[test]
+    fn ar_falls_back_with_short_history() {
+        let mut p = Ar::new(3, 30);
+        feed(&mut p, &[7.0, 8.0]);
+        assert_eq!(p.forecast(), 8.0);
+    }
+
+    #[test]
+    fn holt_tracks_trend() {
+        let mut p = Holt::new(0.6, 0.4);
+        let xs: Vec<f64> = (0..30).map(|i| 10.0 * i as f64).collect();
+        feed(&mut p, &xs);
+        let f = p.forecast();
+        assert!((f - 300.0).abs() < 20.0, "{f}");
+    }
+
+    #[test]
+    fn gaussian_solver_known_system() {
+        // 2x + y = 5; x + 3y = 10 -> x = 1, y = 3
+        let mut a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let mut b = vec![5.0, 10.0];
+        let x = gaussian_solve(&mut a, &mut b).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_solver_singular() {
+        let mut a = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        let mut b = vec![2.0, 2.0];
+        assert!(gaussian_solve(&mut a, &mut b).is_none());
+    }
+}

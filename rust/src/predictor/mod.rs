@@ -1,0 +1,182 @@
+//! Load-prediction models (paper §4.5.1 / Fig. 6).
+//!
+//! Fifer samples the arrival rate in adjacent W_s = 5 s windows over the
+//! past 100 s and forecasts the max arrival rate for the next monitoring
+//! interval. The paper compares four non-ML models (fitted online over the
+//! trailing history) and four ML models (pre-trained on 60% of the WITS
+//! trace). We implement:
+//!
+//! | paper model       | here                                            |
+//! |-------------------|-------------------------------------------------|
+//! | MWA               | [`classic::Mwa`]                                |
+//! | EWMA              | [`classic::Ewma`]                               |
+//! | Linear Regression | [`classic::LinReg`]                             |
+//! | Logistic Reg.     | [`classic::LogisticReg`]                        |
+//! | Simple FF network | [`nn::FfPredictor`] (JAX-trained, rust forward) |
+//! | LSTM              | [`nn::LstmPredictor`] (JAX-trained, AOT-export) |
+//! | DeepAREstimator   | [`classic::Ar`] — online AR(3) substitute       |
+//! | WeaveNet          | [`classic::Holt`] — Holt double-smoothing subst.|
+//!
+//! (The last two are closed-model substitutes, documented in DESIGN.md §2;
+//! both are autoregressive forecasters of the same input series.)
+//!
+//! The NN forwards also exist as AOT-compiled XLA artifacts executed via
+//! PJRT from `runtime::PredictorExec` — the rust-native forwards here are
+//! cross-checked against those artifacts in integration tests.
+
+pub mod classic;
+pub mod nn;
+
+use crate::util::stats;
+
+/// A max-arrival-rate forecaster over fixed sampling windows.
+pub trait Predictor {
+    fn name(&self) -> &'static str;
+
+    /// Feed the max arrival rate observed in the window that just closed.
+    fn observe(&mut self, window_max_rate: f64);
+
+    /// Forecast the max arrival rate over the next monitoring interval.
+    fn forecast(&mut self) -> f64;
+
+    /// Number of observations required before forecasts are meaningful.
+    fn warmup(&self) -> usize {
+        2
+    }
+}
+
+/// All predictors of Fig. 6, constructed with paper defaults.
+/// `weights_path` points at artifacts/predictor_weights.json (NN models are
+/// skipped when it is missing — e.g. before `make artifacts`).
+pub fn all_predictors(weights_path: Option<&std::path::Path>) -> Vec<Box<dyn Predictor>> {
+    let mut v: Vec<Box<dyn Predictor>> = vec![
+        Box::new(classic::Mwa::new(20)),
+        Box::new(classic::Ewma::new(0.5)),
+        Box::new(classic::LinReg::new(20)),
+        Box::new(classic::LogisticReg::new(20)),
+        Box::new(classic::Ar::new(3, 20)),
+        Box::new(classic::Holt::new(0.5, 0.3)),
+    ];
+    if let Some(p) = weights_path {
+        if let Ok(l) = nn::LstmPredictor::load(p) {
+            v.push(Box::new(l));
+        }
+        if let Ok(f) = nn::FfPredictor::load(p) {
+            v.push(Box::new(f));
+        }
+    }
+    v
+}
+
+/// Result of scoring one predictor over a trace (one Fig. 6a row).
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub name: &'static str,
+    pub rmse: f64,
+    /// Mean wall-clock latency per forecast call, in microseconds.
+    pub latency_us: f64,
+    /// Fraction of forecasts within `accuracy_band` of the actual max.
+    pub accuracy_pct: f64,
+    pub forecasts: Vec<f64>,
+    pub actuals: Vec<f64>,
+}
+
+/// Score a predictor over a window-maxima series: at step i the model has
+/// observed w[..=i] and forecasts max(w[i+1..=i+horizon]) (the next 10 s
+/// monitoring interval, matching the LSTM's training target).
+pub fn evaluate(
+    p: &mut dyn Predictor,
+    window_maxima: &[f64],
+    horizon: usize,
+    accuracy_band: f64,
+) -> EvalResult {
+    let mut forecasts = Vec::new();
+    let mut actuals = Vec::new();
+    let mut lat_ns = 0u128;
+    let mut calls = 0u64;
+    let warmup = p.warmup();
+    for i in 0..window_maxima.len().saturating_sub(horizon) {
+        p.observe(window_maxima[i]);
+        if i + 1 < warmup {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let f = p.forecast();
+        lat_ns += t0.elapsed().as_nanos();
+        calls += 1;
+        let actual = window_maxima[i + 1..=i + horizon]
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max);
+        forecasts.push(f);
+        actuals.push(actual);
+    }
+    let rmse = stats::rmse(&forecasts, &actuals);
+    let within = forecasts
+        .iter()
+        .zip(&actuals)
+        .filter(|(f, a)| (*f - **a).abs() <= accuracy_band * **a)
+        .count();
+    EvalResult {
+        name: p.name(),
+        rmse,
+        latency_us: if calls == 0 {
+            0.0
+        } else {
+            lat_ns as f64 / calls as f64 / 1e3
+        },
+        accuracy_pct: if forecasts.is_empty() {
+            0.0
+        } else {
+            100.0 * within as f64 / forecasts.len() as f64
+        },
+        forecasts,
+        actuals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Persist(f64);
+    impl Predictor for Persist {
+        fn name(&self) -> &'static str {
+            "persist"
+        }
+        fn observe(&mut self, w: f64) {
+            self.0 = w;
+        }
+        fn forecast(&mut self) -> f64 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn evaluate_perfect_on_constant_series() {
+        let w = vec![100.0; 50];
+        let mut p = Persist(0.0);
+        let r = evaluate(&mut p, &w, 2, 0.1);
+        assert_eq!(r.rmse, 0.0);
+        assert_eq!(r.accuracy_pct, 100.0);
+        assert!(!r.forecasts.is_empty());
+    }
+
+    #[test]
+    fn evaluate_measures_error() {
+        // alternating series: persistence is always wrong by 100
+        let w: Vec<f64> = (0..40)
+            .map(|i| if i % 2 == 0 { 100.0 } else { 200.0 })
+            .collect();
+        let mut p = Persist(0.0);
+        let r = evaluate(&mut p, &w, 1, 0.05);
+        assert!((r.rmse - 100.0).abs() < 1e-9, "{}", r.rmse);
+        assert_eq!(r.accuracy_pct, 0.0);
+    }
+
+    #[test]
+    fn all_predictors_construct_without_weights() {
+        let v = all_predictors(None);
+        assert_eq!(v.len(), 6);
+    }
+}

@@ -1,0 +1,396 @@
+//! Rust-native forwards for the JAX-trained NN predictors.
+//!
+//! Weights come from `artifacts/predictor_weights.json` (written by
+//! `python/compile/lstm_train.py`). The math mirrors
+//! `python/compile/kernels/ref.py` exactly — gate order i, f, g, o — and is
+//! cross-checked against the AOT-compiled XLA artifact in
+//! `rust/tests/test_runtime.rs`. The native forward is what the simulator
+//! uses (millions of forecasts per run); the PJRT artifact is what the
+//! live server uses (and what proves the L1/L2 path end-to-end).
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Predictor;
+use crate::util::json::Json;
+
+/// f32 row-major matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn from_json(v: &Json, rows: usize, cols: usize) -> Result<Mat> {
+        let data = v.as_f32_flat()?;
+        if data.len() != rows * cols {
+            bail!("matrix size mismatch: {} != {rows}x{cols}", data.len());
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// y += x^T * M  (x: len rows, y: len cols)
+fn vec_mat_acc(x: &[f32], m: &Mat, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m.rows);
+    debug_assert_eq!(y.len(), m.cols);
+    for (r, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &m.data[r * m.cols..(r + 1) * m.cols];
+        for (yv, &mv) in y.iter_mut().zip(row) {
+            *yv += xv * mv;
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[derive(Debug, Clone)]
+struct LstmLayer {
+    wx: Mat, // (in, 4H)
+    wh: Mat, // (H, 4H)
+    b: Vec<f32>,
+    hidden: usize,
+}
+
+impl LstmLayer {
+    /// One cell step; h and c are updated in place. Matches
+    /// `ref.lstm_cell_ref` (gate order i, f, g, o).
+    fn step(&self, x: &[f32], h: &mut [f32], c: &mut [f32], scratch: &mut [f32]) {
+        let hn = self.hidden;
+        scratch[..4 * hn].copy_from_slice(&self.b);
+        vec_mat_acc(x, &self.wx, &mut scratch[..4 * hn]);
+        vec_mat_acc(h, &self.wh, &mut scratch[..4 * hn]);
+        for j in 0..hn {
+            let i = sigmoid(scratch[j]);
+            let f = sigmoid(scratch[hn + j]);
+            let g = scratch[2 * hn + j].tanh();
+            let o = sigmoid(scratch[3 * hn + j]);
+            c[j] = f * c[j] + i * g;
+            h[j] = o * c[j].tanh();
+        }
+    }
+}
+
+/// The paper's LSTM load predictor: 2 layers × 32 units over the last
+/// `window` arrival-rate samples, trained in JAX on the WITS trace.
+#[derive(Debug, Clone)]
+pub struct LstmPredictor {
+    layers: Vec<LstmLayer>,
+    w_out: Mat, // (H, 1)
+    b_out: f32,
+    pub scale: f64,
+    /// "relative" = normalize each window by its own mean (scale-free);
+    /// "global" = divide by the fixed training scale.
+    pub relative_norm: bool,
+    pub window: usize,
+    hist: VecDeque<f64>,
+}
+
+impl LstmPredictor {
+    pub fn load(path: &Path) -> Result<LstmPredictor> {
+        let j = Json::parse_file(path).context("loading predictor weights")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<LstmPredictor> {
+        let window = j.get("window")?.as_usize()?;
+        let hidden = j.get("hidden")?.as_usize()?;
+        let scale = j.get("scale")?.as_f64()?;
+        let mut layers = Vec::new();
+        let mut in_dim = 1usize;
+        for l in j.get("layers")?.as_arr()? {
+            layers.push(LstmLayer {
+                wx: Mat::from_json(l.get("wx")?, in_dim, 4 * hidden)?,
+                wh: Mat::from_json(l.get("wh")?, hidden, 4 * hidden)?,
+                b: l.get("b")?
+                    .as_f32_flat()?
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("bad bias"))?,
+                hidden,
+            });
+            in_dim = hidden;
+        }
+        let w_out = Mat::from_json(j.get("w_out")?, hidden, 1)?;
+        let b_out = j.get("b_out")?.as_f32_flat()?[0];
+        let relative_norm = j
+            .opt("norm")
+            .and_then(|v| v.as_str().ok())
+            .map(|n| n == "relative")
+            .unwrap_or(false);
+        Ok(LstmPredictor {
+            layers,
+            w_out,
+            b_out,
+            scale,
+            relative_norm,
+            window,
+            hist: VecDeque::with_capacity(window),
+        })
+    }
+
+    /// Forward over a full normalized window (also used by tests to
+    /// cross-check against the PJRT artifact).
+    ///
+    /// Allocation-free inner loop: two flat (T × dim) sequence buffers are
+    /// ping-ponged between layers (§Perf: removed the per-step
+    /// `Vec<Vec<f32>>` clones — see EXPERIMENTS.md).
+    pub fn forward(&self, xs_norm: &[f32]) -> f32 {
+        let hidden = self.layers[0].hidden;
+        let t_len = xs_norm.len();
+        let mut seq_a: Vec<f32> = xs_norm.to_vec(); // layer input, (T, in_dim)
+        let mut in_dim = 1usize;
+        let mut seq_b = vec![0.0f32; t_len * hidden]; // layer output
+        let mut h = vec![0.0f32; hidden];
+        let mut c = vec![0.0f32; hidden];
+        let mut scratch = vec![0.0f32; 4 * hidden];
+        for layer in &self.layers {
+            h.iter_mut().for_each(|v| *v = 0.0);
+            c.iter_mut().for_each(|v| *v = 0.0);
+            for t in 0..t_len {
+                let x = &seq_a[t * in_dim..(t + 1) * in_dim];
+                layer.step(x, &mut h, &mut c, &mut scratch);
+                seq_b[t * hidden..(t + 1) * hidden].copy_from_slice(&h);
+            }
+            std::mem::swap(&mut seq_a, &mut seq_b);
+            if seq_b.len() < t_len * hidden {
+                seq_b.resize(t_len * hidden, 0.0);
+            }
+            in_dim = hidden;
+        }
+        let last = &seq_a[(t_len - 1) * hidden..t_len * hidden];
+        let mut y = self.b_out;
+        for (j, &hv) in last.iter().enumerate() {
+            y += hv * self.w_out.at(j, 0);
+        }
+        y
+    }
+}
+
+impl Predictor for LstmPredictor {
+    fn name(&self) -> &'static str {
+        "LSTM"
+    }
+
+    fn observe(&mut self, w: f64) {
+        if self.hist.len() == self.window {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        if self.hist.is_empty() {
+            return 0.0;
+        }
+        let denom = if self.relative_norm {
+            (self.hist.iter().sum::<f64>() / self.hist.len() as f64).max(1.0)
+        } else {
+            self.scale
+        };
+        // left-pad with the oldest observation until the window fills
+        let mut xs = vec![(self.hist[0] / denom) as f32; self.window];
+        let off = self.window - self.hist.len();
+        for (i, &v) in self.hist.iter().enumerate() {
+            xs[off + i] = (v / denom) as f32;
+        }
+        (self.forward(&xs) as f64 * denom).max(0.0)
+    }
+
+    fn warmup(&self) -> usize {
+        self.window / 2
+    }
+}
+
+/// The simple feed-forward baseline from Fig. 6 (window -> 32 -> 1).
+#[derive(Debug, Clone)]
+pub struct FfPredictor {
+    layers: Vec<(Mat, Vec<f32>)>,
+    pub scale: f64,
+    pub relative_norm: bool,
+    pub window: usize,
+    hist: VecDeque<f64>,
+}
+
+impl FfPredictor {
+    pub fn load(path: &Path) -> Result<FfPredictor> {
+        let j = Json::parse_file(path).context("loading predictor weights")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FfPredictor> {
+        let window = j.get("window")?.as_usize()?;
+        let scale = j.get("scale")?.as_f64()?;
+        let mut layers = Vec::new();
+        let mut in_dim = window;
+        for l in j.get("ff")?.as_arr()? {
+            let b = l.get("b")?.as_f32_flat()?;
+            let out_dim = b.len();
+            layers.push((Mat::from_json(l.get("w")?, in_dim, out_dim)?, b));
+            in_dim = out_dim;
+        }
+        let relative_norm = j
+            .opt("norm")
+            .and_then(|v| v.as_str().ok())
+            .map(|n| n == "relative")
+            .unwrap_or(false);
+        Ok(FfPredictor {
+            layers,
+            scale,
+            relative_norm,
+            window,
+            hist: VecDeque::with_capacity(window),
+        })
+    }
+
+    pub fn forward(&self, xs_norm: &[f32]) -> f32 {
+        let mut x = xs_norm.to_vec();
+        let n = self.layers.len();
+        for (i, (w, b)) in self.layers.iter().enumerate() {
+            let mut y = b.clone();
+            vec_mat_acc(&x, w, &mut y);
+            if i + 1 < n {
+                for v in y.iter_mut() {
+                    *v = v.max(0.0); // relu (final layer linear)
+                }
+            }
+            x = y;
+        }
+        x[0]
+    }
+}
+
+impl Predictor for FfPredictor {
+    fn name(&self) -> &'static str {
+        "FeedForward"
+    }
+
+    fn observe(&mut self, w: f64) {
+        if self.hist.len() == self.window {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(w);
+    }
+
+    fn forecast(&mut self) -> f64 {
+        if self.hist.is_empty() {
+            return 0.0;
+        }
+        let denom = if self.relative_norm {
+            (self.hist.iter().sum::<f64>() / self.hist.len() as f64).max(1.0)
+        } else {
+            self.scale
+        };
+        let mut xs = vec![(self.hist[0] / denom) as f32; self.window];
+        let off = self.window - self.hist.len();
+        for (i, &v) in self.hist.iter().enumerate() {
+            xs[off + i] = (v / denom) as f32;
+        }
+        (self.forward(&xs) as f64 * denom).max(0.0)
+    }
+
+    fn warmup(&self) -> usize {
+        self.window / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_lstm_json() -> Json {
+        // 1 layer, hidden 2, window 4, zero weights except forget bias
+        Json::parse(
+            r#"{
+                "window": 4, "hidden": 2, "scale": 100.0,
+                "layers": [
+                    {"wx": [[0.5, 0.5, 0.0, 0.0, 0.3, 0.3, 0.2, 0.2]],
+                     "wh": [[0,0,0,0,0,0,0,0],[0,0,0,0,0,0,0,0]],
+                     "b": [0, 0, 1, 1, 0, 0, 0, 0]}
+                ],
+                "w_out": [[1.0],[1.0]], "b_out": [0.1],
+                "ff": [
+                    {"w": [[1],[1],[1],[1]], "b": [0.0]}
+                ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lstm_loads_and_forwards() {
+        let p = LstmPredictor::from_json(&tiny_lstm_json()).unwrap();
+        let y = p.forward(&[0.1, 0.2, 0.3, 0.4]);
+        assert!(y.is_finite());
+        // hand-computed single step sanity: output bounded by 2*tanh(1)+b
+        assert!(y.abs() < 2.1);
+    }
+
+    #[test]
+    fn lstm_forward_deterministic() {
+        let p = LstmPredictor::from_json(&tiny_lstm_json()).unwrap();
+        assert_eq!(p.forward(&[0.5; 4]), p.forward(&[0.5; 4]));
+    }
+
+    #[test]
+    fn lstm_predictor_interface() {
+        let mut p = LstmPredictor::from_json(&tiny_lstm_json()).unwrap();
+        for i in 0..6 {
+            p.observe(50.0 + i as f64);
+        }
+        let f = p.forecast();
+        assert!(f >= 0.0 && f.is_finite());
+    }
+
+    #[test]
+    fn ff_identity_network() {
+        let p = FfPredictor::from_json(&tiny_lstm_json()).unwrap();
+        // single linear layer summing inputs
+        let y = p.forward(&[0.1, 0.2, 0.3, 0.4]);
+        assert!((y - 1.0).abs() < 1e-6, "{y}");
+    }
+
+    #[test]
+    fn ff_forecast_denormalizes() {
+        let mut p = FfPredictor::from_json(&tiny_lstm_json()).unwrap();
+        for _ in 0..4 {
+            p.observe(25.0); // norm 0.25 each, sum = 1.0 -> 100.0 denorm
+        }
+        assert!((p.forecast() - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn loads_real_weights_if_present() {
+        let path = Path::new("artifacts/predictor_weights.json");
+        if path.exists() {
+            let p = LstmPredictor::load(path).unwrap();
+            assert_eq!(p.window, 20);
+            assert_eq!(p.layers.len(), 2);
+            let y = p.forward(&[0.5; 20]);
+            assert!(y.is_finite() && y.abs() < 10.0);
+            let f = FfPredictor::load(path).unwrap();
+            assert!(f.forward(&[0.5; 20]).is_finite());
+        }
+    }
+
+    #[test]
+    fn bad_weights_rejected() {
+        let j = Json::parse(r#"{"window": 4}"#).unwrap();
+        assert!(LstmPredictor::from_json(&j).is_err());
+        assert!(FfPredictor::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,430 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the hot path.
+//!
+//! This is the only place the `xla` crate is touched. The build-time Python
+//! pipeline (`python/compile/aot.py`) lowers every (microservice × batch
+//! size) inference graph and the predictor networks to **HLO text**
+//! (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos — see
+//! DESIGN.md); here we parse that text, compile it on the PJRT CPU client
+//! once per executable, and run batched inference with zero Python on the
+//! request path.
+//!
+//! Weights are runtime parameters (not baked constants) so the HLO stays
+//! small: `execute(w1, b1, ..., wn, bn, x)`. The weight literals are
+//! created once at load and reused for every call.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::MsId;
+use crate::util::json::Json;
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub slo_ms: f64,
+    pub batch_sizes: Vec<usize>,
+    pub microservices: HashMap<String, MsEntry>,
+    pub predictors: HashMap<String, PredictorEntry>,
+    pub traces: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MsEntry {
+    pub name: String,
+    pub paper_exec_ms: f64,
+    pub input_dim: usize,
+    pub output_dim: usize,
+    /// layer shapes: (w_shape, b_len) in order
+    pub layers: Vec<((usize, usize), usize)>,
+    pub weights_path: String,
+    /// batch size -> hlo file
+    pub batches: HashMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PredictorEntry {
+    pub path: String,
+    pub window: usize,
+    pub scale: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .context("loading artifacts manifest (run `make artifacts`?)")?;
+        let mut microservices = HashMap::new();
+        for (name, e) in j.get("microservices")?.as_obj()? {
+            let mut layers = Vec::new();
+            for l in e.get("weights")?.get("layers")?.as_arr()? {
+                let w = l.get("w")?.as_f64_vec()?;
+                let b = l.get("b")?.as_f64_vec()?;
+                if w.len() != 2 || b.len() != 1 {
+                    bail!("bad layer shape entry for {name}");
+                }
+                layers.push(((w[0] as usize, w[1] as usize), b[0] as usize));
+            }
+            let mut batches = HashMap::new();
+            for (b, f) in e.get("batches")?.as_obj()? {
+                batches.insert(b.parse::<usize>()?, f.as_str()?.to_string());
+            }
+            microservices.insert(
+                name.clone(),
+                MsEntry {
+                    name: name.clone(),
+                    paper_exec_ms: e.get("paper_exec_ms")?.as_f64()?,
+                    input_dim: e.get("input_dim")?.as_usize()?,
+                    output_dim: e.get("output_dim")?.as_usize()?,
+                    layers,
+                    weights_path: e.get("weights")?.get("path")?.as_str()?.to_string(),
+                    batches,
+                },
+            );
+        }
+        let mut predictors = HashMap::new();
+        for (name, e) in j.get("predictors")?.as_obj()? {
+            predictors.insert(
+                name.clone(),
+                PredictorEntry {
+                    path: e.get("path")?.as_str()?.to_string(),
+                    window: e.get("window")?.as_usize()?,
+                    scale: e.get("scale")?.as_f64()?,
+                },
+            );
+        }
+        let mut traces = HashMap::new();
+        for (name, e) in j.get("traces")?.as_obj()? {
+            traces.insert(name.clone(), e.get("path")?.as_str()?.to_string());
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            slo_ms: j.get("slo_ms")?.as_f64()?,
+            batch_sizes: j
+                .get("batch_sizes")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|b| b as usize)
+                .collect(),
+            microservices,
+            predictors,
+            traces,
+        })
+    }
+
+    /// Smallest compiled batch size >= `n` (falls back to the largest).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let mut sizes = self.batch_sizes.clone();
+        sizes.sort_unstable();
+        sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| sizes.last().copied().unwrap_or(1))
+    }
+}
+
+/// Load an f32-LE weight binary into per-layer (w, b) flat vectors.
+pub fn load_weights_bin(
+    path: &Path,
+    layers: &[((usize, usize), usize)],
+) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let total: usize = layers.iter().map(|((r, c), b)| r * c + b).sum();
+    if raw.len() != 4 * total {
+        bail!(
+            "weight file {} is {} bytes, expected {}",
+            path.display(),
+            raw.len(),
+            4 * total
+        );
+    }
+    let mut floats = Vec::with_capacity(total);
+    for chunk in raw.chunks_exact(4) {
+        floats.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for &((r, c), blen) in layers {
+        let w = floats[off..off + r * c].to_vec();
+        off += r * c;
+        let b = floats[off..off + blen].to_vec();
+        off += blen;
+        out.push((w, b));
+    }
+    Ok(out)
+}
+
+/// One compiled (microservice, batch) executable.
+struct ModelExec {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    input_dim: usize,
+    output_dim: usize,
+}
+
+/// The PJRT runtime: one CPU client, executables compiled lazily and
+/// cached. Keep one `Runtime` per executor thread (or a dedicated runtime
+/// thread fed by channels) — the live server does the latter.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    execs: HashMap<(String, usize), ModelExec>,
+    weights: HashMap<String, Vec<xla::Literal>>,
+    predictor_execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            weights: HashMap::new(),
+            predictor_execs: HashMap::new(),
+        })
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Ensure weights for a microservice are loaded as literals.
+    fn ensure_weights(&mut self, name: &str) -> Result<()> {
+        if self.weights.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .microservices
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown microservice {name}"))?
+            .clone();
+        let flat =
+            load_weights_bin(&self.manifest.dir.join(&entry.weights_path), &entry.layers)?;
+        let mut lits = Vec::new();
+        for (((r, c), blen), (w, b)) in entry.layers.iter().zip(flat) {
+            let wl = xla::Literal::vec1(&w)
+                .reshape(&[*r as i64, *c as i64])
+                .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+            let bl = xla::Literal::vec1(&b[..*blen]);
+            lits.push(wl);
+            lits.push(bl);
+        }
+        self.weights.insert(name.to_string(), lits);
+        Ok(())
+    }
+
+    /// Ensure the (microservice, batch) executable is compiled.
+    pub fn ensure_model(&mut self, name: &str, batch: usize) -> Result<()> {
+        if self.execs.contains_key(&(name.to_string(), batch)) {
+            return Ok(());
+        }
+        self.ensure_weights(name)?;
+        let entry = self
+            .manifest
+            .microservices
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown microservice {name}"))?;
+        let file = entry
+            .batches
+            .get(&batch)
+            .ok_or_else(|| anyhow!("{name} has no batch-{batch} artifact"))?
+            .clone();
+        let (input_dim, output_dim) = (entry.input_dim, entry.output_dim);
+        let exe = self.compile(&file)?;
+        self.execs.insert(
+            (name.to_string(), batch),
+            ModelExec {
+                exe,
+                batch,
+                input_dim,
+                output_dim,
+            },
+        );
+        Ok(())
+    }
+
+    /// Run batched inference: `x` is row-major (rows, input_dim) with any
+    /// rows >= 1 (padded up to the nearest compiled batch internally).
+    /// Returns the first `rows` rows of the (batch, output_dim) output.
+    pub fn infer(&mut self, name: &str, rows: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let batch = self.manifest.pick_batch(rows.max(1));
+        self.ensure_model(name, batch)?;
+        let me = &self.execs[&(name.to_string(), batch)];
+        if x.len() != rows * me.input_dim {
+            bail!(
+                "input len {} != rows {rows} x input_dim {}",
+                x.len(),
+                me.input_dim
+            );
+        }
+        let mut padded = vec![0.0f32; me.batch * me.input_dim];
+        let n = x.len().min(padded.len());
+        padded[..n].copy_from_slice(&x[..n]);
+        let xl = xla::Literal::vec1(&padded)
+            .reshape(&[me.batch as i64, me.input_dim as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let mut args: Vec<&xla::Literal> = self.weights[name].iter().collect();
+        args.push(&xl);
+        let result = me
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {name}/b{batch}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let full: Vec<f32> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(full[..(rows * me.output_dim).min(full.len())].to_vec())
+    }
+
+    /// Load the predictor weight literals in the artifact's parameter
+    /// order (see python/compile/aot.py lower_lstm / lower_ff).
+    fn predictor_weight_literals(&self, which: &str) -> Result<Vec<xla::Literal>> {
+        let j = Json::parse_file(&self.manifest.dir.join("predictor_weights.json"))?;
+        let lit2 = |v: &Json, rows: usize, cols: usize| -> Result<xla::Literal> {
+            let flat = v.as_f32_flat()?;
+            if flat.len() != rows * cols {
+                bail!("predictor tensor size mismatch");
+            }
+            xla::Literal::vec1(&flat)
+                .reshape(&[rows as i64, cols as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        let hidden = j.get("hidden")?.as_usize()?;
+        let window = j.get("window")?.as_usize()?;
+        let mut lits = Vec::new();
+        match which {
+            "lstm" => {
+                let mut in_dim = 1usize;
+                for l in j.get("layers")?.as_arr()? {
+                    lits.push(lit2(l.get("wx")?, in_dim, 4 * hidden)?);
+                    lits.push(lit2(l.get("wh")?, hidden, 4 * hidden)?);
+                    lits.push(xla::Literal::vec1(&l.get("b")?.as_f32_flat()?));
+                    in_dim = hidden;
+                }
+                lits.push(lit2(j.get("w_out")?, hidden, 1)?);
+                lits.push(xla::Literal::vec1(&j.get("b_out")?.as_f32_flat()?));
+            }
+            "ff" => {
+                let mut in_dim = window;
+                for l in j.get("ff")?.as_arr()? {
+                    let b = l.get("b")?.as_f32_flat()?;
+                    lits.push(lit2(l.get("w")?, in_dim, b.len())?);
+                    lits.push(xla::Literal::vec1(&b));
+                    in_dim = b.len();
+                }
+            }
+            other => bail!("unknown predictor {other}"),
+        }
+        Ok(lits)
+    }
+
+    /// Run a predictor artifact: normalized window -> normalized forecast.
+    pub fn predict(&mut self, which: &str, window_norm: &[f32]) -> Result<f32> {
+        let entry = self
+            .manifest
+            .predictors
+            .get(which)
+            .ok_or_else(|| anyhow!("unknown predictor {which}"))?
+            .clone();
+        if window_norm.len() != entry.window {
+            bail!("window len {} != {}", window_norm.len(), entry.window);
+        }
+        if !self.predictor_execs.contains_key(which) {
+            let exe = self.compile(&entry.path)?;
+            self.predictor_execs.insert(which.to_string(), exe);
+            let w = self.predictor_weight_literals(which)?;
+            self.weights.insert(format!("__pred_{which}"), w);
+        }
+        let xl = xla::Literal::vec1(window_norm)
+            .reshape(&[1, entry.window as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let mut args: Vec<&xla::Literal> =
+            self.weights[&format!("__pred_{which}")].iter().collect();
+        args.push(&xl);
+        let exe = &self.predictor_execs[which];
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute predictor: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v: Vec<f32> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(v[0])
+    }
+
+    /// Map a catalog MsId to its manifest entry name.
+    pub fn ms_name(cat: &crate::model::Catalog, ms_id: MsId) -> &'static str {
+        cat.microservices[ms_id].name
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.execs.len() + self.predictor_execs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let Some(dir) = art() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.slo_ms, 1000.0);
+        assert_eq!(m.microservices.len(), 10);
+        assert!(m.predictors.contains_key("lstm"));
+        assert!(m.traces.contains_key("wits"));
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        let Some(dir) = art() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch(1), 1);
+        assert_eq!(m.pick_batch(3), 4);
+        assert_eq!(m.pick_batch(17), 32);
+        assert_eq!(m.pick_batch(1000), 32); // clamp to largest
+    }
+
+    #[test]
+    fn weights_bin_shapes() {
+        let Some(dir) = art() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let e = &m.microservices["POS"];
+        let w = load_weights_bin(&dir.join(&e.weights_path), &e.layers).unwrap();
+        assert_eq!(w.len(), e.layers.len());
+        assert_eq!(w[0].0.len(), e.layers[0].0 .0 * e.layers[0].0 .1);
+    }
+
+    #[test]
+    fn weights_bin_rejects_wrong_size() {
+        let Some(dir) = art() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let e = &m.microservices["POS"];
+        // deliberately wrong layer spec
+        let bad = vec![((1usize, 1usize), 1usize)];
+        assert!(load_weights_bin(&dir.join(&e.weights_path), &bad).is_err());
+    }
+
+    // Full PJRT execution tests live in rust/tests/test_runtime.rs
+    // (integration) so unit tests stay client-free.
+}

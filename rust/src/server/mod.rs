@@ -1,0 +1,444 @@
+//! Live serving runtime: real batched inference behind Fifer batching.
+//!
+//! This is the end-to-end validation layer (DESIGN.md §1): a load
+//! generator produces requests for the paper's function chains; the
+//! coordinator applies the *same* slack-based batching plan as the
+//! simulator; executor threads run the actual AOT-compiled XLA artifacts
+//! through PJRT. Python is never involved — the binary is self-contained
+//! after `make artifacts`.
+//!
+//! Threading model (std threads + channels; no async runtime needed for
+//! this workload shape):
+//!
+//! ```text
+//! [generator] --Arrival--> [coordinator loop] --ExecJob--> [executor 0..N]
+//!      ^                        |   ^                            |
+//!      |                        v   +---------StageDone----------+
+//!   Poisson              per-stage queues,
+//!   arrivals             batch flush on full-or-deadline
+//! ```
+//!
+//! Cold starts in live mode are *real*: the first batch hitting a
+//! (microservice, batch-size) pair pays the PJRT compile + weight upload
+//! on that executor, mirroring how a fresh container pays image pull +
+//! runtime init (the simulator models the latter; the live path measures
+//! the former).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::slack::SlackPlan;
+use crate::model::{Catalog, ChainId, MsId};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// Work item sent to an executor thread.
+struct ExecJob {
+    ms_name: &'static str,
+    /// job ids in this batch (batch size = len)
+    jobs: Vec<u64>,
+    /// row-major (len, input_dim) inputs
+    inputs: Vec<f32>,
+}
+
+/// Completion message back to the coordinator.
+struct StageDone {
+    jobs: Vec<u64>,
+    ms_id: MsId,
+    exec_ms: f64,
+    /// executor paid a compile ("cold start") for this batch
+    cold: bool,
+}
+
+enum Msg {
+    Arrival { chain: ChainId, t: Instant },
+    Done(StageDone),
+    Tick,
+    GenDone,
+}
+
+/// Per-job live state.
+struct LiveJob {
+    chain: ChainId,
+    arrival: Instant,
+    stage_idx: usize,
+    enqueued: Instant,
+    exec_ms_total: f64,
+    cold_hit: bool,
+}
+
+/// Results of a live serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub jobs: u64,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub median_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub slo_violation_pct: f64,
+    pub batches: u64,
+    /// average realized batch size (requests per PJRT call)
+    pub avg_batch: f64,
+    pub cold_compiles: u64,
+    /// mean per-batch inference wall time by stage name
+    pub stage_exec_ms: HashMap<&'static str, f64>,
+}
+
+/// Parameters for a live run.
+#[derive(Debug, Clone)]
+pub struct ServeParams {
+    pub cfg: SystemConfig,
+    pub chains: Vec<ChainId>,
+    /// request rate (req/s) and duration
+    pub rate: f64,
+    pub duration_s: f64,
+    pub executors: usize,
+    /// max time a request may wait for its batch to fill, as a fraction
+    /// of the stage's allocated slack
+    pub flush_frac: f64,
+    /// batching on (Fifer) or off (Bline-style, batch = 1)
+    pub batching: bool,
+}
+
+impl ServeParams {
+    pub fn quick(rate: f64, duration_s: f64) -> ServeParams {
+        ServeParams {
+            cfg: SystemConfig::prototype(crate::config::Policy::Fifer),
+            chains: vec![2, 3], // IPA + DetectFatigue (heavy mix)
+            rate,
+            duration_s,
+            executors: 2,
+            flush_frac: 0.5,
+            batching: true,
+        }
+    }
+}
+
+struct StageBuf {
+    jobs: Vec<u64>,
+    oldest: Option<Instant>,
+}
+
+/// Input dim per microservice — matches python/compile/model.MICROSERVICES.
+fn input_dim(cat: &Catalog, ms_id: MsId) -> usize {
+    match cat.microservices[ms_id].name {
+        "IMC" | "AP" | "QA" => 1024,
+        "HS" => 2048,
+        "FACER" | "FACED" => 256,
+        "ASR" => 1280,
+        _ => 64, // POS / NER / NLP
+    }
+}
+
+/// Flush one stage buffer as a single batched PJRT call.
+#[allow(clippy::too_many_arguments)]
+fn flush_buf(
+    cat: &Catalog,
+    exec_txs: &[Sender<ExecJob>],
+    ms_id: MsId,
+    buf: &mut StageBuf,
+    rr: &mut usize,
+    rng: &mut Pcg,
+    batches: &mut u64,
+    batched_jobs: &mut u64,
+) {
+    if buf.jobs.is_empty() {
+        return;
+    }
+    let dim = input_dim(cat, ms_id);
+    let rows = buf.jobs.len();
+    let mut inputs = vec![0.0f32; rows * dim];
+    for v in inputs.iter_mut() {
+        *v = rng.normal() as f32 * 0.5;
+    }
+    let job = ExecJob {
+        ms_name: cat.microservices[ms_id].name,
+        jobs: std::mem::take(&mut buf.jobs),
+        inputs,
+    };
+    buf.oldest = None;
+    *batches += 1;
+    *batched_jobs += rows as u64;
+    let _ = exec_txs[*rr % exec_txs.len()].send(job);
+    *rr += 1;
+}
+
+/// Run the live server; blocks until the run drains.
+pub fn serve(p: ServeParams) -> Result<ServeReport> {
+    let cat = Catalog::paper();
+    let plan = SlackPlan::build(&cat, &p.chains, &p.cfg.rm, p.batching);
+    let artifacts = Path::new(&p.cfg.artifacts_dir).to_path_buf();
+    // fail fast if artifacts are missing
+    crate::runtime::Manifest::load(&artifacts)?;
+
+    let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+
+    // --- executor pool -------------------------------------------------
+    // Each executor precompiles the (stage, batch) executables it will
+    // serve — the moral equivalent of container pre-warming — and signals
+    // readiness before the load generator starts.
+    let stage_batches: Vec<(&'static str, usize)> = {
+        let mut v = Vec::new();
+        for &cid in &p.chains {
+            for &ms_id in &cat.chains[cid].stages {
+                let name = cat.microservices[ms_id].name;
+                for b in [1usize, plan.batch_for(ms_id)] {
+                    if !v.contains(&(name, b)) {
+                        v.push((name, b));
+                    }
+                }
+            }
+        }
+        v
+    };
+    let (ready_tx, ready_rx) = channel::<()>();
+    let mut exec_txs: Vec<Sender<ExecJob>> = Vec::new();
+    let mut exec_handles = Vec::new();
+    for _ in 0..p.executors.max(1) {
+        let (etx, erx): (Sender<ExecJob>, Receiver<ExecJob>) = channel();
+        exec_txs.push(etx);
+        let back = tx.clone();
+        let art = artifacts.clone();
+        let cat2 = Catalog::paper();
+        let warm = stage_batches.clone();
+        let ready = ready_tx.clone();
+        exec_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rt = Runtime::new(&art)?;
+            for (name, b) in warm {
+                let batch = rt.manifest.pick_batch(b);
+                rt.ensure_model(name, batch)?;
+            }
+            let _ = ready.send(());
+            while let Ok(job) = erx.recv() {
+                let before = rt.compiled_count();
+                let t0 = Instant::now();
+                let rows = job.jobs.len();
+                let _out = rt.infer(job.ms_name, rows, &job.inputs)?;
+                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let cold = rt.compiled_count() > before;
+                let ms_id = cat2.ms_id(job.ms_name).unwrap();
+                let _ = back.send(Msg::Done(StageDone {
+                    jobs: job.jobs,
+                    ms_id,
+                    exec_ms,
+                    cold,
+                }));
+            }
+            Ok(())
+        }));
+    }
+
+    // wait for all executors to finish pre-warming
+    drop(ready_tx);
+    for _ in 0..p.executors.max(1) {
+        let _ = ready_rx.recv();
+    }
+
+    // --- load generator -------------------------------------------------
+    {
+        let gtx = tx.clone();
+        let chains = p.chains.clone();
+        let rate = p.rate;
+        let dur = p.duration_s;
+        let seed = p.cfg.seed;
+        std::thread::spawn(move || {
+            let mut rng = Pcg::new(seed ^ 0x9e37);
+            let start = Instant::now();
+            let mut i = 0usize;
+            while start.elapsed().as_secs_f64() < dur {
+                let gap = rng.exponential(1.0 / rate.max(0.1));
+                std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+                let chain = chains[i % chains.len()];
+                i += 1;
+                if gtx
+                    .send(Msg::Arrival {
+                        chain,
+                        t: Instant::now(),
+                    })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            let _ = gtx.send(Msg::GenDone);
+        });
+    }
+
+    // --- ticker ----------------------------------------------------------
+    {
+        let ttx = tx.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_millis(5));
+            if ttx.send(Msg::Tick).is_err() {
+                return;
+            }
+        });
+    }
+    drop(tx);
+
+    // --- coordinator loop -------------------------------------------------
+    let mut jobs: Vec<LiveJob> = Vec::new();
+    let mut bufs: HashMap<MsId, StageBuf> = HashMap::new();
+    let mut responses: Vec<f64> = Vec::new();
+    let mut violations = 0u64;
+    let mut batches = 0u64;
+    let mut batched_jobs = 0u64;
+    let mut cold_compiles = 0u64;
+    let mut stage_exec: HashMap<&'static str, (f64, u64)> = HashMap::new();
+    let mut rr = 0usize; // round-robin over executors
+    let mut gen_done = false;
+    let mut in_flight = 0u64;
+    let mut rng = Pcg::new(p.cfg.seed ^ 0x51f3);
+    let start = Instant::now();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Arrival { chain, t } => {
+                let id = jobs.len() as u64;
+                jobs.push(LiveJob {
+                    chain,
+                    arrival: t,
+                    stage_idx: 0,
+                    enqueued: t,
+                    exec_ms_total: 0.0,
+                    cold_hit: false,
+                });
+                in_flight += 1;
+                let ms_id = cat.chains[chain].stages[0];
+                let buf = bufs.entry(ms_id).or_insert(StageBuf {
+                    jobs: Vec::new(),
+                    oldest: None,
+                });
+                if buf.oldest.is_none() {
+                    buf.oldest = Some(t);
+                }
+                buf.jobs.push(id);
+                if buf.jobs.len() >= plan.batch_for(ms_id) {
+                    flush_buf(&cat, &exec_txs, ms_id, buf, &mut rr, &mut rng,
+                              &mut batches, &mut batched_jobs);
+                }
+            }
+            Msg::Done(done) => {
+                let n = done.jobs.len().max(1) as u64;
+                let e = stage_exec
+                    .entry(cat.microservices[done.ms_id].name)
+                    .or_insert((0.0, 0));
+                e.0 += done.exec_ms;
+                e.1 += 1;
+                if done.cold {
+                    cold_compiles += 1;
+                }
+                for jid in done.jobs {
+                    let j = &mut jobs[jid as usize];
+                    j.exec_ms_total += done.exec_ms / n as f64;
+                    j.cold_hit |= done.cold;
+                    j.stage_idx += 1;
+                    if j.stage_idx >= cat.chains[j.chain].stages.len() {
+                        // complete
+                        let resp = j.arrival.elapsed().as_secs_f64() * 1e3;
+                        responses.push(resp);
+                        if resp > cat.chains[j.chain].slo_ms {
+                            violations += 1;
+                        }
+                        in_flight -= 1;
+                    } else {
+                        let ms_id = cat.chains[j.chain].stages[j.stage_idx];
+                        j.enqueued = Instant::now();
+                        let buf = bufs.entry(ms_id).or_insert(StageBuf {
+                            jobs: Vec::new(),
+                            oldest: None,
+                        });
+                        if buf.oldest.is_none() {
+                            buf.oldest = Some(j.enqueued);
+                        }
+                        buf.jobs.push(jid);
+                        if buf.jobs.len() >= plan.batch_for(ms_id) {
+                            flush_buf(&cat, &exec_txs, ms_id, buf, &mut rr, &mut rng,
+                                      &mut batches, &mut batched_jobs);
+                        }
+                    }
+                }
+                if gen_done && in_flight == 0 {
+                    break;
+                }
+            }
+            Msg::Tick => {
+                // deadline-based flush: don't hold a batch longer than
+                // flush_frac x the stage's allocated slack
+                let ms_ids: Vec<MsId> = bufs.keys().copied().collect();
+                for ms_id in ms_ids {
+                    let deadline_ms = (plan.s_r_for(ms_id) - plan.exec_ms[&ms_id]).max(1.0)
+                        * p.flush_frac;
+                    let buf = bufs.get_mut(&ms_id).unwrap();
+                    let stale = buf
+                        .oldest
+                        .map(|o| o.elapsed().as_secs_f64() * 1e3 > deadline_ms)
+                        .unwrap_or(false);
+                    if stale || (!p.batching && !buf.jobs.is_empty()) {
+                        flush_buf(&cat, &exec_txs, ms_id, buf, &mut rr, &mut rng,
+                                  &mut batches, &mut batched_jobs);
+                    }
+                }
+                if gen_done && in_flight == 0 {
+                    break;
+                }
+            }
+            Msg::GenDone => {
+                gen_done = true;
+                if in_flight == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    drop(exec_txs);
+    for h in exec_handles {
+        let _ = h.join();
+    }
+
+    responses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let duration_s = start.elapsed().as_secs_f64();
+    let n = responses.len().max(1) as f64;
+    Ok(ServeReport {
+        jobs: responses.len() as u64,
+        duration_s,
+        throughput_rps: responses.len() as f64 / duration_s.max(1e-9),
+        median_ms: stats::percentile_sorted(&responses, 50.0),
+        p99_ms: stats::percentile_sorted(&responses, 99.0),
+        mean_ms: stats::mean(&responses),
+        slo_violation_pct: 100.0 * violations as f64 / n,
+        batches,
+        avg_batch: if batches == 0 {
+            0.0
+        } else {
+            batched_jobs as f64 / batches as f64
+        },
+        cold_compiles,
+        stage_exec_ms: stage_exec
+            .into_iter()
+            .map(|(k, (sum, cnt))| (k, sum / cnt.max(1) as f64))
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_params_sane() {
+        let p = ServeParams::quick(10.0, 1.0);
+        assert!(p.batching);
+        assert_eq!(p.chains.len(), 2);
+    }
+
+    // End-to-end serve() tests require artifacts + PJRT and live in
+    // rust/tests/test_server_live.rs.
+}

@@ -1,0 +1,231 @@
+//! Arrival traces: Poisson, Wiki-like diurnal, WITS-like bursty (§5.3).
+//!
+//! Rust re-implements the same generator formulas as
+//! `python/compile/traces.py`, and can also *load* the exact traces the
+//! Python side exported to `artifacts/traces/*.json` (used by Fig. 6 so
+//! predictors are scored on the series the LSTM was trained against).
+//!
+//! A [`Trace`] is a per-second arrival-rate series; [`Trace::arrivals`]
+//! expands it into concrete request timestamps via a piecewise-constant
+//! Poisson process.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::{Micros, MICROS_PER_S};
+
+/// A per-second arrival-rate series (requests/second).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub rate_per_s: Vec<f64>,
+}
+
+impl Trace {
+    pub fn duration_s(&self) -> usize {
+        self.rate_per_s.len()
+    }
+
+    pub fn avg_rate(&self) -> f64 {
+        crate::util::stats::mean(&self.rate_per_s)
+    }
+
+    pub fn peak_rate(&self) -> f64 {
+        self.rate_per_s.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Scale the whole series by a factor (to match cluster capacity).
+    pub fn scaled(&self, factor: f64) -> Trace {
+        Trace {
+            name: format!("{}x{factor:.3}", self.name),
+            rate_per_s: self.rate_per_s.iter().map(|r| r * factor).collect(),
+        }
+    }
+
+    /// Truncate/extend (by tiling) to `duration_s` seconds.
+    pub fn resized(&self, duration_s: usize) -> Trace {
+        let mut rate = Vec::with_capacity(duration_s);
+        for i in 0..duration_s {
+            rate.push(self.rate_per_s[i % self.rate_per_s.len()]);
+        }
+        Trace {
+            name: self.name.clone(),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Expand into concrete arrival timestamps (µs): within each second,
+    /// draw a Poisson count at that second's rate and scatter uniformly.
+    pub fn arrivals(&self, rng: &mut Pcg) -> Vec<Micros> {
+        let mut out = Vec::new();
+        for (sec, &rate) in self.rate_per_s.iter().enumerate() {
+            let n = rng.poisson(rate);
+            let base = sec as u64 * MICROS_PER_S;
+            for _ in 0..n {
+                out.push(base + (rng.f64() * MICROS_PER_S as f64) as u64);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Load a trace exported by `python/compile/aot.py`.
+    pub fn load_json(path: &Path) -> Result<Trace> {
+        let j = Json::parse_file(path)?;
+        Ok(Trace {
+            name: j.get("name")?.as_str()?.to_string(),
+            rate_per_s: j.get("rate_per_s")?.as_f64_vec()?,
+        })
+    }
+
+    /// Constant-rate Poisson trace (paper: synthetic λ = 50).
+    pub fn poisson(lambda: f64, duration_s: usize) -> Trace {
+        Trace {
+            name: format!("poisson{lambda}"),
+            rate_per_s: vec![lambda; duration_s],
+        }
+    }
+
+    /// WITS-like bursty trace — same formula as python traces.wits_trace.
+    pub fn wits(duration_s: usize, seed: u64) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let mut rate: Vec<f64> = (0..duration_s)
+            .map(|t| {
+                let base = 230.0
+                    * (1.0 + 0.20 * (2.0 * std::f64::consts::PI * t as f64 / 1800.0).sin());
+                base * rng.lognormal(0.0, 0.12)
+            })
+            .collect();
+        // rare sharp spikes
+        let mut pos = 0.0f64;
+        loop {
+            pos += rng.exponential(500.0);
+            if pos >= duration_s as f64 {
+                break;
+            }
+            let width = rng.range(20.0, 60.0);
+            let amp = rng.range(650.0, 950.0);
+            let sigma = width / 2.355;
+            let lo = ((pos - 4.0 * sigma).max(0.0)) as usize;
+            let hi = ((pos + 4.0 * sigma) as usize).min(duration_s);
+            for (t, r) in rate.iter_mut().enumerate().take(hi).skip(lo) {
+                let d = (t as f64 - pos) / sigma;
+                *r += amp * (-0.5 * d * d).exp();
+            }
+        }
+        for r in rate.iter_mut() {
+            *r = r.clamp(1.0, 1250.0);
+        }
+        Trace {
+            name: "wits".to_string(),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Wiki-like diurnal trace — same formula as python traces.wiki_trace.
+    pub fn wiki(duration_s: usize, seed: u64) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let rate = (0..duration_s)
+            .map(|t| {
+                let tf = t as f64;
+                let det = 1500.0
+                    * (1.0
+                        + 0.35 * (2.0 * std::f64::consts::PI * tf / 3600.0).sin()
+                        + 0.12 * (2.0 * std::f64::consts::PI * tf / 600.0 + 1.0).sin());
+                (det * rng.lognormal(0.0, 0.08)).max(1.0)
+            })
+            .collect();
+        Trace {
+            name: "wiki".to_string(),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Max arrival rate per adjacent window (paper §4.5: W_s = 5 s).
+    pub fn window_maxima(&self, window_s: usize) -> Vec<f64> {
+        self.rate_per_s
+            .chunks_exact(window_s)
+            .map(|w| w.iter().copied().fold(0.0, f64::max))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wits_statistics_match_paper() {
+        let t = Trace::wits(4000, 1316);
+        let avg = t.avg_rate();
+        let peak = t.peak_rate();
+        assert!((200.0..=360.0).contains(&avg), "avg {avg}");
+        assert!((1000.0..=1300.0).contains(&peak), "peak {peak}");
+        let mut v = t.rate_per_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = crate::util::stats::percentile_sorted(&v, 50.0);
+        assert!(peak / median >= 3.5, "ratio {}", peak / median);
+    }
+
+    #[test]
+    fn wiki_statistics_match_paper() {
+        let t = Trace::wiki(4000, 2025);
+        let avg = t.avg_rate();
+        assert!((1200.0..=1800.0).contains(&avg), "avg {avg}");
+        assert!(t.peak_rate() / avg < 2.5);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Trace::wits(500, 1);
+        let b = Trace::wits(500, 1);
+        assert_eq!(a.rate_per_s, b.rate_per_s);
+        let c = Trace::wits(500, 2);
+        assert_ne!(a.rate_per_s, c.rate_per_s);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_rate_correct() {
+        let t = Trace::poisson(100.0, 50);
+        let mut rng = Pcg::new(3);
+        let arr = t.arrivals(&mut rng);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        let rate = arr.len() as f64 / 50.0;
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+        assert!(arr.iter().all(|&a| a < 50 * MICROS_PER_S));
+    }
+
+    #[test]
+    fn scaling_and_resizing() {
+        let t = Trace::poisson(10.0, 20);
+        let s = t.scaled(2.0);
+        assert_eq!(s.rate_per_s[0], 20.0);
+        let r = t.resized(45);
+        assert_eq!(r.duration_s(), 45);
+        assert_eq!(r.rate_per_s[44], 10.0);
+    }
+
+    #[test]
+    fn window_maxima_basics() {
+        let t = Trace {
+            name: "x".into(),
+            rate_per_s: vec![1.0, 5.0, 2.0, 8.0, 3.0, 1.0],
+        };
+        assert_eq!(t.window_maxima(2), vec![5.0, 8.0, 3.0]);
+        assert_eq!(t.window_maxima(3), vec![5.0, 8.0]);
+    }
+
+    #[test]
+    fn loads_python_exported_trace_if_present() {
+        let p = std::path::Path::new("artifacts/traces/wits.json");
+        if p.exists() {
+            let t = Trace::load_json(p).unwrap();
+            assert_eq!(t.name, "wits");
+            assert!(t.duration_s() >= 1000);
+            assert!((200.0..=360.0).contains(&t.avg_rate()));
+        }
+    }
+}

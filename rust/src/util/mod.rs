@@ -1,0 +1,105 @@
+//! Substrate utilities built from scratch for this repo: PRNG,
+//! statistics, JSON codec, time units, and a mini property-test harness.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Simulation / serving time in microseconds. All latencies in the paper
+/// are milliseconds; µs resolution keeps sub-ms scheduling overheads exact.
+pub type Micros = u64;
+
+pub const MICROS_PER_MS: u64 = 1_000;
+pub const MICROS_PER_S: u64 = 1_000_000;
+
+#[inline]
+pub fn ms(v: f64) -> Micros {
+    (v * MICROS_PER_MS as f64).round().max(0.0) as Micros
+}
+
+#[inline]
+pub fn secs(v: f64) -> Micros {
+    (v * MICROS_PER_S as f64).round().max(0.0) as Micros
+}
+
+#[inline]
+pub fn to_ms(t: Micros) -> f64 {
+    t as f64 / MICROS_PER_MS as f64
+}
+
+#[inline]
+pub fn to_secs(t: Micros) -> f64 {
+    t as f64 / MICROS_PER_S as f64
+}
+
+/// Mini property-test harness (proptest substitute).
+///
+/// Runs `cases` random trials; on failure reports the seed so the case can
+/// be replayed deterministically with [`prop::replay`].
+pub mod prop {
+    use super::rng::Pcg;
+
+    pub type PropResult = Result<(), String>;
+
+    pub fn assert_prop(cond: bool, msg: &str) -> PropResult {
+        if cond {
+            Ok(())
+        } else {
+            Err(msg.to_string())
+        }
+    }
+
+    /// Run `f` against `cases` independently-seeded generators; panic with
+    /// the failing seed on the first violation.
+    pub fn check<F>(name: &str, cases: u64, mut f: F)
+    where
+        F: FnMut(&mut Pcg) -> PropResult,
+    {
+        for case in 0..cases {
+            let seed = 0x5eed_0000 + case;
+            let mut rng = Pcg::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property {name:?} failed on seed {seed:#x}: {msg}");
+            }
+        }
+    }
+
+    /// Replay a single failing seed (for debugging).
+    pub fn replay<F>(seed: u64, mut f: F)
+    where
+        F: FnMut(&mut Pcg) -> PropResult,
+    {
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("replay of seed {seed:#x} failed: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions() {
+        assert_eq!(ms(1.5), 1_500);
+        assert_eq!(secs(2.0), 2_000_000);
+        assert_eq!(to_ms(2_500), 2.5);
+        assert_eq!(to_secs(500_000), 0.5);
+        assert_eq!(ms(-1.0), 0);
+    }
+
+    #[test]
+    fn prop_harness_passes() {
+        prop::check("uniform_in_range", 50, |rng| {
+            let x = rng.range(3.0, 5.0);
+            prop::assert_prop((3.0..5.0).contains(&x), "range bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn prop_harness_reports_failure() {
+        prop::check("always_fails", 5, |_| prop::assert_prop(false, "nope"));
+    }
+}

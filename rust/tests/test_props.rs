@@ -1,0 +1,245 @@
+//! Property-based tests on coordinator invariants (own mini-proptest,
+//! see `fifer::util::prop`): routing, batching, bin-packing, queues,
+//! slack distribution, and whole-sim conservation.
+
+use fifer::config::{Policy, RmConfig, SlackPolicy, SystemConfig};
+use fifer::coordinator::queue::{Ordering as QOrder, QueueEntry, StageQueue};
+use fifer::coordinator::slack::{batch_size, distribute_slack, SlackPlan};
+use fifer::coordinator::state::StateStore;
+use fifer::model::Catalog;
+use fifer::sim::{Engine, SimParams};
+use fifer::trace::Trace;
+use fifer::util::prop::{assert_prop, check};
+use fifer::util::rng::Pcg;
+
+#[test]
+fn prop_lsf_pops_in_key_order() {
+    check("lsf_order", 200, |rng| {
+        let mut q = StageQueue::new(QOrder::LeastSlackFirst);
+        let n = 1 + rng.below(200);
+        for i in 0..n {
+            q.push(QueueEntry {
+                job_id: i as u64,
+                lsf_key: rng.next_u64() % 10_000,
+                enqueued: i as u64,
+                seq: i as u64,
+            });
+        }
+        let mut last = 0u64;
+        while let Some(e) = q.pop() {
+            assert_prop(e.lsf_key >= last, "keys must be non-decreasing")?;
+            last = e.lsf_key;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_queue_conserves_entries() {
+    check("queue_conservation", 200, |rng| {
+        let order = if rng.f64() < 0.5 {
+            QOrder::Fifo
+        } else {
+            QOrder::LeastSlackFirst
+        };
+        let mut q = StageQueue::new(order);
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        for i in 0..500 {
+            if rng.f64() < 0.6 {
+                q.push(QueueEntry {
+                    job_id: i,
+                    lsf_key: rng.next_u64() % 1000,
+                    enqueued: i,
+                    seq: i,
+                });
+                pushed += 1;
+            } else if q.pop().is_some() {
+                popped += 1;
+            }
+        }
+        let (p, o) = q.counters();
+        assert_prop(p == pushed && o == popped, "counters drifted")?;
+        assert_prop(q.len() == (pushed - popped) as usize, "len != pushed-popped")
+    });
+}
+
+#[test]
+fn prop_binpack_never_exceeds_node_capacity() {
+    check("binpack_capacity", 100, |rng| {
+        let nodes = 2 + rng.below(8);
+        let cores = 2 + rng.below(16);
+        let mut store = StateStore::new(nodes, cores, 0.5);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..400 {
+            if rng.f64() < 0.7 {
+                if let Some(cid) = store.spawn(rng.below(5), 1 + rng.below(8), step, 0, true) {
+                    live.push(cid);
+                }
+            } else if !live.is_empty() {
+                let cid = live.swap_remove(rng.below(live.len()));
+                store.remove(cid);
+            }
+            for n in &store.nodes {
+                assert_prop(
+                    n.alloc_cores <= n.total_cores + 1e-9,
+                    "node over capacity",
+                )?;
+                assert_prop(n.alloc_cores >= -1e-9, "negative allocation")?;
+            }
+        }
+        // index consistency
+        let indexed: usize = store.by_stage.values().map(|v| v.len()).sum();
+        assert_prop(indexed == store.containers.len(), "stage index drift")
+    });
+}
+
+#[test]
+fn prop_greedy_placement_is_most_loaded_first() {
+    check("greedy_placement", 100, |rng| {
+        let mut store = StateStore::new(4, 8, 0.5);
+        for step in 0..40 {
+            let before: Vec<f64> = store.nodes.iter().map(|n| n.free_cores()).collect();
+            if let Some(cid) = store.spawn(rng.below(3), 1, step, 0, false) {
+                let node = store.containers[&cid].node;
+                // chosen node must have had the minimal feasible free cores
+                let min_feasible = before
+                    .iter()
+                    .copied()
+                    .filter(|&f| f >= 0.5 - 1e-9)
+                    .fold(f64::INFINITY, f64::min);
+                assert_prop(
+                    (before[node] - min_feasible).abs() < 1e-9,
+                    "not most-loaded feasible node",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_size_bounds() {
+    check("batch_size_bounds", 300, |rng| {
+        let slack = rng.range(0.0, 2000.0);
+        let exec = rng.range(0.01, 300.0);
+        let maxb = 1 + rng.below(64);
+        let b = batch_size(slack, exec, maxb);
+        assert_prop((1..=maxb).contains(&b), "batch out of bounds")?;
+        // never exceed what slack admits (by Eq. 1)
+        if slack / exec >= 1.0 {
+            assert_prop(b as f64 <= slack / exec + 1e-9, "batch exceeds slack/exec")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slack_distribution_sums_to_total() {
+    let cat = Catalog::paper();
+    check("slack_sum", 100, |rng| {
+        let chain = rng.below(cat.chains.len());
+        let policy = if rng.f64() < 0.5 {
+            SlackPolicy::Proportional
+        } else {
+            SlackPolicy::EqualDivision
+        };
+        let slacks = distribute_slack(&cat, chain, policy, true);
+        let total: f64 = slacks.iter().sum();
+        assert_prop(
+            (total - cat.chains[chain].slack_ms).abs() < 1e-6,
+            "distributed slack != total slack",
+        )?;
+        assert_prop(slacks.iter().all(|&s| s >= 0.0), "negative stage slack")
+    });
+}
+
+#[test]
+fn prop_plan_batches_within_limits() {
+    let cat = Catalog::paper();
+    check("plan_batches", 50, |rng| {
+        let mix = &cat.mixes[rng.below(cat.mixes.len())];
+        let mut rm = RmConfig::paper(Policy::Fifer);
+        rm.max_batch = 1 + rng.below(64);
+        let plan = SlackPlan::build(&cat, &mix.chains, &rm, true);
+        for &ms in &cat.mix_stages(mix) {
+            let b = plan.batch_for(ms);
+            assert_prop((1..=rm.max_batch).contains(&b), "plan batch out of range")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_conserves_jobs_across_policies() {
+    // randomized short sims: every arrival is either queued, in flight,
+    // or completed at drain end; store invariants hold.
+    let cat = Catalog::paper();
+    check("sim_conservation", 12, |rng: &mut Pcg| {
+        let policy = Policy::ALL[rng.below(5)];
+        let mix = &cat.mixes[rng.below(3)];
+        let lambda = 2.0 + rng.f64() * 30.0;
+        let dur = 30 + rng.below(60);
+        let mut cfg = SystemConfig::prototype(policy);
+        cfg.seed = rng.next_u64();
+        cfg.rm.idle_timeout_s = 30.0 + rng.f64() * 120.0;
+        let p = SimParams {
+            cfg,
+            chains: mix.chains.clone(),
+            trace: Trace::poisson(lambda, dur),
+            drain_s: 40.0,
+        };
+        let eng = Engine::new(p);
+        let rec = eng.run();
+        assert_prop(!rec.jobs.is_empty(), "no jobs completed")?;
+        // stage timeline sanity on every record
+        for j in rec.jobs.iter().take(500) {
+            let mut prev_end = j.arrival;
+            for s in &j.stages {
+                assert_prop(s.enqueued >= prev_end, "stage enqueued before previous end")?;
+                assert_prop(s.exec_start >= s.enqueued, "exec before enqueue")?;
+                assert_prop(s.exec_end >= s.exec_start, "negative exec")?;
+                assert_prop(s.cold_wait <= s.queue_wait(), "cold > queue wait")?;
+                prev_end = s.exec_end;
+            }
+            assert_prop(j.completion == prev_end, "completion != last stage end")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_arrivals_sorted_and_in_range() {
+    check("trace_arrivals", 50, |rng| {
+        let dur = 5 + rng.below(100);
+        let t = Trace::wits(dur, rng.next_u64());
+        let mut r = Pcg::new(rng.next_u64());
+        let arr = t.arrivals(&mut r);
+        assert_prop(arr.windows(2).all(|w| w[0] <= w[1]), "unsorted arrivals")?;
+        assert_prop(
+            arr.iter().all(|&a| a < (dur as u64) * 1_000_000),
+            "arrival outside trace",
+        )
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_time() {
+    use fifer::config::ClusterConfig;
+    use fifer::energy::NodeEnergy;
+    check("energy_monotone", 100, |rng| {
+        let cfg = ClusterConfig::prototype();
+        let mut n = NodeEnergy::new();
+        let mut t = 0u64;
+        let mut last = 0.0f64;
+        for _ in 0..50 {
+            t += (rng.f64() * 30e6) as u64;
+            let busy = rng.f64() * 16.0;
+            let alloc = busy + rng.f64() * (16.0 - busy);
+            n.update(t, busy, alloc, &cfg);
+            assert_prop(n.energy_wh() >= last - 1e-12, "energy decreased")?;
+            last = n.energy_wh();
+        }
+        Ok(())
+    });
+}

