@@ -11,7 +11,7 @@
 //! at enqueue) is equivalent and keeps the heap stable.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
 use crate::util::Micros;
 
@@ -38,6 +38,12 @@ pub struct StageQueue {
     order: Ordering,
     fifo: VecDeque<QueueEntry>,
     heap: BinaryHeap<Reverse<(Micros, u64, QueueEntryBits)>>,
+    /// LSF-mode mirror of waiting (enqueued, seq) keys (multiset, since
+    /// the LSF pop order is unrelated to enqueue order). Keeps the
+    /// running minimum so `oldest_enqueued` is O(log n) instead of an
+    /// O(n) heap scan — the queuing-delay monitor calls it per stage per
+    /// tick.
+    times: BTreeMap<(Micros, u64), u32>,
     pushed: u64,
     popped: u64,
 }
@@ -55,6 +61,7 @@ impl StageQueue {
             order,
             fifo: VecDeque::new(),
             heap: BinaryHeap::new(),
+            times: BTreeMap::new(),
             pushed: 0,
             popped: 0,
         }
@@ -64,14 +71,17 @@ impl StageQueue {
         self.pushed += 1;
         match self.order {
             Ordering::Fifo => self.fifo.push_back(e),
-            Ordering::LeastSlackFirst => self.heap.push(Reverse((
-                e.lsf_key,
-                e.seq,
-                QueueEntryBits {
-                    job_id: e.job_id,
-                    enqueued: e.enqueued,
-                },
-            ))),
+            Ordering::LeastSlackFirst => {
+                self.heap.push(Reverse((
+                    e.lsf_key,
+                    e.seq,
+                    QueueEntryBits {
+                        job_id: e.job_id,
+                        enqueued: e.enqueued,
+                    },
+                )));
+                *self.times.entry((e.enqueued, e.seq)).or_insert(0) += 1;
+            }
         }
     }
 
@@ -79,6 +89,12 @@ impl StageQueue {
         let e = match self.order {
             Ordering::Fifo => self.fifo.pop_front(),
             Ordering::LeastSlackFirst => self.heap.pop().map(|Reverse((key, seq, bits))| {
+                if let Some(n) = self.times.get_mut(&(bits.enqueued, seq)) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.times.remove(&(bits.enqueued, seq));
+                    }
+                }
                 QueueEntry {
                     job_id: bits.job_id,
                     lsf_key: key,
@@ -105,10 +121,11 @@ impl StageQueue {
     }
 
     /// Oldest enqueue time still waiting (for queuing-delay monitoring).
+    /// O(1) for FIFO; O(log n) for LSF via the running-minimum mirror.
     pub fn oldest_enqueued(&self) -> Option<Micros> {
         match self.order {
             Ordering::Fifo => self.fifo.front().map(|e| e.enqueued),
-            Ordering::LeastSlackFirst => self.heap.iter().map(|Reverse((_, _, b))| b.enqueued).min(),
+            Ordering::LeastSlackFirst => self.times.keys().next().map(|&(t, _)| t),
         }
     }
 
@@ -178,6 +195,26 @@ mod tests {
         assert_eq!(pushed, 10);
         assert_eq!(popped, 4);
         assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn oldest_enqueued_tracks_interleaved_pops() {
+        // the LSF pop order is unrelated to enqueue order, so the
+        // running-minimum mirror must survive arbitrary interleavings
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        for i in 0..50u64 {
+            q.push(e(i, (i * 37) % 11, i)); // enqueued = 10*i
+        }
+        let mut waiting: Vec<Micros> = (0..50).map(|i| i * 10).collect();
+        while let Some(popped) = {
+            let oldest = q.oldest_enqueued();
+            assert_eq!(oldest, waiting.iter().copied().min());
+            q.pop()
+        } {
+            let pos = waiting.iter().position(|&t| t == popped.enqueued).unwrap();
+            waiting.swap_remove(pos);
+        }
+        assert_eq!(q.oldest_enqueued(), None);
     }
 
     #[test]

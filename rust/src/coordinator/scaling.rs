@@ -72,6 +72,13 @@ pub fn proactive_scale(
     needed.saturating_sub(live_containers)
 }
 
+/// Cluster-capacity guard (see `RmConfig::max_stage_fraction`): the
+/// maximum number of container slots a single stage may hold. Shared by
+/// the simulator and any live scaler so both enforce the same ceiling.
+pub fn stage_cap(max_containers: usize, max_stage_fraction: f64) -> usize {
+    ((max_containers as f64 * max_stage_fraction) as usize).max(1)
+}
+
 /// SBatch's fixed pool size (§5.3): sized once from the trace's average
 /// arrival rate with a small headroom factor, never scaled after.
 pub fn sbatch_pool(
@@ -153,6 +160,13 @@ mod tests {
             proactive_scale(100.0, 8, 100.0, 0.25, 0)
                 < proactive_scale(100.0, 1, 100.0, 0.25, 0)
         );
+    }
+
+    #[test]
+    fn stage_cap_floor() {
+        assert_eq!(stage_cap(4992, 0.5), 2496);
+        assert_eq!(stage_cap(1, 0.1), 1); // never below one container
+        assert_eq!(stage_cap(0, 0.5), 1);
     }
 
     #[test]

@@ -11,8 +11,59 @@
 //! * **Node selection** — place new containers on the node with the
 //!   *least available cores* that still fits (the paper's modified
 //!   `MostRequestedPriority`, §4.4.2 / §5.1), consolidating for energy.
+//!
+//! # Indexed layout
+//!
+//! Both greedy decisions sit on the request critical path (one
+//! `pick_container` per dispatched request, one `pick_node` per spawn), so
+//! the store is *incrementally indexed* rather than scanned:
+//!
+//! * Containers live in a **slab arena** (`slots` + `free_list`). A
+//!   container id encodes `(spawn_seq << 32) | slot`, so ids stay unique
+//!   and monotone in spawn order (the dispatch tie-breaker) while slots are
+//!   reused; a stale id aimed at a recycled slot fails the `id` check
+//!   instead of aliasing the new tenant.
+//! * `StageTable::ready` — one `BTreeSet<(free_slots, Reverse(node
+//!   containers), id)>` per stage holding exactly the warm containers with
+//!   at least one free slot. `pick_container` is its first element:
+//!   O(log n) maintenance, O(log n) query, instead of an O(pool) scan.
+//! * `node_index` — a `BTreeSet<(free_cores_bits, node_id)>` over all
+//!   nodes. `pick_node` is a range query from the required share upward:
+//!   the first hit is the most-packed node that still fits.
+//! * `StageTable::{warm_free, starting, live}` — running aggregates so
+//!   `warm_free_slots` / `starting_slots` / `stage_containers` are O(1)
+//!   (the `Monitor` tick reads them for every stage every interval).
+//! * `StageTable::idle` and the global `idle_lru` — ordered
+//!   `(last_used, id)` sets over idle-and-empty containers, so
+//!   `idle_since` walks only its result set and `lru_idle_since` is the
+//!   first element.
+//! * `node_busy` counts Busy containers per node, and
+//!   `Node::{containers, alloc_cores}` are **derived from the container
+//!   count** (count × `cpu_per_container`) at every transition — never by
+//!   repeated f64 subtraction, which drifted on long runs.
+//!
+//! # Index invariants (checked by [`StateStore::check_consistency`])
+//!
+//! For every live container `c` in slot `s`:
+//!
+//! * `s.stage_key = Some((c.free_slots(), Reverse(node.containers), c.id))`
+//!   iff `c.is_warm() && c.free_slots() > 0`, and that key is present in
+//!   `stages[c.ms_id].ready`;
+//! * `s.idle_key = Some((c.last_used, c.id))` iff `c.state == Idle &&
+//!   c.local.is_empty()`, present in both `stages[c.ms_id].idle` and
+//!   `idle_lru`;
+//! * `s.warm_free` / `s.starting` / `s.busy` equal `c`'s current
+//!   contribution to the per-stage and per-node aggregates.
+//!
+//! Every mutation goes through [`StateStore::refresh`] (single container)
+//! or [`StateStore::set_node_count`] + a member re-key (node membership
+//! change, which shifts the packing tie-breaker of *every* container on
+//! that node). The transition points are exactly: `spawn`, `remove`,
+//! [`StateStore::dispatch`], [`StateStore::begin_batch`],
+//! [`StateStore::finish_batch`], [`StateStore::warm_up`].
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::model::MsId;
 use crate::util::Micros;
@@ -64,7 +115,9 @@ impl Container {
     }
 }
 
-/// One server (VM / bare-metal node).
+/// One server (VM / bare-metal node). `containers` is authoritative;
+/// `alloc_cores` is kept equal to `containers × cpu_per_container` at
+/// every transition (derived, so it cannot drift).
 #[derive(Debug, Clone)]
 pub struct Node {
     pub id: usize,
@@ -79,22 +132,89 @@ impl Node {
     }
 }
 
-/// The state store: all containers + nodes, indexed per stage.
+/// Batch kickoff info returned by [`StateStore::begin_batch`].
+#[derive(Debug, Clone)]
+pub struct BatchStart {
+    /// Job ids captured into this batch (everything queued locally).
+    pub jobs: Vec<u64>,
+    pub ms_id: MsId,
+    pub ready_at: Micros,
+    pub spawn_latency: Micros,
+    pub started_cold: bool,
+}
+
+/// Ordering key of the per-stage ready index: least free slots first,
+/// then most-packed node, then earliest-spawned container.
+type ReadyKey = (usize, Reverse<usize>, u64);
+/// Ordering key of the idle-LRU sets: least recently used first.
+type IdleKey = (Micros, u64);
+
+/// One container slot plus its cached index contributions (what this
+/// container currently adds to each index/aggregate — subtracted before
+/// a re-key so updates can never leak stale entries).
+#[derive(Debug)]
+struct Slot {
+    c: Container,
+    ready_key: Option<ReadyKey>,
+    idle_key: Option<IdleKey>,
+    warm_free: usize,
+    starting: usize,
+    busy: bool,
+}
+
+/// Per-stage indexes + running aggregates.
+#[derive(Debug, Default)]
+struct StageTable {
+    /// Warm containers with ≥1 free slot, dispatch order.
+    ready: BTreeSet<ReadyKey>,
+    /// Idle containers with an empty local queue, LRU order.
+    idle: BTreeSet<IdleKey>,
+    /// Live containers (warm + starting).
+    live: usize,
+    /// Σ free_slots over warm containers.
+    warm_free: usize,
+    /// Σ batch_size over Starting containers.
+    starting: usize,
+}
+
+/// The state store: all containers + nodes, incrementally indexed.
 #[derive(Debug)]
 pub struct StateStore {
-    pub containers: HashMap<u64, Container>,
-    /// Container ids per microservice (the per-stage pool).
-    pub by_stage: HashMap<MsId, Vec<u64>>,
+    slots: Vec<Option<Slot>>,
+    free_list: Vec<u32>,
+    live_count: usize,
     pub nodes: Vec<Node>,
+    /// Container ids hosted per node (re-keyed when the node's packing
+    /// count changes, since the dispatch tie-breaker includes it).
+    node_members: Vec<BTreeSet<u64>>,
+    /// Busy containers per node — feeds `node_loads` without a scan.
+    node_busy: Vec<usize>,
+    /// (free_cores bit pattern, node id): `pick_node` range-queries this.
+    node_index: BTreeSet<(u64, usize)>,
+    stages: Vec<StageTable>,
+    /// Global idle-LRU set (any stage) for pressure-driven reclaim.
+    idle_lru: BTreeSet<IdleKey>,
     pub cpu_per_container: f64,
-    next_cid: u64,
+    next_seq: u64,
+}
+
+/// Order-preserving bit pattern for a non-negative f64 (free cores).
+#[inline]
+fn f64_key(x: f64) -> u64 {
+    x.max(0.0).to_bits()
+}
+
+#[inline]
+fn slot_of(cid: u64) -> usize {
+    (cid & 0xffff_ffff) as usize
 }
 
 impl StateStore {
     pub fn new(nodes: usize, cores_per_node: usize, cpu_per_container: f64) -> StateStore {
-        StateStore {
-            containers: HashMap::new(),
-            by_stage: HashMap::new(),
+        let mut s = StateStore {
+            slots: Vec::new(),
+            free_list: Vec::new(),
+            live_count: 0,
             nodes: (0..nodes)
                 .map(|id| Node {
                     id,
@@ -103,25 +223,148 @@ impl StateStore {
                     containers: 0,
                 })
                 .collect(),
+            node_members: (0..nodes).map(|_| BTreeSet::new()).collect(),
+            node_busy: vec![0; nodes],
+            node_index: BTreeSet::new(),
+            stages: Vec::new(),
+            idle_lru: BTreeSet::new(),
             cpu_per_container,
-            next_cid: 1,
+            next_seq: 0,
+        };
+        for n in &s.nodes {
+            s.node_index.insert((f64_key(n.total_cores), n.id));
+        }
+        s
+    }
+
+    fn ensure_stage(&mut self, ms_id: MsId) {
+        while self.stages.len() <= ms_id {
+            self.stages.push(StageTable::default());
+        }
+    }
+
+    /// Free cores derived from the container count (never accumulated).
+    #[inline]
+    fn node_free(&self, node: usize) -> f64 {
+        let n = &self.nodes[node];
+        n.total_cores - n.containers as f64 * self.cpu_per_container
+    }
+
+    /// Move a node to a new container count, updating the packing index
+    /// and the derived `alloc_cores`.
+    fn set_node_count(&mut self, node: usize, count: usize) {
+        let old_key = (f64_key(self.node_free(node)), node);
+        self.node_index.remove(&old_key);
+        self.nodes[node].containers = count;
+        self.nodes[node].alloc_cores = count as f64 * self.cpu_per_container;
+        let new_key = (f64_key(self.node_free(node)), node);
+        self.node_index.insert(new_key);
+    }
+
+    /// Recompute one container's index membership from its current state,
+    /// replacing whatever it contributed before. O(log n).
+    fn refresh(&mut self, cid: u64) {
+        let slot = slot_of(cid);
+        let (ms_id, node) = {
+            let c = &self.slots[slot].as_ref().expect("refresh of dead slot").c;
+            debug_assert_eq!(c.id, cid);
+            (c.ms_id, c.node)
+        };
+        let node_count = self.nodes[node].containers;
+        let (
+            old_ready,
+            old_idle,
+            old_warm_free,
+            old_starting,
+            old_busy,
+            new_ready,
+            new_idle,
+            new_warm_free,
+            new_starting,
+            new_busy,
+        ) = {
+            let s = self.slots[slot].as_mut().unwrap();
+            let free = s.c.free_slots();
+            let warm = s.c.is_warm();
+            let new_ready = (warm && free > 0).then_some((free, Reverse(node_count), cid));
+            let new_idle = (s.c.state == CState::Idle && s.c.local.is_empty())
+                .then_some((s.c.last_used, cid));
+            let new_warm_free = if warm { free } else { 0 };
+            let new_starting = if s.c.state == CState::Starting {
+                s.c.batch_size
+            } else {
+                0
+            };
+            let new_busy = s.c.state == CState::Busy;
+            (
+                std::mem::replace(&mut s.ready_key, new_ready),
+                std::mem::replace(&mut s.idle_key, new_idle),
+                std::mem::replace(&mut s.warm_free, new_warm_free),
+                std::mem::replace(&mut s.starting, new_starting),
+                std::mem::replace(&mut s.busy, new_busy),
+                new_ready,
+                new_idle,
+                new_warm_free,
+                new_starting,
+                new_busy,
+            )
+        };
+        let st = &mut self.stages[ms_id];
+        if let Some(k) = old_ready {
+            st.ready.remove(&k);
+        }
+        if let Some(k) = new_ready {
+            st.ready.insert(k);
+        }
+        if let Some(k) = old_idle {
+            st.idle.remove(&k);
+            self.idle_lru.remove(&k);
+        }
+        if let Some(k) = new_idle {
+            st.idle.insert(k);
+            self.idle_lru.insert(k);
+        }
+        st.warm_free = st.warm_free + new_warm_free - old_warm_free;
+        st.starting = st.starting + new_starting - old_starting;
+        self.node_busy[node] =
+            self.node_busy[node] + new_busy as usize - old_busy as usize;
+    }
+
+    /// Re-key the ready-index entries of containers hosted on `node`
+    /// after its packing count changed. Only the `Reverse(node
+    /// containers)` tie-break component of a ready key embeds that count
+    /// — idle keys and aggregates are count-independent — so this touches
+    /// exactly the stale entries and nothing else.
+    fn refresh_node_members(&mut self, node: usize) {
+        let count = self.nodes[node].containers;
+        let members: Vec<u64> = self.node_members[node].iter().copied().collect();
+        for cid in members {
+            let slot = slot_of(cid);
+            let (old, new, ms_id) = {
+                let s = self.slots[slot].as_mut().unwrap();
+                let Some(old) = s.ready_key else { continue };
+                let new = (old.0, Reverse(count), old.2);
+                if new == old {
+                    continue;
+                }
+                s.ready_key = Some(new);
+                (old, new, s.c.ms_id)
+            };
+            let st = &mut self.stages[ms_id];
+            st.ready.remove(&old);
+            st.ready.insert(new);
         }
     }
 
     /// Greedy node selection: lowest-numbered node with the *least free
-    /// cores* that still fits one container (§4.4.2). None if cluster full.
+    /// cores* that still fits one container (§4.4.2). None if cluster
+    /// full. O(log nodes) via the packing index.
     pub fn pick_node(&self) -> Option<usize> {
-        let need = self.cpu_per_container;
-        self.nodes
-            .iter()
-            .filter(|n| n.free_cores() >= need - 1e-9)
-            .min_by(|a, b| {
-                a.free_cores()
-                    .partial_cmp(&b.free_cores())
-                    .unwrap()
-                    .then(a.id.cmp(&b.id))
-            })
-            .map(|n| n.id)
+        let thresh = f64_key(self.cpu_per_container - 1e-9);
+        self.node_index
+            .range((thresh, 0)..)
+            .next()
+            .map(|&(_, id)| id)
     }
 
     /// Spawn a container (Starting until `ready_at`). Returns its id, or
@@ -135,14 +378,19 @@ impl StateStore {
         cold: bool,
     ) -> Option<u64> {
         let node = self.pick_node()?;
-        let id = self.next_cid;
-        self.next_cid += 1;
-        self.nodes[node].alloc_cores += self.cpu_per_container;
-        self.nodes[node].containers += 1;
+        self.ensure_stage(ms_id);
+        let slot = match self.free_list.pop() {
+            Some(s) => s as usize,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.next_seq += 1;
+        let id = (self.next_seq << 32) | slot as u64;
         let ready_at = now + spawn_latency;
-        self.containers.insert(
-            id,
-            Container {
+        self.slots[slot] = Some(Slot {
+            c: Container {
                 id,
                 ms_id,
                 node,
@@ -160,23 +408,52 @@ impl StateStore {
                 last_used: now,
                 jobs_executed: 0,
             },
-        );
-        self.by_stage.entry(ms_id).or_default().push(id);
+            ready_key: None,
+            idle_key: None,
+            warm_free: 0,
+            starting: 0,
+            busy: false,
+        });
+        self.live_count += 1;
+        self.stages[ms_id].live += 1;
+        self.node_members[node].insert(id);
+        let count = self.nodes[node].containers;
+        self.set_node_count(node, count + 1);
+        // establish the newcomer's index entries, then re-key its
+        // neighbours' packing tie-breaks
+        self.refresh(id);
+        self.refresh_node_members(node);
         Some(id)
     }
 
     /// Remove a container and release its node resources.
     pub fn remove(&mut self, cid: u64) -> Option<Container> {
-        let c = self.containers.remove(&cid)?;
-        let node = &mut self.nodes[c.node];
-        node.alloc_cores = (node.alloc_cores - self.cpu_per_container).max(0.0);
-        node.containers = node.containers.saturating_sub(1);
-        if let Some(v) = self.by_stage.get_mut(&c.ms_id) {
-            if let Some(pos) = v.iter().position(|&x| x == cid) {
-                v.swap_remove(pos);
-            }
+        let slot = slot_of(cid);
+        match self.slots.get(slot)?.as_ref() {
+            Some(s) if s.c.id == cid => {}
+            _ => return None,
         }
-        Some(c)
+        let s = self.slots[slot].take().unwrap();
+        let (ms_id, node) = (s.c.ms_id, s.c.node);
+        let st = &mut self.stages[ms_id];
+        if let Some(k) = s.ready_key {
+            st.ready.remove(&k);
+        }
+        if let Some(k) = s.idle_key {
+            st.idle.remove(&k);
+            self.idle_lru.remove(&k);
+        }
+        st.warm_free -= s.warm_free;
+        st.starting -= s.starting;
+        st.live -= 1;
+        self.node_busy[node] -= s.busy as usize;
+        self.node_members[node].remove(&cid);
+        let count = self.nodes[node].containers;
+        self.set_node_count(node, count - 1);
+        self.refresh_node_members(node);
+        self.live_count -= 1;
+        self.free_list.push(slot as u32);
+        Some(s.c)
     }
 
     /// Greedy container selection (§4.4.1): among warm containers of this
@@ -185,75 +462,118 @@ impl StateStore {
     /// node. Work funnels onto crowded nodes, so containers on sparse
     /// nodes idle out first and their nodes can power off — the
     /// consolidation that drives the paper's Fig. 13 energy savings.
+    /// O(log n): first element of the stage's ready index.
     pub fn pick_container(&self, ms_id: MsId) -> Option<u64> {
-        let ids = self.by_stage.get(&ms_id)?;
-        ids.iter()
-            .filter_map(|&id| {
-                let c = &self.containers[&id];
-                (c.is_warm() && c.free_slots() > 0).then_some((
-                    c.free_slots(),
-                    std::cmp::Reverse(self.nodes[c.node].containers),
-                    id,
-                ))
-            })
-            .min()
-            .map(|(_, _, id)| id)
+        self.stages
+            .get(ms_id)?
+            .ready
+            .iter()
+            .next()
+            .map(|&(_, _, id)| id)
     }
 
-    /// Total free slots across warm containers of a stage.
+    /// Queue a request on a container and mark it used. Returns whether
+    /// the container was Idle (i.e. the caller should kick off a batch).
+    /// The container must be warm with a free slot — dispatch targets come
+    /// from [`StateStore::pick_container`].
+    pub fn dispatch(&mut self, cid: u64, job_id: u64, now: Micros) -> bool {
+        let slot = slot_of(cid);
+        let was_idle = {
+            let s = self.slots[slot].as_mut().expect("dispatch to dead container");
+            debug_assert_eq!(s.c.id, cid);
+            debug_assert!(s.c.is_warm() && s.c.free_slots() > 0);
+            s.c.local.push_back(job_id);
+            s.c.last_used = now;
+            s.c.state == CState::Idle
+        };
+        self.refresh(cid);
+        was_idle
+    }
+
+    /// Begin executing everything queued locally as one batch (continuous
+    /// batching). Transitions Idle → Busy and captures the batch.
+    pub fn begin_batch(&mut self, cid: u64) -> BatchStart {
+        let slot = slot_of(cid);
+        let start = {
+            let s = self.slots[slot].as_mut().expect("begin_batch on dead container");
+            debug_assert_eq!(s.c.id, cid);
+            debug_assert_eq!(s.c.state, CState::Idle);
+            debug_assert_eq!(s.c.cur_batch, 0);
+            s.c.state = CState::Busy;
+            s.c.cur_batch = s.c.local.len();
+            BatchStart {
+                jobs: s.c.local.iter().copied().collect(),
+                ms_id: s.c.ms_id,
+                ready_at: s.c.ready_at,
+                spawn_latency: s.c.spawn_latency,
+                started_cold: s.c.started_cold,
+            }
+        };
+        self.refresh(cid);
+        start
+    }
+
+    /// Complete the executing batch: drain its jobs, transition Busy →
+    /// Idle, mark used. Returns the stage and the drained job ids.
+    pub fn finish_batch(&mut self, cid: u64, now: Micros) -> (MsId, Vec<u64>) {
+        let slot = slot_of(cid);
+        let out = {
+            let s = self.slots[slot].as_mut().expect("finish_batch on dead container");
+            debug_assert_eq!(s.c.id, cid);
+            debug_assert_eq!(s.c.state, CState::Busy);
+            let n = s.c.cur_batch;
+            let jobs: Vec<u64> = s.c.local.drain(..n).collect();
+            s.c.cur_batch = 0;
+            s.c.jobs_executed += jobs.len() as u64;
+            s.c.last_used = now;
+            s.c.state = CState::Idle;
+            (s.c.ms_id, jobs)
+        };
+        self.refresh(cid);
+        out
+    }
+
+    /// Cold start finished: Starting → Idle. Returns the stage, or None
+    /// if the container was reclaimed (or its slot recycled) meanwhile.
+    pub fn warm_up(&mut self, cid: u64, now: Micros) -> Option<MsId> {
+        let slot = slot_of(cid);
+        let ms_id = match self.slots.get_mut(slot)?.as_mut() {
+            Some(s) if s.c.id == cid => {
+                s.c.state = CState::Idle;
+                s.c.last_used = now;
+                s.c.ms_id
+            }
+            _ => return None,
+        };
+        self.refresh(cid);
+        Some(ms_id)
+    }
+
+    /// Total free slots across warm containers of a stage. O(1).
     pub fn warm_free_slots(&self, ms_id: MsId) -> usize {
-        self.by_stage
-            .get(&ms_id)
-            .map(|ids| {
-                ids.iter()
-                    .map(|id| {
-                        let c = &self.containers[id];
-                        if c.is_warm() {
-                            c.free_slots()
-                        } else {
-                            0
-                        }
-                    })
-                    .sum()
-            })
-            .unwrap_or(0)
+        self.stages.get(ms_id).map(|s| s.warm_free).unwrap_or(0)
     }
 
-    /// Slots that will come online from still-starting containers.
+    /// Slots that will come online from still-starting containers. O(1).
     pub fn starting_slots(&self, ms_id: MsId) -> usize {
-        self.by_stage
-            .get(&ms_id)
-            .map(|ids| {
-                ids.iter()
-                    .map(|id| {
-                        let c = &self.containers[id];
-                        if c.state == CState::Starting {
-                            c.batch_size
-                        } else {
-                            0
-                        }
-                    })
-                    .sum()
-            })
-            .unwrap_or(0)
+        self.stages.get(ms_id).map(|s| s.starting).unwrap_or(0)
     }
 
-    /// Live container count for a stage (warm + starting).
+    /// Live container count for a stage (warm + starting). O(1).
     pub fn stage_containers(&self, ms_id: MsId) -> usize {
-        self.by_stage.get(&ms_id).map(|v| v.len()).unwrap_or(0)
+        self.stages.get(ms_id).map(|s| s.live).unwrap_or(0)
     }
 
-    /// Idle containers of a stage unused since before `cutoff`.
+    /// Idle containers of a stage unused since before `cutoff`, oldest
+    /// first. O(log n + |result|): a prefix of the stage's idle-LRU set.
     pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> Vec<u64> {
-        self.by_stage
-            .get(&ms_id)
-            .map(|ids| {
-                ids.iter()
-                    .filter(|&&id| {
-                        let c = &self.containers[&id];
-                        c.state == CState::Idle && c.local.is_empty() && c.last_used < cutoff
-                    })
-                    .copied()
+        self.stages
+            .get(ms_id)
+            .map(|s| {
+                s.idle
+                    .iter()
+                    .take_while(|&&(t, _)| t < cutoff)
+                    .map(|&(_, id)| id)
                     .collect()
             })
             .unwrap_or_default()
@@ -268,30 +588,160 @@ impl StateStore {
     }
 
     /// LRU idle container last used before `cutoff` (grace-period variant:
-    /// only containers idle "long enough" are eviction victims).
+    /// only containers idle "long enough" are eviction victims). O(log n).
     pub fn lru_idle_since(&self, cutoff: Micros) -> Option<u64> {
-        self.containers
-            .values()
-            .filter(|c| c.state == CState::Idle && c.local.is_empty() && c.last_used < cutoff)
-            .min_by_key(|c| (c.last_used, c.id))
-            .map(|c| c.id)
+        match self.idle_lru.iter().next() {
+            Some(&(t, id)) if t < cutoff => Some(id),
+            _ => None,
+        }
     }
 
     /// (busy_cores, alloc_cores) per node — feeds the energy model.
+    /// O(nodes) from the per-node counters; no container scan.
     pub fn node_loads(&self) -> Vec<(f64, f64)> {
-        let mut loads = vec![(0.0f64, 0.0f64); self.nodes.len()];
-        for c in self.containers.values() {
-            loads[c.node].1 += self.cpu_per_container;
-            if c.state == CState::Busy {
-                loads[c.node].0 += self.cpu_per_container;
-            }
-        }
-        loads
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                (
+                    self.node_busy[i] as f64 * self.cpu_per_container,
+                    n.containers as f64 * self.cpu_per_container,
+                )
+            })
+            .collect()
     }
 
     /// Total containers alive.
     pub fn total_containers(&self) -> usize {
-        self.containers.len()
+        self.live_count
+    }
+
+    /// Look up a live container by id (None for removed/recycled ids).
+    pub fn get(&self, cid: u64) -> Option<&Container> {
+        self.slots
+            .get(slot_of(cid))?
+            .as_ref()
+            .filter(|s| s.c.id == cid)
+            .map(|s| &s.c)
+    }
+
+    /// Iterate live containers in slot order (deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = &Container> {
+        self.slots.iter().filter_map(|s| s.as_ref().map(|s| &s.c))
+    }
+
+    /// Ids of all live containers in slot order (deterministic).
+    pub fn container_ids(&self) -> Vec<u64> {
+        self.iter().map(|c| c.id).collect()
+    }
+
+    /// Validate every index and aggregate against a from-scratch recompute
+    /// of the documented invariants. O(pool); test/debug use only.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        let mut stage_live = vec![0usize; self.stages.len()];
+        let mut stage_warm_free = vec![0usize; self.stages.len()];
+        let mut stage_starting = vec![0usize; self.stages.len()];
+        let mut stage_ready = vec![0usize; self.stages.len()];
+        let mut stage_idle = vec![0usize; self.stages.len()];
+        let mut node_count = vec![0usize; self.nodes.len()];
+        let mut node_busy = vec![0usize; self.nodes.len()];
+        for (slot, entry) in self.slots.iter().enumerate() {
+            let Some(s) = entry else { continue };
+            let c = &s.c;
+            live += 1;
+            if slot_of(c.id) != slot {
+                return Err(format!("container {} stored in wrong slot {slot}", c.id));
+            }
+            if c.ms_id >= self.stages.len() {
+                return Err(format!("container {} has unindexed stage {}", c.id, c.ms_id));
+            }
+            if c.local.len() > c.batch_size {
+                return Err(format!("container {} over batch capacity", c.id));
+            }
+            let st = &self.stages[c.ms_id];
+            let want_ready = (c.is_warm() && c.free_slots() > 0)
+                .then_some((c.free_slots(), Reverse(self.nodes[c.node].containers), c.id));
+            if s.ready_key != want_ready {
+                return Err(format!("container {} has stale ready key", c.id));
+            }
+            if let Some(k) = want_ready {
+                if !st.ready.contains(&k) {
+                    return Err(format!("container {} missing from ready index", c.id));
+                }
+                stage_ready[c.ms_id] += 1;
+            }
+            let want_idle = (c.state == CState::Idle && c.local.is_empty())
+                .then_some((c.last_used, c.id));
+            if s.idle_key != want_idle {
+                return Err(format!("container {} has stale idle key", c.id));
+            }
+            if let Some(k) = want_idle {
+                if !st.idle.contains(&k) || !self.idle_lru.contains(&k) {
+                    return Err(format!("container {} missing from idle sets", c.id));
+                }
+                stage_idle[c.ms_id] += 1;
+            }
+            let warm_free = if c.is_warm() { c.free_slots() } else { 0 };
+            let starting = if c.state == CState::Starting {
+                c.batch_size
+            } else {
+                0
+            };
+            if s.warm_free != warm_free || s.starting != starting
+                || s.busy != (c.state == CState::Busy)
+            {
+                return Err(format!("container {} has stale aggregate cache", c.id));
+            }
+            stage_live[c.ms_id] += 1;
+            stage_warm_free[c.ms_id] += warm_free;
+            stage_starting[c.ms_id] += starting;
+            node_count[c.node] += 1;
+            node_busy[c.node] += (c.state == CState::Busy) as usize;
+            if !self.node_members[c.node].contains(&c.id) {
+                return Err(format!("container {} missing from node members", c.id));
+            }
+        }
+        if live != self.live_count {
+            return Err(format!("live count {} != {}", self.live_count, live));
+        }
+        let idle_total: usize = stage_idle.iter().sum();
+        if self.idle_lru.len() != idle_total {
+            return Err("idle_lru holds stale entries".into());
+        }
+        for (ms, st) in self.stages.iter().enumerate() {
+            if st.live != stage_live[ms]
+                || st.warm_free != stage_warm_free[ms]
+                || st.starting != stage_starting[ms]
+            {
+                return Err(format!("stage {ms} aggregates drifted"));
+            }
+            if st.ready.len() != stage_ready[ms] || st.idle.len() != stage_idle[ms] {
+                return Err(format!("stage {ms} index holds stale entries"));
+            }
+        }
+        if self.node_index.len() != self.nodes.len() {
+            return Err("node index cardinality drifted".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.containers != node_count[i] {
+                return Err(format!("node {i} container count drifted"));
+            }
+            let alloc = node_count[i] as f64 * self.cpu_per_container;
+            if (n.alloc_cores - alloc).abs() > 1e-12 {
+                return Err(format!("node {i} alloc_cores not derived from count"));
+            }
+            if self.node_busy[i] != node_busy[i] {
+                return Err(format!("node {i} busy count drifted"));
+            }
+            if self.node_members[i].len() != node_count[i] {
+                return Err(format!("node {i} member set drifted"));
+            }
+            if !self.node_index.contains(&(f64_key(self.node_free(i)), i)) {
+                return Err(format!("node {i} missing from packing index"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -308,25 +758,26 @@ mod tests {
         let mut s = store();
         // first container goes to node 0 (tie -> lowest id)
         let a = s.spawn(0, 4, 0, 1000, true).unwrap();
-        assert_eq!(s.containers[&a].node, 0);
+        assert_eq!(s.get(a).unwrap().node, 0);
         // node 0 now has less free capacity -> next goes there too
         let b = s.spawn(0, 4, 0, 1000, true).unwrap();
-        assert_eq!(s.containers[&b].node, 0);
+        assert_eq!(s.get(b).unwrap().node, 0);
+        s.check_consistency().unwrap();
     }
 
     #[test]
     fn cluster_capacity_enforced() {
         let mut s = store();
-        let mut spawned = 0;
-        while s.spawn(0, 1, 0, 0, false).is_some() {
-            spawned += 1;
+        let mut spawned = Vec::new();
+        while let Some(cid) = s.spawn(0, 1, 0, 0, false) {
+            spawned.push(cid);
         }
-        assert_eq!(spawned, 8); // 2 nodes * 2 cores / 0.5
+        assert_eq!(spawned.len(), 8); // 2 nodes * 2 cores / 0.5
         assert!(s.pick_node().is_none());
         // removing frees capacity
-        let any = *s.containers.keys().next().unwrap();
-        s.remove(any);
+        s.remove(spawned[0]);
         assert!(s.pick_node().is_some());
+        s.check_consistency().unwrap();
     }
 
     #[test]
@@ -334,51 +785,59 @@ mod tests {
         let mut s = store();
         let a = s.spawn(3, 4, 0, 0, false).unwrap();
         let b = s.spawn(3, 4, 0, 0, false).unwrap();
-        s.containers.get_mut(&a).unwrap().local.push_back(101);
-        s.containers.get_mut(&a).unwrap().local.push_back(102);
-        s.containers.get_mut(&b).unwrap().local.push_back(103);
+        s.dispatch(a, 101, 0);
+        s.dispatch(a, 102, 0);
+        s.dispatch(b, 103, 0);
         // a has 2 free, b has 3 free -> pick a
         assert_eq!(s.pick_container(3), Some(a));
         // fill a completely -> pick b
-        let ca = s.containers.get_mut(&a).unwrap();
-        ca.local.push_back(104);
-        ca.local.push_back(105);
+        s.dispatch(a, 104, 0);
+        s.dispatch(a, 105, 0);
         assert_eq!(s.pick_container(3), Some(b));
+        s.check_consistency().unwrap();
     }
 
     #[test]
     fn starting_containers_not_pickable() {
         let mut s = store();
         let a = s.spawn(1, 2, 0, 5_000_000, true).unwrap();
-        assert_eq!(s.containers[&a].state, CState::Starting);
+        assert_eq!(s.get(a).unwrap().state, CState::Starting);
         assert_eq!(s.pick_container(1), None);
         assert_eq!(s.warm_free_slots(1), 0);
         assert_eq!(s.starting_slots(1), 2);
         // warm it up
-        s.containers.get_mut(&a).unwrap().state = CState::Idle;
+        assert_eq!(s.warm_up(a, 5_000_000), Some(1));
         assert_eq!(s.pick_container(1), Some(a));
         assert_eq!(s.warm_free_slots(1), 2);
+        s.check_consistency().unwrap();
     }
 
     #[test]
     fn zero_latency_spawn_is_warm() {
         let mut s = store();
         let a = s.spawn(1, 2, 100, 0, false).unwrap();
-        assert_eq!(s.containers[&a].state, CState::Idle);
+        assert_eq!(s.get(a).unwrap().state, CState::Idle);
     }
 
     #[test]
     fn idle_reclaim_candidates() {
         let mut s = store();
-        let a = s.spawn(1, 2, 0, 0, false).unwrap();
-        let b = s.spawn(1, 2, 0, 0, false).unwrap();
-        s.containers.get_mut(&a).unwrap().last_used = 100;
-        s.containers.get_mut(&b).unwrap().last_used = 900;
+        let a = s.spawn(1, 2, 100, 0, false).unwrap();
+        let b = s.spawn(1, 2, 900, 0, false).unwrap();
         let idle = s.idle_since(1, 500);
         assert_eq!(idle, vec![a]);
+        assert_eq!(s.lru_idle_since(500), Some(a));
+        assert_eq!(s.lru_idle(), Some(a));
         // busy containers are never reclaimed
-        s.containers.get_mut(&a).unwrap().state = CState::Busy;
+        s.dispatch(a, 7, 200);
+        s.begin_batch(a);
         assert!(s.idle_since(1, 500).is_empty());
+        // ... and return to the LRU set once drained
+        let (ms, jobs) = s.finish_batch(a, 300);
+        assert_eq!((ms, jobs), (1, vec![7]));
+        assert_eq!(s.idle_since(1, 500), vec![a]);
+        let _ = b;
+        s.check_consistency().unwrap();
     }
 
     #[test]
@@ -386,10 +845,12 @@ mod tests {
         let mut s = store();
         let a = s.spawn(1, 2, 0, 0, false).unwrap();
         let _b = s.spawn(1, 2, 0, 0, false).unwrap();
-        s.containers.get_mut(&a).unwrap().state = CState::Busy;
+        s.dispatch(a, 1, 0);
+        s.begin_batch(a);
         let loads = s.node_loads();
         assert_eq!(loads[0], (0.5, 1.0));
         assert_eq!(loads[1], (0.0, 0.0));
+        s.check_consistency().unwrap();
     }
 
     #[test]
@@ -403,5 +864,84 @@ mod tests {
         assert_eq!(s.nodes[0].containers, 0);
         assert_eq!(s.nodes[0].alloc_cores, 0.0);
         assert!(s.remove(a).is_none());
+        assert!(s.get(a).is_none());
+        assert_eq!(s.pick_container(1), None);
+        assert_eq!(s.warm_free_slots(1), 0);
+        assert!(s.lru_idle().is_none());
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn recycled_slot_rejects_stale_id() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 1000, true).unwrap();
+        s.remove(a);
+        // slot is reused by b, but a's id must not alias it
+        let b = s.spawn(2, 2, 0, 0, false).unwrap();
+        assert_ne!(a, b);
+        assert!(s.get(a).is_none());
+        assert_eq!(s.warm_up(a, 1000), None); // stale SpawnDone is a no-op
+        assert_eq!(s.get(b).unwrap().ms_id, 2);
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn dispatch_reports_idle_state() {
+        let mut s = store();
+        let a = s.spawn(1, 3, 0, 0, false).unwrap();
+        assert!(s.dispatch(a, 1, 10)); // was idle -> caller starts a batch
+        s.begin_batch(a);
+        assert!(!s.dispatch(a, 2, 20)); // busy -> just queue
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn packing_tiebreak_prefers_crowded_node() {
+        // same free slots everywhere -> the container on the fuller node
+        // wins the dispatch (consolidation tie-break)
+        let mut s = StateStore::new(2, 2, 1.0); // 2 container slots per node
+        let a = s.spawn(1, 4, 0, 0, false).unwrap();
+        let b = s.spawn(1, 4, 0, 0, false).unwrap(); // both on node 0
+        let c = s.spawn(1, 4, 0, 0, false).unwrap(); // node 0 full -> node 1
+        assert_eq!(s.get(a).unwrap().node, 0);
+        assert_eq!(s.get(b).unwrap().node, 0);
+        assert_eq!(s.get(c).unwrap().node, 1);
+        // node 0 hosts 2 containers vs node 1's one -> a (earliest on the
+        // crowded node) wins
+        assert_eq!(s.pick_container(1), Some(a));
+        // removing b levels the packing (1 vs 1) -> tie broken by
+        // earliest-spawned container id, and c's re-keyed entry must
+        // reflect node 0's new count
+        s.remove(b);
+        assert_eq!(s.pick_container(1), Some(a));
+        s.remove(a);
+        assert_eq!(s.pick_container(1), Some(c));
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn alloc_cores_never_drift() {
+        // regression for the float-drift bug: alloc_cores is derived from
+        // the container count, so long spawn/remove churn stays exact
+        let mut s = StateStore::new(3, 7, 0.3);
+        let mut live: Vec<u64> = Vec::new();
+        for round in 0..5000u64 {
+            if round % 3 != 0 {
+                if let Some(cid) = s.spawn((round % 4) as usize, 2, round, 0, false) {
+                    live.push(cid);
+                }
+            } else if !live.is_empty() {
+                let cid = live.remove((round as usize * 7) % live.len());
+                s.remove(cid);
+            }
+        }
+        for cid in live {
+            s.remove(cid);
+        }
+        for n in &s.nodes {
+            assert_eq!(n.alloc_cores, 0.0, "node {} leaked cores", n.id);
+            assert_eq!(n.containers, 0);
+        }
+        s.check_consistency().unwrap();
     }
 }

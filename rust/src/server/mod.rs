@@ -284,6 +284,20 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
     drop(tx);
 
     // --- coordinator loop -------------------------------------------------
+    // Deadline-based flush threshold per stage, precomputed once: the
+    // ticker fires every 5 ms and must not redo slack-plan lookups for
+    // every stage on every tick.
+    let flush_deadline_ms: HashMap<MsId, f64> = {
+        let mut m = HashMap::new();
+        for &cid in &p.chains {
+            for &ms_id in &cat.chains[cid].stages {
+                m.entry(ms_id).or_insert_with(|| {
+                    (plan.s_r_for(ms_id) - plan.exec_ms[&ms_id]).max(1.0) * p.flush_frac
+                });
+            }
+        }
+        m
+    };
     let mut jobs: Vec<LiveJob> = Vec::new();
     let mut bufs: HashMap<MsId, StageBuf> = HashMap::new();
     let mut responses: Vec<f64> = Vec::new();
@@ -374,8 +388,7 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
                 // flush_frac x the stage's allocated slack
                 let ms_ids: Vec<MsId> = bufs.keys().copied().collect();
                 for ms_id in ms_ids {
-                    let deadline_ms = (plan.s_r_for(ms_id) - plan.exec_ms[&ms_id]).max(1.0)
-                        * p.flush_frac;
+                    let deadline_ms = flush_deadline_ms[&ms_id];
                     let buf = bufs.get_mut(&ms_id).unwrap();
                     let stale = buf
                         .oldest

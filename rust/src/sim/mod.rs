@@ -17,7 +17,7 @@ use std::collections::{BinaryHeap, HashMap};
 use crate::coldstart::ColdStartModel;
 use crate::config::{Policy, SystemConfig};
 use crate::coordinator::queue::{Ordering as QOrder, QueueEntry, StageQueue};
-use crate::coordinator::state::{CState, StateStore};
+use crate::coordinator::state::StateStore;
 use crate::coordinator::{lsf_key, scaling, slack::SlackPlan, stage_share};
 use crate::energy::ClusterEnergy;
 use crate::metrics::{JobRecord, Recorder, StageRecord};
@@ -217,7 +217,7 @@ impl Engine {
             }
         }
         // final energy settlement + retire remaining containers at horizon
-        let cids: Vec<u64> = self.store.containers.keys().copied().collect();
+        let cids: Vec<u64> = self.store.container_ids();
         for cid in cids {
             self.recorder.container_retired(cid, self.now.min(end));
         }
@@ -298,10 +298,7 @@ impl Engine {
                 break;
             };
             let entry = self.queues.get_mut(&ms_id).unwrap().pop().unwrap();
-            let c = self.store.containers.get_mut(&cid).unwrap();
-            c.local.push_back(entry.job_id);
-            c.last_used = self.now;
-            if c.state == CState::Idle {
+            if self.store.dispatch(cid, entry.job_id, self.now) {
                 self.start_exec(cid);
             }
         }
@@ -315,32 +312,19 @@ impl Engine {
     /// inference pass (continuous batching: everything queued locally at
     /// kick-off time runs together; exec(B) = exec(1)·(1 + γ·(B−1))).
     fn start_exec(&mut self, cid: u64) {
-        let (batch_jobs, ms_id, ready_at, spawn_latency, cold) = {
-            let c = self.store.containers.get_mut(&cid).unwrap();
-            debug_assert_eq!(c.state, CState::Idle);
-            debug_assert!(c.cur_batch == 0);
-            c.state = CState::Busy;
-            c.cur_batch = c.local.len();
-            (
-                c.local.iter().copied().collect::<Vec<u64>>(),
-                c.ms_id,
-                c.ready_at,
-                c.spawn_latency,
-                c.started_cold,
-            )
-        };
-        let base_ms = self.cat.microservices[ms_id].sample_exec_ms(&mut self.rng);
+        let b = self.store.begin_batch(cid);
+        let base_ms = self.cat.microservices[b.ms_id].sample_exec_ms(&mut self.rng);
         let gamma = self.p.cfg.rm.batch_cost_gamma;
-        let exec_ms = base_ms * (1.0 + gamma * (batch_jobs.len() as f64 - 1.0));
+        let exec_ms = base_ms * (1.0 + gamma * (b.jobs.len() as f64 - 1.0));
         let overhead = self.cold.warm_overhead();
         let done_at = self.now + overhead + ms(exec_ms);
-        for &job_id in &batch_jobs {
+        for &job_id in &b.jobs {
             let j = &mut self.jobs[job_id as usize];
             j.cur_exec_start = self.now;
             // cold-start attribution: the job waited on this container's
             // spawn if it was enqueued before the container came up.
-            j.cur_cold_wait = if cold && j.cur_enqueued < ready_at {
-                (self.now - j.cur_enqueued).min(spawn_latency)
+            j.cur_cold_wait = if b.started_cold && j.cur_enqueued < b.ready_at {
+                (self.now - j.cur_enqueued).min(b.spawn_latency)
             } else {
                 0
             };
@@ -349,22 +333,19 @@ impl Engine {
     }
 
     fn on_batch_done(&mut self, cid: u64) {
-        let (ms_id, batch_jobs) = {
-            let c = self.store.containers.get_mut(&cid).unwrap();
-            let n = c.cur_batch;
-            let jobs: Vec<u64> = c.local.drain(..n).collect();
-            c.cur_batch = 0;
-            c.jobs_executed += jobs.len() as u64;
-            c.last_used = self.now;
-            c.state = CState::Idle;
-            (c.ms_id, jobs)
-        };
+        let (ms_id, batch_jobs) = self.store.finish_batch(cid, self.now);
         self.recorder.container_executed(cid, batch_jobs.len() as u64);
 
         // Kick off the next batch immediately: the container must be Busy
         // again *before* job advancement below can trigger spawns (which
         // may evict idle containers — including this one otherwise).
-        if !self.store.containers[&cid].local.is_empty() {
+        if !self
+            .store
+            .get(cid)
+            .expect("container alive after finish_batch")
+            .local
+            .is_empty()
+        {
             self.start_exec(cid);
         }
 
@@ -408,15 +389,10 @@ impl Engine {
     }
 
     fn on_spawn_done(&mut self, cid: u64) {
-        let ms_id = {
-            let Some(c) = self.store.containers.get_mut(&cid) else {
-                return; // already reclaimed
-            };
-            c.state = CState::Idle;
-            c.last_used = self.now;
-            c.ms_id
-        };
-        self.try_dispatch(ms_id);
+        // None when the container was already reclaimed
+        if let Some(ms_id) = self.store.warm_up(cid, self.now) {
+            self.try_dispatch(ms_id);
+        }
     }
 
     fn on_window_close(&mut self) {
@@ -518,9 +494,10 @@ impl Engine {
     fn spawn_container(&mut self, ms_id: MsId, cold: bool) -> Option<u64> {
         // capacity guard: one stage may hold at most max_stage_fraction of
         // the cluster's container slots (see RmConfig docs)
-        let cap = ((self.p.cfg.cluster.max_containers() as f64
-            * self.p.cfg.rm.max_stage_fraction) as usize)
-            .max(1);
+        let cap = scaling::stage_cap(
+            self.p.cfg.cluster.max_containers(),
+            self.p.cfg.rm.max_stage_fraction,
+        );
         if self.store.stage_containers(ms_id) >= cap {
             return None;
         }
@@ -552,7 +529,7 @@ impl Engine {
                 }
                 let grace = secs((self.p.cfg.rm.idle_timeout_s / 2.0).min(30.0));
                 let victim = self.store.lru_idle_since(self.now.saturating_sub(grace))?;
-                if self.store.containers[&victim].ms_id == ms_id {
+                if self.store.get(victim).map(|c| c.ms_id) == Some(ms_id) {
                     return None;
                 }
                 self.store.remove(victim);
@@ -595,12 +572,7 @@ impl Engine {
     /// Total requests conserved: every arrival is queued, in-flight, or done.
     pub fn check_conservation(&self) -> Result<(), String> {
         let queued: usize = self.queues.values().map(|q| q.len()).sum();
-        let in_flight: usize = self
-            .store
-            .containers
-            .values()
-            .map(|c| c.local.len())
-            .sum();
+        let in_flight: usize = self.store.iter().map(|c| c.local.len()).sum();
         let done = self.jobs.iter().filter(|j| j.done).count();
         // jobs between stages are accounted at enqueue, so:
         let total = self.jobs.len();
@@ -613,29 +585,14 @@ impl Engine {
         Ok(())
     }
 
-    /// No node over capacity; all per-stage indexes consistent.
+    /// No node over capacity; all store indexes and aggregates consistent.
     pub fn check_store(&self) -> Result<(), String> {
         for n in &self.store.nodes {
             if n.alloc_cores > n.total_cores + 1e-9 {
                 return Err(format!("node {} over capacity", n.id));
             }
         }
-        for (ms, ids) in &self.store.by_stage {
-            for id in ids {
-                let c = self
-                    .store
-                    .containers
-                    .get(id)
-                    .ok_or_else(|| format!("dangling container {id}"))?;
-                if c.ms_id != *ms {
-                    return Err(format!("container {id} indexed under wrong stage"));
-                }
-                if c.local.len() > c.batch_size {
-                    return Err(format!("container {id} over batch capacity"));
-                }
-            }
-        }
-        Ok(())
+        self.store.check_consistency()
     }
 }
 

@@ -88,9 +88,9 @@ fn prop_binpack_never_exceeds_node_capacity() {
                 assert_prop(n.alloc_cores >= -1e-9, "negative allocation")?;
             }
         }
-        // index consistency
-        let indexed: usize = store.by_stage.values().map(|v| v.len()).sum();
-        assert_prop(indexed == store.containers.len(), "stage index drift")
+        // index + aggregate consistency (slab, ready/idle sets, counters)
+        store.check_consistency().map_err(|e| format!("store drift: {e}"))?;
+        assert_prop(store.total_containers() == live.len(), "live count drift")
     });
 }
 
@@ -101,7 +101,7 @@ fn prop_greedy_placement_is_most_loaded_first() {
         for step in 0..40 {
             let before: Vec<f64> = store.nodes.iter().map(|n| n.free_cores()).collect();
             if let Some(cid) = store.spawn(rng.below(3), 1, step, 0, false) {
-                let node = store.containers[&cid].node;
+                let node = store.get(cid).unwrap().node;
                 // chosen node must have had the minimal feasible free cores
                 let min_feasible = before
                     .iter()

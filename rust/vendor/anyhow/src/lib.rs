@@ -1,0 +1,156 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, vendored so
+//! the workspace builds without crates.io access (the same spirit as the
+//! in-tree `serde_json` and `rand` substitutes in `fifer::util`).
+//!
+//! Implements exactly the surface this workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension for results. Swap in the real crate by replacing the path
+//! dependency with a registry version — the API is call-compatible.
+
+use std::fmt;
+
+/// A string-backed error that preserves the source chain for display.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap with higher-level context, mirroring `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// std::error::Error — that is what makes this blanket conversion (and the
+// `?` operator on any std error) coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to the error variant of a result.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| "reading missing file".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e = io_fail().unwrap_err();
+        let text = format!("{e}");
+        assert!(text.starts_with("reading missing file: "), "{text}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Err(anyhow!("always fails with {}", x))
+        }
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "always fails with 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(format!("{}", none.context("missing").unwrap_err()), "missing");
+    }
+}

@@ -1,0 +1,96 @@
+//! Compile-only stub of the `xla` PJRT binding.
+//!
+//! `fifer::runtime` is the single module that touches PJRT; everything
+//! else (the simulator, coordinator, predictors, benches) is pure Rust.
+//! This stub keeps the whole workspace building and testing on machines
+//! without an `xla_extension` install: every entry point that would need
+//! a real PJRT client returns a descriptive error, which the runtime
+//! surfaces as the usual "run `make artifacts`?" failure path. The live
+//! tests in `rust/tests/test_runtime.rs` / `test_server_live.rs` no-op
+//! without artifacts, so nothing downstream breaks.
+//!
+//! To run real inference, point the `xla` dependency of `rust/Cargo.toml`
+//! at an actual binding with the same surface (e.g. a local xla-rs
+//! checkout): the API below is the exact subset `fifer::runtime` calls.
+
+/// Error type surfaced by every stubbed operation (printed with `{:?}`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this build (the `xla` dependency is \
+         the compile-only stub; see rust/vendor/xla)"
+    )))
+}
+
+/// Host literal (stub: shape-less placeholder).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction itself reports unavailability, so
+/// `Runtime::new` fails fast with an actionable message).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
