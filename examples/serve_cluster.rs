@@ -13,6 +13,7 @@
 
 use anyhow::Result;
 use fifer::cli::Args;
+use fifer::config::{Policy, RmConfig};
 use fifer::server::{serve, ServeParams, ServeReport};
 
 fn report(tag: &str, r: &ServeReport) {
@@ -51,7 +52,7 @@ fn main() -> Result<()> {
 
     let mut bline = ServeParams::quick(rate, duration);
     bline.executors = executors;
-    bline.batching = false;
+    bline.cfg.rm = RmConfig::paper(Policy::Bline); // batching off via policy
     let r2 = serve(bline)?;
     report("no-batching", &r2);
 

@@ -34,21 +34,20 @@ fn main() {
     t.print();
 
     section("Fig. 12b", "containers alive over time (10 s bins, sampled)");
-    let mut t = Table::new(&["t (s)", "Bline", "SBatch", "RScale", "BPred", "Fifer"]);
+    // headers derive from the registry, so new policies appear for free
+    let mut headers = vec!["t (s)".to_string()];
+    headers.extend(runs.iter().map(|r| r.policy.name().to_string()));
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t = Table::new(&header_refs);
     let series: Vec<Vec<(f64, usize)>> = runs
         .iter()
         .map(|r| r.recorder.containers_over_time(10))
         .collect();
-    let n = series[0].len();
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
     for i in (0..n).step_by(15) {
-        t.row(&[
-            format!("{:.0}", series[0][i].0),
-            format!("{}", series[0][i].1),
-            format!("{}", series[1][i].1),
-            format!("{}", series[2][i].1),
-            format!("{}", series[3][i].1),
-            format!("{}", series[4][i].1),
-        ]);
+        let mut row = vec![format!("{:.0}", series[0][i].0)];
+        row.extend(series.iter().map(|s| format!("{}", s[i].1)));
+        t.row(&row);
     }
     t.print();
 }

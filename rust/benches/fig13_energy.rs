@@ -6,13 +6,16 @@
 //! fewer powered nodes.
 
 use fifer::bench::{section, Table};
-use fifer::experiments::run_prototype;
+use fifer::config::Policy;
+use fifer::experiments::{run_policies, TraceKind};
 
 fn main() {
     section("Fig. 13", "cluster energy normalized to Bline (lower is better)");
     let mut t = Table::new(&["mix", "Bline", "SBatch", "RScale", "BPred", "Fifer", "Fifer saving"]);
     for mix in ["Heavy", "Medium", "Light"] {
-        let runs = run_prototype(mix, 1500, 42);
+        // paper figure: only the paper's five RMs (the hardcoded columns
+        // above index into this head) — don't burn sim time on the rest
+        let runs = run_policies(&Policy::PAPER, mix, TraceKind::Poisson, 1500, true, 42);
         let base = runs[0].summary.energy_wh;
         let fifer = runs[4].summary.energy_wh;
         t.row(&[

@@ -94,12 +94,30 @@ impl Args {
 
     /// Render help for a set of subcommands.
     pub fn render_help(binary: &str, about: &str, commands: &[(&str, &str)]) -> String {
+        Args::render_help_with_options(binary, about, commands, &[])
+    }
+
+    /// Render help with an additional OPTIONS section (e.g. choices
+    /// derived from a registry at runtime).
+    pub fn render_help_with_options(
+        binary: &str,
+        about: &str,
+        commands: &[(&str, &str)],
+        options: &[(&str, &str)],
+    ) -> String {
         let mut s = format!(
             "{binary} — {about}\n\nUSAGE:\n  {binary} <command> [options]\n\nCOMMANDS:\n"
         );
         let w = commands.iter().map(|(c, _)| c.len()).max().unwrap_or(0);
         for (c, h) in commands {
             s.push_str(&format!("  {c:<w$}  {h}\n"));
+        }
+        if !options.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            let w = options.iter().map(|(o, _)| o.len()).max().unwrap_or(0);
+            for (o, h) in options {
+                s.push_str(&format!("  {o:<w$}  {h}\n"));
+            }
         }
         s
     }
@@ -153,5 +171,18 @@ mod tests {
     fn help_rendering() {
         let h = Args::render_help("fifer", "about", &[("serve", "run"), ("sim", "simulate")]);
         assert!(h.contains("serve") && h.contains("simulate"));
+        assert!(!h.contains("OPTIONS"));
+    }
+
+    #[test]
+    fn help_rendering_with_options() {
+        let h = Args::render_help_with_options(
+            "fifer",
+            "about",
+            &[("serve", "run")],
+            &[("--policy <name>", "Bline|Fifer")],
+        );
+        assert!(h.contains("OPTIONS"));
+        assert!(h.contains("--policy <name>") && h.contains("Bline|Fifer"));
     }
 }

@@ -15,6 +15,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::coordinator::policy::SchedulerPolicy;
+
 use self::toml::TomlDoc;
 
 /// Cluster shape + power model parameters.
@@ -72,9 +74,16 @@ impl ClusterConfig {
     }
 }
 
-/// Which RM framework drives the cluster (paper §5.3 "Metrics and RM
-/// Policies"). `RScale` is Fifer minus prediction (GrandSLAm-like);
-/// `BPred` is Bline plus LSF plus EWMA prediction (Archipelago-like).
+/// Name of a registered RM framework (paper §5.3 "Metrics and RM
+/// Policies", plus post-paper additions). This enum is a thin facade
+/// over the scheduler-policy registry
+/// ([`crate::coordinator::policy::build`]): [`Policy::build`] resolves a
+/// name to its [`SchedulerPolicy`] implementation, and every capability
+/// query below delegates to the trait object — the engines never branch
+/// on this enum. `RScale` is Fifer minus prediction (GrandSLAm-like);
+/// `BPred` is Bline plus LSF plus EWMA prediction (Archipelago-like);
+/// `Kn` is a Knative-style concurrency autoscaler; `FiferEq` is Fifer
+/// ablated to equal-division slack + FIFO ordering (§6 ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Policy {
     Bline,
@@ -82,10 +91,25 @@ pub enum Policy {
     RScale,
     BPred,
     Fifer,
+    Kn,
+    FiferEq,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 5] = [
+    /// Every registered policy. The paper's five RMs come first (several
+    /// drivers index or slice the head of this list).
+    pub const ALL: [Policy; 7] = [
+        Policy::Bline,
+        Policy::SBatch,
+        Policy::RScale,
+        Policy::BPred,
+        Policy::Fifer,
+        Policy::Kn,
+        Policy::FiferEq,
+    ];
+
+    /// The five RM frameworks evaluated by the paper (§5.3).
+    pub const PAPER: [Policy; 5] = [
         Policy::Bline,
         Policy::SBatch,
         Policy::RScale,
@@ -100,7 +124,14 @@ impl Policy {
             Policy::RScale => "RScale",
             Policy::BPred => "BPred",
             Policy::Fifer => "Fifer",
+            Policy::Kn => "Kn",
+            Policy::FiferEq => "FiferEq",
         }
+    }
+
+    /// All registered policy names, registry order (for CLI help/errors).
+    pub fn names() -> Vec<&'static str> {
+        Policy::ALL.iter().map(|p| p.name()).collect()
     }
 
     pub fn from_name(s: &str) -> Result<Policy> {
@@ -108,23 +139,32 @@ impl Policy {
             .iter()
             .copied()
             .find(|p| p.name().eq_ignore_ascii_case(s))
-            .ok_or_else(|| anyhow!("unknown policy {s:?} (want one of Bline/SBatch/RScale/BPred/Fifer)"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown policy {s:?} (registered: {})",
+                    Policy::names().join("/")
+                )
+            })
+    }
+
+    /// Resolve this name to its scheduler-policy implementation.
+    pub fn build(&self) -> Box<dyn SchedulerPolicy> {
+        crate::coordinator::policy::build(*self)
     }
 
     /// Does this RM batch requests (local queues > 1)?
     pub fn batching(&self) -> bool {
-        matches!(self, Policy::SBatch | Policy::RScale | Policy::Fifer)
+        self.build().batching()
     }
 
     /// Does this RM scale proactively from a load forecast?
     pub fn proactive(&self) -> bool {
-        matches!(self, Policy::BPred | Policy::Fifer)
+        self.build().proactive()
     }
 
     /// Does this RM use LSF (least-slack-first) queue ordering?
     pub fn lsf(&self) -> bool {
-        // Bline/SBatch are FIFO; BPred/RScale/Fifer use LSF (§5.3).
-        matches!(self, Policy::RScale | Policy::BPred | Policy::Fifer)
+        self.build().queue_order() == crate::coordinator::queue::Ordering::LeastSlackFirst
     }
 }
 
@@ -172,11 +212,13 @@ impl RmConfig {
     pub fn paper(policy: Policy) -> RmConfig {
         RmConfig {
             policy,
-            slack_policy: if policy == Policy::SBatch {
-                SlackPolicy::EqualDivision
-            } else {
-                SlackPolicy::Proportional
-            },
+            // each policy declares its preferred slack distribution
+            // (SBatch and FiferEq: equal division); still overridable
+            // via [rm] slack_policy in a config file.
+            slack_policy: policy
+                .build()
+                .slack_policy()
+                .unwrap_or(SlackPolicy::Proportional),
             monitor_interval_s: 10.0,
             sample_window_s: 5.0,
             history_s: 100.0,
@@ -311,13 +353,28 @@ mod tests {
         assert!(!Policy::BPred.batching() && Policy::BPred.proactive());
         assert!(Policy::Fifer.batching() && Policy::Fifer.proactive());
         assert!(Policy::Fifer.lsf() && !Policy::Bline.lsf());
+        // post-paper registrations
+        assert!(Policy::Kn.batching() && !Policy::Kn.proactive() && !Policy::Kn.lsf());
+        assert!(Policy::FiferEq.batching() && Policy::FiferEq.proactive());
+        assert!(!Policy::FiferEq.lsf(), "FiferEq ablates LSF to FIFO");
     }
 
     #[test]
     fn policy_from_name() {
         assert_eq!(Policy::from_name("fifer").unwrap(), Policy::Fifer);
         assert_eq!(Policy::from_name("BLINE").unwrap(), Policy::Bline);
-        assert!(Policy::from_name("nope").is_err());
+        assert_eq!(Policy::from_name("kn").unwrap(), Policy::Kn);
+        assert_eq!(Policy::from_name("fifereq").unwrap(), Policy::FiferEq);
+        let err = Policy::from_name("nope").unwrap_err().to_string();
+        // error message derives from the registry, not a hardcoded list
+        for name in Policy::names() {
+            assert!(err.contains(name), "{err} missing {name}");
+        }
+    }
+
+    #[test]
+    fn paper_policies_head_the_registry() {
+        assert_eq!(&Policy::ALL[..5], &Policy::PAPER[..]);
     }
 
     #[test]
@@ -329,6 +386,11 @@ mod tests {
         assert_eq!(
             RmConfig::paper(Policy::Fifer).slack_policy,
             SlackPolicy::Proportional
+        );
+        // the ablated Fifer declares equal division through the trait
+        assert_eq!(
+            RmConfig::paper(Policy::FiferEq).slack_policy,
+            SlackPolicy::EqualDivision
         );
     }
 

@@ -1,15 +1,29 @@
 //! The Fifer coordinator — the paper's system contribution (§4).
 //!
-//! Submodules:
-//! * [`slack`] — slack estimation/distribution + Eq. 1 batch sizing (§4.1)
-//! * [`queue`] — per-stage global queues, LSF ordering (§4.3)
-//! * [`state`] — container/node state store + greedy bin-packing (§4.4)
-//! * [`scaling`] — reactive (RScale) and proactive scaling math (§4.2/§4.5)
+//! The coordinator is split into *mechanics* and *policy*:
 //!
-//! These are pure, clock-agnostic primitives; the event-driven simulator
+//! * **Mechanics** (pure, clock-agnostic primitives shared by every RM):
+//!   * [`slack`] — slack estimation/distribution + Eq. 1 batch sizing (§4.1)
+//!   * [`queue`] — per-stage global queues, LSF ordering (§4.3)
+//!   * [`state`] — container/node state store + greedy bin-packing (§4.4)
+//!   * [`scaling`] — reactive and proactive scaling math (§4.2/§4.5)
+//! * **Policy** ([`policy`]) — the pluggable [`policy::SchedulerPolicy`]
+//!   trait: one hook per decision point (queue ordering, predictor
+//!   construction, initial provisioning, per-arrival spawning,
+//!   monitor-tick scaling, idle reclamation). The paper's five RM
+//!   frameworks (Bline/SBatch/RScale/BPred/Fifer), the `Kn` Knative-style
+//!   autoscaler, and the `FiferEq` ablation are all plug-ins behind this
+//!   trait — the engines contain no per-policy branches.
+//!
+//! Policies *decide* over a read-only [`policy::PolicyView`] snapshot and
+//! return plans; the engines *execute*. The event-driven simulator
 //! (`crate::sim`) and the live serving runtime (`crate::server`) drive the
-//! *same* decision logic with virtual and wall-clock time respectively.
+//! same trait objects with virtual and wall-clock time respectively, so a
+//! policy written once runs in both worlds (and in yours — see
+//! `examples/custom_policy.rs` for a user-defined policy that plugs into
+//! `run_sim_with` without touching crate internals).
 
+pub mod policy;
 pub mod queue;
 pub mod scaling;
 pub mod slack;

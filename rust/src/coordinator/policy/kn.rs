@@ -1,0 +1,108 @@
+//! `Kn` — a Knative-style per-container concurrency autoscaler.
+//!
+//! Proof that the `SchedulerPolicy` API is closed over the engine: this
+//! policy ships with **zero** engine edits. It reproduces the KPA
+//! (Knative Pod Autoscaler) semantics as characterized in the serverless
+//! platform studies (arXiv:1911.07449): each stage targets a fixed
+//! per-container concurrency; desired scale is observed concurrency over
+//! that target, averaged over a *stable* window, except in *panic* mode —
+//! when the instantaneous demand implies ≥ `panic_threshold` times the
+//! current scale, the autoscaler acts on the instantaneous (panic-window)
+//! signal instead and never scales below it.
+//!
+//! Mapping onto this cluster model:
+//! * target concurrency      = the stage's Eq. 1 batch size (container
+//!   slots), i.e. `containerConcurrency`;
+//! * observed concurrency    = queued requests + occupied warm slots;
+//! * stable window           = `STABLE_TICKS` monitor intervals (~60 s at
+//!   the paper's T = 10 s);
+//! * panic window            = the latest monitor sample;
+//! * scale-down / to-zero    = the engine's idle reclamation (default
+//!   `on_scan`), Knative's scale-to-zero analog.
+//!
+//! Containers are spawned *only* from `on_monitor` — `on_arrival` never
+//! spawns — so Kn also exercises the conformance requirement that a
+//! policy with no per-request spawning still drains via monitor scaling.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::model::MsId;
+
+use super::{PolicyView, ScalingPlan, SchedulerPolicy};
+
+/// Monitor ticks in the stable window (Knative default: 60 s).
+const STABLE_TICKS: usize = 6;
+/// Panic when instantaneous desired scale ≥ this multiple of current
+/// scale (Knative default: 200%).
+const PANIC_THRESHOLD: f64 = 2.0;
+
+pub struct Kn {
+    stable_ticks: usize,
+    panic_threshold: f64,
+    /// Per-stage trailing observed-concurrency samples, one per tick.
+    history: HashMap<MsId, VecDeque<f64>>,
+}
+
+impl Kn {
+    pub fn new() -> Kn {
+        Kn {
+            stable_ticks: STABLE_TICKS,
+            panic_threshold: PANIC_THRESHOLD,
+            history: HashMap::new(),
+        }
+    }
+}
+
+impl Default for Kn {
+    fn default() -> Kn {
+        Kn::new()
+    }
+}
+
+impl SchedulerPolicy for Kn {
+    fn name(&self) -> &'static str {
+        "Kn"
+    }
+
+    /// Per-container concurrency > 1 is Knative's `containerConcurrency`;
+    /// the slack plan's Eq. 1 batch provides the target.
+    fn batching(&self) -> bool {
+        true
+    }
+
+    fn on_monitor(&mut self, view: &PolicyView) -> ScalingPlan {
+        let mut spawns = Vec::new();
+        for &ms_id in view.stages {
+            let target = view.batch(ms_id).max(1) as f64;
+            let observed = (view.pending(ms_id) + view.in_flight_slots(ms_id)) as f64;
+
+            let h = self.history.entry(ms_id).or_default();
+            h.push_back(observed);
+            if h.len() > self.stable_ticks {
+                h.pop_front();
+            }
+            let stable_avg = h.iter().sum::<f64>() / h.len() as f64;
+
+            let desired_stable = (stable_avg / target).ceil() as usize;
+            let desired_panic = (observed / target).ceil() as usize;
+            let live = view.live(ms_id);
+            let panicking =
+                desired_panic > 0 && desired_panic as f64 >= self.panic_threshold * live.max(1) as f64;
+            // In panic mode, act on the instantaneous signal and never
+            // scale below it; otherwise follow the stable average.
+            let desired = if panicking {
+                desired_stable.max(desired_panic)
+            } else {
+                desired_stable
+            };
+            let spawn = desired.saturating_sub(live);
+            if spawn > 0 {
+                spawns.push((ms_id, spawn));
+            }
+        }
+        ScalingPlan {
+            spawns,
+            stop_on_full: false,
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Pluggable scheduler policies: the `SchedulerPolicy` trait API.
+//!
+//! Fifer's contribution is a *family* of resource-management policies
+//! (paper §5.3, Table 6) compared under identical cluster mechanics. This
+//! module makes that family an open set: every decision point the engine
+//! exposes is one hook on [`SchedulerPolicy`], and both the event-driven
+//! simulator (`crate::sim::Engine`) and the live serving path
+//! (`crate::server::serve`) drive the *same* trait objects — one policy
+//! implementation serves virtual- and wall-clock execution. (The live
+//! path has a fixed executor pool and flushes whole stage buffers, so it
+//! consults only the `batching` hook; the simulator exercises the full
+//! hook surface.)
+//!
+//! ## Hooks (one per engine decision point)
+//!
+//! | hook              | decision                                           |
+//! |-------------------|----------------------------------------------------|
+//! | `queue_order`     | per-stage global-queue ordering (FIFO vs LSF)      |
+//! | `batching`        | request batching on/off (drives Eq. 1 batch sizes) |
+//! | `slack_policy`    | preferred slack distribution (config default)      |
+//! | `make_predictor`  | load forecaster construction (§4.5.1)              |
+//! | `on_start`        | initial provisioning before the first request      |
+//! | `on_arrival`      | per-request spawn decision at enqueue time         |
+//! | `on_monitor`      | monitor-tick scaling (Algorithm 1)                 |
+//! | `on_scan`         | idle-container reclamation                         |
+//!
+//! ## Hook contract
+//!
+//! * **Reads go through [`PolicyView`] only.** The view is a read-only
+//!   snapshot of the coordinator state (queues, store, slack plan,
+//!   clamped forecast). Policies never mutate cluster state directly —
+//!   they return a [`ScalingPlan`] (or a retire list) and the engine
+//!   executes it, so every policy shares one set of mechanics.
+//! * **No clock access.** `PolicyView::now` is the engine's virtual
+//!   (simulator) or monotonic (live) time; policies must never read wall
+//!   clocks (`std::time`) or host randomness — determinism of a seeded
+//!   run depends on it.
+//! * **Purity up to internal state.** A policy may keep state across
+//!   hooks (`&mut self`, e.g. `Kn`'s request-rate windows), but that
+//!   state must be derived from hook inputs alone.
+//! * `PolicyView::forecast` is only populated during `on_monitor`, and
+//!   only when `make_predictor` returned a predictor; it is pre-clamped
+//!   to 2x the recently observed peak (§8 "Design Limitations").
+//!
+//! ## Registry
+//!
+//! The closed [`crate::config::Policy`] enum is now a thin facade over
+//! this module: [`build`] maps each name to its implementation, and
+//! `Policy::ALL` / `Policy::from_name` / CLI error messages derive from
+//! the registry. Policies outside the registry (user-defined) plug in
+//! through [`crate::sim::run_sim_with`] / `Engine::with_policy` — see
+//! `examples/custom_policy.rs` for a complete out-of-crate policy.
+
+pub mod kn;
+pub mod paper;
+mod view;
+
+pub use view::PolicyView;
+
+use crate::config::{Policy, SlackPolicy, SystemConfig};
+use crate::coordinator::queue::Ordering as QueueOrdering;
+use crate::model::MsId;
+use crate::predictor::Predictor;
+use crate::util::secs;
+
+/// Containers to spawn, in execution order. The engine spawns entries
+/// front to back; within an entry it stops early when the cluster is
+/// full (skipping to the next entry, or aborting the whole plan when
+/// `stop_on_full` is set — SBatch's fixed-pool provisioning semantics).
+#[derive(Debug, Default, Clone)]
+pub struct ScalingPlan {
+    /// (stage, container count) in spawn order. A stage may appear more
+    /// than once (e.g. Fifer emits reactive entries, then proactive).
+    pub spawns: Vec<(MsId, usize)>,
+    /// Abort the remaining plan on the first rejected spawn.
+    pub stop_on_full: bool,
+}
+
+impl ScalingPlan {
+    pub fn none() -> ScalingPlan {
+        ScalingPlan::default()
+    }
+
+    pub fn total(&self) -> usize {
+        self.spawns.iter().map(|&(_, n)| n).sum()
+    }
+}
+
+/// A complete resource-management policy: queue ordering, batching,
+/// prediction, and every scaling decision the cluster engine delegates.
+///
+/// All hooks have conservative defaults (FIFO, no batching, no spawns,
+/// reclaim idle containers after the configured timeout), so a minimal
+/// policy only overrides the decisions it cares about.
+pub trait SchedulerPolicy {
+    /// Display / CLI name.
+    fn name(&self) -> &'static str;
+
+    /// Ordering of the per-stage global queues (§4.3).
+    fn queue_order(&self) -> QueueOrdering {
+        QueueOrdering::Fifo
+    }
+
+    /// Batch requests per container? Drives Eq. 1 batch sizing in the
+    /// slack plan and deadline-based flushing on the live path.
+    fn batching(&self) -> bool {
+        false
+    }
+
+    /// Scale proactively from a load forecast? Introspection only — the
+    /// engine keys proactive behavior off `make_predictor`.
+    fn proactive(&self) -> bool {
+        false
+    }
+
+    /// Preferred slack distribution, or `None` to accept the configured
+    /// one. `RmConfig::paper` consults this so e.g. SBatch defaults to
+    /// equal division without a config edit.
+    fn slack_policy(&self) -> Option<SlackPolicy> {
+        None
+    }
+
+    /// Construct the load predictor feeding `PolicyView::forecast`. The
+    /// engine owns the predictor: it feeds window maxima via
+    /// `Predictor::observe` and clamps `forecast()` before each
+    /// `on_monitor` call.
+    fn make_predictor(&self, _cfg: &SystemConfig) -> Option<Box<dyn Predictor>> {
+        None
+    }
+
+    /// Initial provisioning at t = 0, before the first request.
+    fn on_start(&mut self, _view: &PolicyView) -> ScalingPlan {
+        ScalingPlan::none()
+    }
+
+    /// A request just landed in stage `ms_id`'s global queue (either a
+    /// fresh arrival or a chain advancing a stage). Returns how many
+    /// containers to spawn for that stage right now.
+    fn on_arrival(&mut self, _ms_id: MsId, _view: &PolicyView) -> usize {
+        0
+    }
+
+    /// Periodic monitor tick (paper Algorithm 1): reactive + proactive
+    /// scaling computed from the snapshot in `view`.
+    fn on_monitor(&mut self, _view: &PolicyView) -> ScalingPlan {
+        ScalingPlan::none()
+    }
+
+    /// Periodic reclamation scan: container ids to retire now. The
+    /// default reclaims containers idle past `rm.idle_timeout_s`.
+    fn on_scan(&mut self, view: &PolicyView) -> Vec<u64> {
+        default_idle_reclaim(view)
+    }
+}
+
+/// Default idle scale-in: every container unused for longer than the
+/// configured idle timeout, stage by stage in catalog order.
+pub fn default_idle_reclaim(view: &PolicyView) -> Vec<u64> {
+    let cutoff = view.now.saturating_sub(secs(view.cfg.rm.idle_timeout_s));
+    let mut out = Vec::new();
+    for &ms_id in view.stages {
+        out.extend(view.store.idle_since(ms_id, cutoff));
+    }
+    out
+}
+
+/// The policy registry: one constructor per registered name. This is the
+/// *only* place that maps `Policy` variants to implementations — the
+/// engine never branches on the enum.
+pub fn build(p: Policy) -> Box<dyn SchedulerPolicy> {
+    match p {
+        Policy::Bline => Box::new(paper::Bline),
+        Policy::SBatch => Box::new(paper::SBatch),
+        Policy::RScale => Box::new(paper::RScale),
+        Policy::BPred => Box::new(paper::BPred),
+        Policy::Fifer => Box::new(paper::Fifer::proportional()),
+        Policy::Kn => Box::new(kn::Kn::new()),
+        Policy::FiferEq => Box::new(paper::Fifer::equal_division()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_match_enum() {
+        for p in Policy::ALL {
+            assert_eq!(p.name(), build(p).name(), "registry/enum name drift");
+        }
+    }
+
+    #[test]
+    fn registry_capabilities_are_consistent() {
+        for p in Policy::ALL {
+            let b = build(p);
+            assert_eq!(p.batching(), b.batching(), "{}", p.name());
+            assert_eq!(p.proactive(), b.proactive(), "{}", p.name());
+            assert_eq!(
+                p.lsf(),
+                b.queue_order() == QueueOrdering::LeastSlackFirst,
+                "{}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_plan_totals() {
+        let plan = ScalingPlan {
+            spawns: vec![(0, 2), (1, 0), (0, 3)],
+            stop_on_full: false,
+        };
+        assert_eq!(plan.total(), 5);
+        assert_eq!(ScalingPlan::none().total(), 0);
+    }
+}

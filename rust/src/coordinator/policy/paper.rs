@@ -1,0 +1,262 @@
+//! The paper's five RM frameworks (§5.3), each as one `SchedulerPolicy`
+//! impl, plus `FiferEq` — Fifer ablated to equal-division slack and FIFO
+//! ordering (the §6 ablation axis as a runnable policy).
+//!
+//! Decision math lives in [`crate::coordinator::scaling`]; these impls
+//! only wire it to the hook surface. The spawn *order* inside each
+//! returned plan matters: the engine draws cold-start latencies from its
+//! seeded RNG per spawn, so plans list reactive entries (stage order)
+//! before proactive entries to reproduce the pre-trait engine exactly.
+
+use crate::config::{SlackPolicy, SystemConfig};
+use crate::coordinator::queue::Ordering as QueueOrdering;
+use crate::coordinator::scaling;
+use crate::model::MsId;
+use crate::predictor::{classic, nn, Predictor};
+
+use super::{PolicyView, ScalingPlan, SchedulerPolicy};
+
+/// Per-request deficit: queued requests not covered by a warm free slot
+/// or a slot already starting (Bline/BPred event-driven spawning, §3).
+pub(crate) fn arrival_deficit(view: &PolicyView, ms_id: MsId) -> usize {
+    let covered = view.warm_free_slots(ms_id) + view.starting_slots(ms_id);
+    view.pending(ms_id).saturating_sub(covered)
+}
+
+/// Algorithm 1a: dynamic reactive scaling across all stages (RScale,
+/// Fifer). One plan entry per stage with a non-zero spawn count, in the
+/// engine's canonical stage order.
+pub(crate) fn reactive_spawns(view: &PolicyView) -> Vec<(MsId, usize)> {
+    let mut spawns = Vec::new();
+    for &ms_id in view.stages {
+        let d = scaling::reactive_scale(
+            view.pending(ms_id),
+            view.batch(ms_id),
+            view.s_r_ms(ms_id),
+            view.live(ms_id),
+            view.expected_cold_ms(ms_id),
+        );
+        if d.spawn > 0 {
+            spawns.push((ms_id, d.spawn));
+        }
+    }
+    spawns
+}
+
+/// Algorithm 1b: proactive prediction-driven scaling (BPred, Fifer).
+/// `already_planned` holds spawns queued earlier in the same plan (e.g.
+/// Fifer's reactive pass) so live capacity is not double-counted.
+pub(crate) fn proactive_spawns(
+    view: &PolicyView,
+    already_planned: &[(MsId, usize)],
+) -> Vec<(MsId, usize)> {
+    let Some(forecast) = view.forecast else {
+        return Vec::new();
+    };
+    let mut spawns = Vec::new();
+    for &ms_id in view.stages {
+        let planned: usize = already_planned
+            .iter()
+            .filter(|&&(m, _)| m == ms_id)
+            .map(|&(_, n)| n)
+            .sum();
+        let rate = forecast * view.share(ms_id);
+        let spawn = scaling::proactive_scale(
+            rate,
+            view.batch(ms_id),
+            view.exec_ms_mean(ms_id),
+            view.gamma(),
+            view.live(ms_id) + planned,
+        );
+        if spawn > 0 {
+            spawns.push((ms_id, spawn));
+        }
+    }
+    spawns
+}
+
+/// Bline: per-request container spawning, no batching, FIFO queues.
+pub struct Bline;
+
+impl SchedulerPolicy for Bline {
+    fn name(&self) -> &'static str {
+        "Bline"
+    }
+
+    fn on_arrival(&mut self, ms_id: MsId, view: &PolicyView) -> usize {
+        arrival_deficit(view, ms_id)
+    }
+}
+
+/// SBatch: slack-aware batching over a fixed pool sized once from the
+/// workload's average rate (§5.3); equal-division slack, FIFO, never
+/// scaled or reclaimed after start.
+pub struct SBatch;
+
+impl SchedulerPolicy for SBatch {
+    fn name(&self) -> &'static str {
+        "SBatch"
+    }
+
+    fn batching(&self) -> bool {
+        true
+    }
+
+    fn slack_policy(&self) -> Option<SlackPolicy> {
+        Some(SlackPolicy::EqualDivision)
+    }
+
+    fn on_start(&mut self, view: &PolicyView) -> ScalingPlan {
+        let mut spawns = Vec::new();
+        for &ms_id in view.stages {
+            let pool = scaling::sbatch_pool(
+                view.avg_rate_hint * view.share(ms_id),
+                view.batch(ms_id),
+                view.exec_ms_mean(ms_id),
+                view.gamma(),
+                view.cfg.rm.sbatch_headroom,
+            );
+            spawns.push((ms_id, pool));
+        }
+        ScalingPlan {
+            spawns,
+            stop_on_full: true,
+        }
+    }
+
+    fn on_scan(&mut self, _view: &PolicyView) -> Vec<u64> {
+        Vec::new() // fixed pool: nothing is ever reclaimed
+    }
+}
+
+/// RScale: Fifer minus prediction (GrandSLAm-like) — batching, LSF, and
+/// reactive queuing-delay scaling only.
+pub struct RScale;
+
+impl SchedulerPolicy for RScale {
+    fn name(&self) -> &'static str {
+        "RScale"
+    }
+
+    fn queue_order(&self) -> QueueOrdering {
+        QueueOrdering::LeastSlackFirst
+    }
+
+    fn batching(&self) -> bool {
+        true
+    }
+
+    fn on_monitor(&mut self, view: &PolicyView) -> ScalingPlan {
+        ScalingPlan {
+            spawns: reactive_spawns(view),
+            stop_on_full: false,
+        }
+    }
+}
+
+/// BPred: Bline plus LSF plus EWMA prediction (Archipelago-like) — no
+/// batching, per-request spawning, proactive provisioning.
+pub struct BPred;
+
+impl SchedulerPolicy for BPred {
+    fn name(&self) -> &'static str {
+        "BPred"
+    }
+
+    fn queue_order(&self) -> QueueOrdering {
+        QueueOrdering::LeastSlackFirst
+    }
+
+    fn proactive(&self) -> bool {
+        true
+    }
+
+    fn make_predictor(&self, cfg: &SystemConfig) -> Option<Box<dyn Predictor>> {
+        Some(Box::new(classic::Ewma::new(cfg.rm.ewma_alpha)))
+    }
+
+    fn on_arrival(&mut self, ms_id: MsId, view: &PolicyView) -> usize {
+        arrival_deficit(view, ms_id)
+    }
+
+    fn on_monitor(&mut self, view: &PolicyView) -> ScalingPlan {
+        ScalingPlan {
+            spawns: proactive_spawns(view, &[]),
+            stop_on_full: false,
+        }
+    }
+}
+
+/// Fifer: the full framework — slack-aware batching, LSF, reactive +
+/// LSTM-proactive scaling. `equal_division` ablates it to equal slack
+/// division + FIFO ordering (registered as `FiferEq`).
+pub struct Fifer {
+    equal_division: bool,
+}
+
+impl Fifer {
+    pub fn proportional() -> Fifer {
+        Fifer {
+            equal_division: false,
+        }
+    }
+
+    pub fn equal_division() -> Fifer {
+        Fifer {
+            equal_division: true,
+        }
+    }
+}
+
+impl SchedulerPolicy for Fifer {
+    fn name(&self) -> &'static str {
+        if self.equal_division {
+            "FiferEq"
+        } else {
+            "Fifer"
+        }
+    }
+
+    fn queue_order(&self) -> QueueOrdering {
+        if self.equal_division {
+            QueueOrdering::Fifo
+        } else {
+            QueueOrdering::LeastSlackFirst
+        }
+    }
+
+    fn batching(&self) -> bool {
+        true
+    }
+
+    fn proactive(&self) -> bool {
+        true
+    }
+
+    fn slack_policy(&self) -> Option<SlackPolicy> {
+        self.equal_division.then_some(SlackPolicy::EqualDivision)
+    }
+
+    fn make_predictor(&self, cfg: &SystemConfig) -> Option<Box<dyn Predictor>> {
+        let wp = std::path::Path::new(&cfg.artifacts_dir).join("predictor_weights.json");
+        let p: Box<dyn Predictor> = match nn::LstmPredictor::load(&wp) {
+            Ok(l) => Box::new(l),
+            // graceful degradation pre-`make artifacts`: EWMA
+            Err(_) => Box::new(classic::Ewma::new(cfg.rm.ewma_alpha)),
+        };
+        Some(p)
+    }
+
+    fn on_monitor(&mut self, view: &PolicyView) -> ScalingPlan {
+        // Reactive first, proactive second — proactive counts the
+        // reactive spawns as live-to-be so one tick never provisions a
+        // stage twice for the same backlog.
+        let mut spawns = reactive_spawns(view);
+        let proactive = proactive_spawns(view, &spawns);
+        spawns.extend(proactive);
+        ScalingPlan {
+            spawns,
+            stop_on_full: false,
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Read-only coordinator snapshot handed to every policy hook.
+
+use std::collections::HashMap;
+
+use crate::coldstart::ColdStartModel;
+use crate::config::SystemConfig;
+use crate::coordinator::queue::StageQueue;
+use crate::coordinator::slack::SlackPlan;
+use crate::coordinator::stage_share;
+use crate::coordinator::state::StateStore;
+use crate::model::{Catalog, ChainId, MsId};
+use crate::util::{to_ms, Micros};
+
+/// Everything a [`super::SchedulerPolicy`] may read when deciding. All
+/// fields are shared references into the engine — policies cannot mutate
+/// cluster state, only return plans for the engine to execute.
+pub struct PolicyView<'a> {
+    pub cat: &'a Catalog,
+    pub cfg: &'a SystemConfig,
+    /// Chains of the workload mix.
+    pub chains: &'a [ChainId],
+    /// The slack plan (Eq. 1 batch sizes, per-stage budgets).
+    pub plan: &'a SlackPlan,
+    /// Stages of the mix, in first-seen chain order (the engine's
+    /// canonical iteration order — iterate this for determinism).
+    pub stages: &'a [MsId],
+    pub queues: &'a HashMap<MsId, StageQueue>,
+    pub store: &'a StateStore,
+    pub cold: &'a ColdStartModel,
+    /// Engine time: virtual µs in the simulator, monotonic µs live.
+    /// Never a wall clock — see the module hook contract.
+    pub now: Micros,
+    /// Clamped max-arrival-rate forecast (req/s). Only populated during
+    /// `on_monitor`, and only when the policy built a predictor.
+    pub forecast: Option<f64>,
+    /// Long-run average arrival rate of the driving workload (req/s):
+    /// the trace average in simulation, the generator rate live. SBatch
+    /// sizes its fixed pool from this (§5.3).
+    pub avg_rate_hint: f64,
+}
+
+impl PolicyView<'_> {
+    /// Requests waiting in the stage's global queue.
+    pub fn pending(&self, ms_id: MsId) -> usize {
+        self.queues.get(&ms_id).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Live containers of the stage (warm + starting).
+    pub fn live(&self, ms_id: MsId) -> usize {
+        self.store.stage_containers(ms_id)
+    }
+
+    /// Free slots across the stage's warm containers.
+    pub fn warm_free_slots(&self, ms_id: MsId) -> usize {
+        self.store.warm_free_slots(ms_id)
+    }
+
+    /// Slots that will come online from still-starting containers.
+    pub fn starting_slots(&self, ms_id: MsId) -> usize {
+        self.store.starting_slots(ms_id)
+    }
+
+    /// Eq. 1 batch size for the stage's containers.
+    pub fn batch(&self, ms_id: MsId) -> usize {
+        self.plan.batch_for(ms_id)
+    }
+
+    /// Per-stage response budget S_r = slack + exec (ms).
+    pub fn s_r_ms(&self, ms_id: MsId) -> f64 {
+        self.plan.s_r_for(ms_id)
+    }
+
+    /// Mean execution time of the microservice (ms).
+    pub fn exec_ms_mean(&self, ms_id: MsId) -> f64 {
+        self.cat.microservices[ms_id].exec_ms_mean
+    }
+
+    /// Expected cold-start latency for the stage (ms).
+    pub fn expected_cold_ms(&self, ms_id: MsId) -> f64 {
+        to_ms(self.cold.expected_micros(&self.cat.microservices[ms_id]))
+    }
+
+    /// Fraction of arriving jobs that pass through this stage under the
+    /// current mix (splits a global forecast per stage).
+    pub fn share(&self, ms_id: MsId) -> f64 {
+        stage_share(self.cat, self.chains, ms_id)
+    }
+
+    /// Marginal batched-execution cost γ (see `RmConfig`).
+    pub fn gamma(&self) -> f64 {
+        self.cfg.rm.batch_cost_gamma
+    }
+
+    /// Idle containers of the stage unused since before `cutoff`,
+    /// oldest first.
+    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> Vec<u64> {
+        self.store.idle_since(ms_id, cutoff)
+    }
+
+    /// Requests currently occupying warm slots of the stage (dispatched
+    /// or executing): capacity minus free minus still-starting slots.
+    pub fn in_flight_slots(&self, ms_id: MsId) -> usize {
+        let capacity = self.live(ms_id) * self.batch(ms_id).max(1);
+        capacity
+            .saturating_sub(self.warm_free_slots(ms_id))
+            .saturating_sub(self.starting_slots(ms_id))
+    }
+}

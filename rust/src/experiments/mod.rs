@@ -116,25 +116,40 @@ pub fn run_policy(
     }
 }
 
-/// §6.1 prototype experiments: all five RMs on one workload mix.
-pub fn run_prototype(mix_name: &str, duration_s: usize, seed: u64) -> Vec<PolicyRun> {
-    Policy::ALL
+/// Run one simulation per policy in `policies`, in order. Drivers that
+/// reproduce a paper figure pass `&Policy::PAPER`; registry-wide sweeps
+/// pass `&Policy::ALL`.
+pub fn run_policies(
+    policies: &[Policy],
+    mix_name: &str,
+    kind: TraceKind,
+    duration_s: usize,
+    prototype_cluster: bool,
+    seed: u64,
+) -> Vec<PolicyRun> {
+    policies
         .iter()
-        .map(|&p| run_policy(p, mix_name, TraceKind::Poisson, duration_s, true, seed))
+        .map(|&p| run_policy(p, mix_name, kind, duration_s, prototype_cluster, seed))
         .collect()
 }
 
-/// §6.2 macro simulations: all five RMs on a real-trace workload.
+/// §6.1 prototype experiments: every registered RM on one workload mix.
+/// Iterates the policy registry (`Policy::ALL`), so newly registered
+/// policies (e.g. `Kn`, `FiferEq`) appear automatically; the paper's
+/// five RMs come first, so positional lookups against them stay valid.
+pub fn run_prototype(mix_name: &str, duration_s: usize, seed: u64) -> Vec<PolicyRun> {
+    run_policies(&Policy::ALL, mix_name, TraceKind::Poisson, duration_s, true, seed)
+}
+
+/// §6.2 macro simulations: every registered RM on a real-trace workload
+/// (registry-ordered, like [`run_prototype`]).
 pub fn run_macro(
     kind: TraceKind,
     mix_name: &str,
     duration_s: usize,
     seed: u64,
 ) -> Vec<PolicyRun> {
-    Policy::ALL
-        .iter()
-        .map(|&p| run_policy(p, mix_name, kind, duration_s, false, seed))
-        .collect()
+    run_policies(&Policy::ALL, mix_name, kind, duration_s, false, seed)
 }
 
 // ---------------------------------------------------------------------

@@ -27,6 +27,12 @@
 //! request path) and a **high-fidelity event-driven cluster simulator**
 //! used for the paper's large-scale trace-driven experiments.
 //!
+//! Resource-management policies are **plug-ins**: the paper's five RMs,
+//! the Knative-style `Kn` autoscaler, and the `FiferEq` ablation all
+//! implement [`coordinator::policy::SchedulerPolicy`], and both engines
+//! drive the same trait objects. See `examples/custom_policy.rs` for a
+//! user-defined policy run through [`sim::run_sim_with`].
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 

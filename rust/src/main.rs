@@ -14,7 +14,7 @@
 use anyhow::Result;
 use fifer::bench::Table;
 use fifer::cli::Args;
-use fifer::config::Policy;
+use fifer::config::{Policy, RmConfig};
 use fifer::experiments::{self, TraceKind};
 use fifer::server::{serve, ServeParams};
 
@@ -44,20 +44,25 @@ fn run() -> Result<()> {
         "coldstart" => cmd_coldstart(&args),
         "stages" => cmd_stages(&args),
         _ => {
+            let policy_help = format!(
+                "scheduler policy ({}); default fifer",
+                Policy::names().join("|")
+            );
             print!(
                 "{}",
-                Args::render_help(
+                Args::render_help_with_options(
                     "fifer",
                     "stage-aware serverless function-chain resource manager \
                      (Fifer, Middleware'20 reproduction)",
                     &[
                         ("serve", "live serving with real PJRT batched inference"),
                         ("simulate", "event-driven cluster simulation (one policy)"),
-                        ("compare", "all five RMs side by side (Fig. 8 style)"),
+                        ("compare", "every registered RM side by side (Fig. 8 style)"),
                         ("predict", "score load predictors on a trace (Fig. 6)"),
                         ("coldstart", "cold/warm start characterization (Fig. 2)"),
                         ("stages", "per-stage execution breakdown (Fig. 3)"),
-                    ]
+                    ],
+                    &[("--policy <name>", policy_help.as_str())],
                 )
             );
             Ok(())
@@ -71,11 +76,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.f64_or("duration", 10.0)?,
     );
     p.executors = args.usize_or("executors", 2)?;
-    p.batching = !args.flag("no-batching");
+    // --no-batching is shorthand for the non-batching baseline policy;
+    // combining it with an explicit batching --policy is contradictory
+    let policy = match (args.get("policy"), args.flag("no-batching")) {
+        (Some(name), false) => Policy::from_name(name)?,
+        (None, no_batch) => Policy::from_name(if no_batch { "bline" } else { "fifer" })?,
+        (Some(name), true) => {
+            let policy = Policy::from_name(name)?;
+            if policy.batching() {
+                anyhow::bail!(
+                    "--no-batching conflicts with --policy {} (a batching RM); \
+                     pick a non-batching policy or drop the flag",
+                    policy.name()
+                );
+            }
+            policy
+        }
+    };
+    p.cfg.rm = RmConfig::paper(policy);
     p.cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
     println!(
-        "live serve: rate={} req/s, {}s, batching={}",
-        p.rate, p.duration_s, p.batching
+        "live serve: rate={} req/s, {}s, policy={} (batching={})",
+        p.rate,
+        p.duration_s,
+        policy.name(),
+        policy.batching()
     );
     let r = serve(p)?;
     println!(

@@ -12,7 +12,7 @@ use crate::model::{Catalog, ChainId, MsId};
 use crate::util::{stats, to_ms, Micros, MICROS_PER_S};
 
 /// Timeline of one stage of one job.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StageRecord {
     pub ms_id: MsId,
     /// When the request entered the stage's global queue.
@@ -41,7 +41,7 @@ impl StageRecord {
 }
 
 /// Timeline of one job (one request through a whole chain).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
     pub chain: ChainId,
     pub arrival: Micros,
@@ -68,7 +68,7 @@ impl JobRecord {
 }
 
 /// Per-container usage record (for RPC / Fig. 12a).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ContainerRecord {
     pub ms_id: MsId,
     pub spawned_at: Micros,

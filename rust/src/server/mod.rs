@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::SystemConfig;
+use crate::coordinator::policy::SchedulerPolicy;
 use crate::coordinator::slack::SlackPlan;
 use crate::model::{Catalog, ChainId, MsId};
 use crate::runtime::Runtime;
@@ -103,8 +104,6 @@ pub struct ServeParams {
     /// max time a request may wait for its batch to fill, as a fraction
     /// of the stage's allocated slack
     pub flush_frac: f64,
-    /// batching on (Fifer) or off (Bline-style, batch = 1)
-    pub batching: bool,
 }
 
 impl ServeParams {
@@ -116,7 +115,6 @@ impl ServeParams {
             duration_s,
             executors: 2,
             flush_frac: 0.5,
-            batching: true,
         }
     }
 }
@@ -171,9 +169,20 @@ fn flush_buf(
 }
 
 /// Run the live server; blocks until the run drains.
+///
+/// The scheduler policy registered under `p.cfg.rm.policy` drives the
+/// same trait object as the simulator: batching (and with it the Eq. 1
+/// slack plan + deadline flushing) comes from the policy, never from an
+/// engine branch. The live path has a fixed executor pool and flushes
+/// whole stage buffers, so **only the `batching` hook applies here**;
+/// `queue_order` (flushes take the entire buffer, so intra-batch order
+/// is moot) and the container-scaling hooks (`on_arrival`, `on_monitor`,
+/// `on_scan`) are exercised by the simulator.
 pub fn serve(p: ServeParams) -> Result<ServeReport> {
     let cat = Catalog::paper();
-    let plan = SlackPlan::build(&cat, &p.chains, &p.cfg.rm, p.batching);
+    let pol: Box<dyn SchedulerPolicy> = p.cfg.rm.policy.build();
+    let batching = pol.batching();
+    let plan = SlackPlan::build(&cat, &p.chains, &p.cfg.rm, batching);
     let artifacts = Path::new(&p.cfg.artifacts_dir).to_path_buf();
     // fail fast if artifacts are missing
     crate::runtime::Manifest::load(&artifacts)?;
@@ -394,7 +403,7 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
                         .oldest
                         .map(|o| o.elapsed().as_secs_f64() * 1e3 > deadline_ms)
                         .unwrap_or(false);
-                    if stale || (!p.batching && !buf.jobs.is_empty()) {
+                    if stale || (!batching && !buf.jobs.is_empty()) {
                         flush_buf(&cat, &exec_txs, ms_id, buf, &mut rr, &mut rng,
                                   &mut batches, &mut batched_jobs);
                     }
@@ -448,7 +457,9 @@ mod tests {
     #[test]
     fn quick_params_sane() {
         let p = ServeParams::quick(10.0, 1.0);
-        assert!(p.batching);
+        // default policy is Fifer — a batching RM
+        assert_eq!(p.cfg.rm.policy, crate::config::Policy::Fifer);
+        assert!(p.cfg.rm.policy.build().batching());
         assert_eq!(p.chains.len(), 2);
     }
 

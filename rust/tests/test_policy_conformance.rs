@@ -1,0 +1,118 @@
+//! Policy-conformance suite: every policy in the registry — including
+//! post-paper additions like `Kn` and `FiferEq` — must drive the cluster
+//! correctly under the λ=5 Poisson smoke workload: jobs complete,
+//! request conservation and store-index invariants hold throughout the
+//! run, and each policy's *declared* capabilities match what the
+//! mechanics observe.
+
+use fifer::config::{Policy, RmConfig, SystemConfig};
+use fifer::coordinator::queue::Ordering as QueueOrdering;
+use fifer::coordinator::slack::SlackPlan;
+use fifer::model::Catalog;
+use fifer::sim::{Engine, SimParams};
+use fifer::trace::Trace;
+use fifer::util::secs;
+
+fn smoke_params(policy: Policy, seed: u64) -> SimParams {
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(policy);
+    cfg.seed = seed;
+    cfg.rm.idle_timeout_s = 60.0;
+    SimParams {
+        cfg,
+        chains: cat.mix("Heavy").unwrap().chains.clone(),
+        trace: Trace::poisson(5.0, 60),
+        drain_s: 30.0,
+    }
+}
+
+#[test]
+fn every_registered_policy_completes_the_smoke_sim_with_invariants() {
+    let cat = Catalog::paper();
+    for policy in Policy::ALL {
+        // conservation + store consistency verified every 200 events
+        let rec = Engine::new(smoke_params(policy, 1))
+            .run_checked(200)
+            .unwrap_or_else(|e| panic!("{}: invariant violated: {e}", policy.name()));
+        let sum = rec.summarize(&cat);
+        assert!(sum.jobs > 50, "{}: only {} jobs completed", policy.name(), sum.jobs);
+        assert!(sum.total_spawned > 0, "{}: never spawned", policy.name());
+        assert!(sum.energy_wh > 0.0, "{}: no energy accounted", policy.name());
+    }
+}
+
+#[test]
+fn declared_capabilities_match_registry_and_slack_plan() {
+    let cat = Catalog::paper();
+    let chains = cat.mix("Heavy").unwrap().chains.clone();
+    for policy in Policy::ALL {
+        let built = policy.build();
+        // the enum facade and the trait object must agree
+        assert_eq!(policy.name(), built.name());
+        assert_eq!(policy.batching(), built.batching());
+        assert_eq!(policy.proactive(), built.proactive());
+        assert_eq!(
+            policy.lsf(),
+            built.queue_order() == QueueOrdering::LeastSlackFirst
+        );
+        // a non-batching policy's slack plan must pin every batch to 1
+        let rm = RmConfig::paper(policy);
+        let plan = SlackPlan::build(&cat, &chains, &rm, built.batching());
+        if !built.batching() {
+            for (&ms, &b) in &plan.batch {
+                assert_eq!(b, 1, "{}: stage {ms} batch {b}", policy.name());
+            }
+        } else {
+            // batching policies get at least one stage with a real batch
+            assert!(
+                plan.batch.values().any(|&b| b > 1),
+                "{}: batching declared but every batch is 1",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn monitor_only_policies_still_drain() {
+    // Kn never spawns from on_arrival: every container it ever creates
+    // comes from monitor-tick scaling, so nothing can exist before the
+    // first monitor interval — yet the queue must still drain.
+    let p = smoke_params(Policy::Kn, 3);
+    let monitor_s = p.cfg.rm.monitor_interval_s;
+    let rec = Engine::new(p).run_checked(200).unwrap();
+    let cat = Catalog::paper();
+    let sum = rec.summarize(&cat);
+    assert!(sum.jobs > 50, "Kn drained only {} jobs", sum.jobs);
+    assert!(!rec.containers.is_empty());
+    assert!(
+        rec.containers
+            .iter()
+            .all(|c| c.spawned_at >= secs(monitor_s)),
+        "Kn spawned a container before the first monitor tick"
+    );
+}
+
+#[test]
+fn sbatch_pool_stays_fixed_under_conformance_run() {
+    // the one policy that must never scale or reclaim after t = 0
+    let rec = Engine::new(smoke_params(Policy::SBatch, 5))
+        .run_checked(200)
+        .unwrap();
+    assert!(rec.containers.iter().all(|c| c.spawned_at == 0));
+}
+
+#[test]
+fn fifereq_ablation_differs_from_fifer() {
+    // same workload, same seed: the ablated slack division must yield a
+    // different (equal-division) batch plan than proportional Fifer on
+    // at least one stage of the heavy mix
+    let cat = Catalog::paper();
+    let chains = cat.mix("Heavy").unwrap().chains.clone();
+    let plan_f = SlackPlan::build(&cat, &chains, &RmConfig::paper(Policy::Fifer), true);
+    let plan_eq = SlackPlan::build(&cat, &chains, &RmConfig::paper(Policy::FiferEq), true);
+    assert!(
+        plan_f.batch != plan_eq.batch || plan_f.s_r_ms != plan_eq.s_r_ms,
+        "equal-division ablation produced an identical plan"
+    );
+}

@@ -1,10 +1,23 @@
 //! Integration: the live serving path end to end (real PJRT inference).
 //! Requires `make artifacts`; no-ops gracefully without them.
+//!
+//! The live path is driven by the same `SchedulerPolicy` trait objects
+//! as the simulator — batching comes from the policy, so the smoke
+//! tests below swap policies (including the post-paper `Kn`/`FiferEq`)
+//! purely through config.
 
+use fifer::config::{Policy, RmConfig};
 use fifer::server::{serve, ServeParams};
 
 fn have_artifacts() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn quick_with_policy(policy: Policy, rate: f64, duration_s: f64) -> ServeParams {
+    let mut p = ServeParams::quick(rate, duration_s);
+    p.cfg.rm = RmConfig::paper(policy);
+    p.executors = 1;
+    p
 }
 
 #[test]
@@ -12,8 +25,7 @@ fn live_serve_completes_jobs_within_slo() {
     if !have_artifacts() {
         return;
     }
-    let mut p = ServeParams::quick(8.0, 4.0);
-    p.executors = 1;
+    let p = quick_with_policy(Policy::Fifer, 8.0, 4.0);
     let r = serve(p).unwrap();
     assert!(r.jobs > 5, "only {} jobs", r.jobs);
     assert!(r.median_ms > 0.0 && r.median_ms.is_finite());
@@ -32,13 +44,9 @@ fn live_serve_batching_reduces_model_invocations() {
     if !have_artifacts() {
         return;
     }
-    let mut batched = ServeParams::quick(25.0, 4.0);
-    batched.executors = 1;
-    let rb = serve(batched).unwrap();
-    let mut unbatched = ServeParams::quick(25.0, 4.0);
-    unbatched.executors = 1;
-    unbatched.batching = false;
-    let ru = serve(unbatched).unwrap();
+    let rb = serve(quick_with_policy(Policy::Fifer, 25.0, 4.0)).unwrap();
+    // Bline is the non-batching baseline: batch = 1 at every stage
+    let ru = serve(quick_with_policy(Policy::Bline, 25.0, 4.0)).unwrap();
     // with batching, strictly fewer PJRT calls per completed job
     let per_job_b = rb.batches as f64 / rb.jobs.max(1) as f64;
     let per_job_u = ru.batches as f64 / ru.jobs.max(1) as f64;
@@ -47,4 +55,21 @@ fn live_serve_batching_reduces_model_invocations() {
         "batched {per_job_b:.2} vs unbatched {per_job_u:.2} calls/job"
     );
     assert!(rb.avg_batch > ru.avg_batch);
+}
+
+#[test]
+fn live_serve_runs_every_registered_policy() {
+    // `--policy kn` / `--policy fifereq` end-to-end: every registry
+    // entry — present and future — must drive the live coordinator
+    // without engine edits
+    if !have_artifacts() {
+        return;
+    }
+    for policy in Policy::ALL {
+        let r = serve(quick_with_policy(policy, 10.0, 2.0)).unwrap();
+        assert!(r.jobs > 0, "{}: no jobs served", policy.name());
+        assert!(r.batches > 0, "{}: no batches", policy.name());
+        // every realized batch holds at least one request
+        assert!(r.avg_batch >= 1.0, "{}", policy.name());
+    }
 }
