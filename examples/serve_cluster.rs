@@ -1,4 +1,4 @@
-//! End-to-end live serving driver (the DESIGN.md validation workload).
+//! End-to-end live serving driver (the docs/DESIGN.md validation workload).
 //!
 //! Loads the real AOT-compiled microservice models, serves Poisson
 //! traffic for the heavy workload mix through Fifer's slack-based

@@ -7,7 +7,7 @@ computes ``activation(x @ w + b)`` for a batch of requests, tiled so that on
 a real TPU each (block_m, block_n) output tile is produced by the MXU from
 VMEM-resident operand tiles.
 
-TPU adaptation notes (DESIGN.md §3):
+TPU adaptation notes (docs/DESIGN.md §3):
   * Tiles are (block_m=128, block_n=128) by default — the MXU systolic array
     shape — with the full K dimension resident per tile (the Fifer models
     are small: K ≤ 4096 keeps the per-tile VMEM footprint
@@ -113,7 +113,7 @@ def vmem_bytes(block_m: int, block_n: int, k: int, dtype_bytes: int = 4) -> int:
 def mxu_utilization(m: int, n: int, k: int, block_m: int = 128, block_n: int = 128) -> float:
     """Fraction of MXU work that is useful (non-padding) for a (m,k)x(k,n)
     matmul under this kernel's padding scheme. Used for the §Perf roofline
-    estimate in EXPERIMENTS.md (interpret mode gives no TPU wall-clock)."""
+    estimate in docs/EXPERIMENTS.md (interpret mode gives no TPU wall-clock)."""
     bm = min(block_m, _round_up(m, 8))
     bn = min(block_n, _round_up(n, 8))
     mp, np_ = _round_up(m, bm), _round_up(n, bn)

@@ -7,7 +7,7 @@ Rust runtime executes via PJRT (Python is never on the request path):
    microservice (paper Table 3). The Rust "containers" run these for real in
    live-serving mode, batched at Fifer's per-stage batch size. Layer sizes
    scale roughly with the paper's mean execution times (relative, not
-   absolute — see DESIGN.md §2 substitutions). Every dense layer is the
+   absolute — see docs/DESIGN.md §2 substitutions). Every dense layer is the
    Pallas kernel from kernels/batched_mlp.py.
 
 2. **Load-predictor networks** — the 2-layer/32-unit LSTM (paper §4.5.1) and

@@ -8,7 +8,7 @@ The paper drives its large-scale simulations with two real traces:
     diurnal pattern.
 
 We do not have the raw traces, so we synthesize generators that match the
-statistics the paper publishes and exploits (DESIGN.md §2). This module is
+statistics the paper publishes and exploits (docs/DESIGN.md §2). This module is
 the *training-side* generator: lstm_train.py fits the LSTM on 60% of the
 WITS trace exactly as the paper does, and aot.py exports the generated
 traces to artifacts/ so the Rust evaluation (Fig. 6) scores predictors on
@@ -68,9 +68,16 @@ def wiki_trace(duration_s: int = DEFAULT_DURATION_S, seed: int = WIKI_SEED) -> n
 
 
 def window_maxima(rate: np.ndarray, window_s: int = 5) -> np.ndarray:
-    """Max arrival rate per adjacent window (paper §4.5: W_s = 5 s)."""
-    n = len(rate) // window_s
-    return rate[: n * window_s].reshape(n, window_s).max(axis=1)
+    """Max arrival rate per adjacent window (paper §4.5: W_s = 5 s).
+
+    A trailing partial window contributes its own maximum (mirrors
+    rust trace::Trace::window_maxima — the predictor input must not
+    silently lose the end of the series).
+    """
+    return np.asarray(
+        [rate[i : i + window_s].max() for i in range(0, len(rate), window_s)],
+        dtype=np.float64,
+    )
 
 
 def make_dataset(rate: np.ndarray, history: int = 20, horizon: int = 2,

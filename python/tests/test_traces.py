@@ -36,6 +36,13 @@ def test_window_maxima():
     np.testing.assert_allclose(w, [4, 9, 14, 19])
 
 
+def test_window_maxima_includes_tail_window():
+    # regression: the trailing partial window used to be dropped
+    rate = np.arange(22, dtype=float)
+    w = traces.window_maxima(rate, window_s=5)
+    np.testing.assert_allclose(w, [4, 9, 14, 19, 21])
+
+
 def test_make_dataset_shapes_and_alignment():
     rate = traces.wits_trace(duration_s=600)
     x, y = traces.make_dataset(rate, history=20, horizon=2)

@@ -9,7 +9,7 @@ use fifer::bench::{norm, section, Table};
 use fifer::experiments::{run_macro, TraceKind};
 
 fn main() {
-    // duration bounded for single-core CI; EXPERIMENTS.md records the
+    // duration bounded for single-core CI; docs/EXPERIMENTS.md records the
     // long-run numbers (the trace tiles to any duration).
     let duration = 600;
     for mix in ["Heavy", "Medium", "Light"] {

@@ -374,6 +374,6 @@ fn main() {
             }
         }
         t.print();
-        println!("(simulator batch_cost_gamma defaults to 0.25; see EXPERIMENTS.md §Perf)");
+        println!("(simulator batch_cost_gamma defaults to 0.25; see docs/EXPERIMENTS.md §Perf)");
     }
 }

@@ -3,7 +3,7 @@
 //! Every `rust/benches/*.rs` target is `harness = false` and uses this
 //! module to time closures and print paper-style tables (the same rows the
 //! paper's figures plot). Results can also be dumped as JSON for
-//! EXPERIMENTS.md bookkeeping.
+//! docs/EXPERIMENTS.md bookkeeping.
 
 use std::time::Instant;
 

@@ -52,6 +52,14 @@ impl Args {
         Args::parse(&argv)
     }
 
+    /// The i-th positional argument (after the subcommand), if present.
+    /// Nested subcommands read their verb from `pos(0)` — e.g. in
+    /// `fifer scenario run sweep.toml`, `command` is `"scenario"`,
+    /// `pos(0)` is `"run"` and `pos(1)` is `"sweep.toml"`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
             || self.values.get(name).map(|v| v == "true").unwrap_or(false)
@@ -153,6 +161,9 @@ mod tests {
         assert_eq!(a.positional, vec!["file1", "file2"]);
         assert_eq!(a.f64_or("missing", 2.5).unwrap(), 2.5);
         assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+        assert_eq!(a.pos(0), Some("file1"));
+        assert_eq!(a.pos(1), Some("file2"));
+        assert_eq!(a.pos(2), None);
     }
 
     #[test]

@@ -11,13 +11,17 @@
 
 pub mod toml;
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::policy::SchedulerPolicy;
 
-use self::toml::TomlDoc;
+use self::toml::{TomlDoc, TomlValue};
+
+/// One parsed `[section]` of a TOML-subset document.
+pub type TomlSection = BTreeMap<String, TomlValue>;
 
 /// Cluster shape + power model parameters.
 #[derive(Debug, Clone)]
@@ -58,6 +62,47 @@ impl ClusterConfig {
             peak_watts: 520.0,
             node_off_after_s: 60.0,
         }
+    }
+
+    /// Look up a named preset: `"prototype"` or `"simulation"` (the two
+    /// testbeds of the paper). Config and scenario files both use this.
+    pub fn preset(name: &str) -> Result<ClusterConfig> {
+        match name {
+            "prototype" => Ok(ClusterConfig::prototype()),
+            "simulation" => Ok(ClusterConfig::simulation()),
+            other => anyhow::bail!("unknown cluster preset {other:?} (prototype|simulation)"),
+        }
+    }
+
+    /// Every `[cluster]` key [`ClusterConfig::apply_doc`] understands
+    /// (plus `preset`, resolved by the caller). Strict parsers (the
+    /// scenario layer) reject keys outside this list.
+    pub const DOC_KEYS: [&'static str; 7] = [
+        "preset",
+        "nodes",
+        "cores_per_node",
+        "cpu_per_container",
+        "idle_watts",
+        "peak_watts",
+        "node_off_after_s",
+    ];
+
+    /// Apply `[cluster]` overrides from a parsed config/scenario file on
+    /// top of the current values. The `preset` key is resolved by the
+    /// caller (it replaces the whole struct); every other key overrides
+    /// one field. Unknown keys are ignored here (config files stay
+    /// forward-compatible) — strict consumers check [`ClusterConfig::DOC_KEYS`].
+    pub fn apply_doc(&mut self, sec: &TomlSection) -> Result<()> {
+        let g = |k: &str, d: f64| -> Result<f64> {
+            sec.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
+        };
+        self.nodes = g("nodes", self.nodes as f64)? as usize;
+        self.cores_per_node = g("cores_per_node", self.cores_per_node as f64)? as usize;
+        self.cpu_per_container = g("cpu_per_container", self.cpu_per_container)?;
+        self.idle_watts = g("idle_watts", self.idle_watts)?;
+        self.peak_watts = g("peak_watts", self.peak_watts)?;
+        self.node_off_after_s = g("node_off_after_s", self.node_off_after_s)?;
+        Ok(())
     }
 
     pub fn total_cores(&self) -> usize {
@@ -204,7 +249,7 @@ pub struct RmConfig {
     /// Marginal cost of adding one request to an inference batch:
     /// exec(B) = exec(1) · (1 + γ·(B−1)). γ=1 is serial execution; the
     /// default 0.25 matches batched-matmul amortization measured on the
-    /// real PJRT artifacts (see EXPERIMENTS.md §Perf calibration).
+    /// real PJRT artifacts (see docs/EXPERIMENTS.md §Perf calibration).
     pub batch_cost_gamma: f64,
 }
 
@@ -229,6 +274,48 @@ impl RmConfig {
             max_stage_fraction: 0.5,
             batch_cost_gamma: 0.25,
         }
+    }
+
+    /// Every `[rm]` key [`RmConfig::apply_doc`] understands. Strict
+    /// parsers (the scenario layer) reject keys outside this list.
+    pub const DOC_KEYS: [&'static str; 10] = [
+        "monitor_interval_s",
+        "sample_window_s",
+        "history_s",
+        "idle_timeout_s",
+        "max_batch",
+        "sbatch_headroom",
+        "ewma_alpha",
+        "max_stage_fraction",
+        "batch_cost_gamma",
+        "slack_policy",
+    ];
+
+    /// Apply `[rm]` overrides from a parsed config/scenario file. The
+    /// policy itself is not an `[rm]` key (config files name it at the
+    /// root; scenario files sweep a whole policy list instead). Unknown
+    /// keys are ignored here — strict consumers check [`RmConfig::DOC_KEYS`].
+    pub fn apply_doc(&mut self, sec: &TomlSection) -> Result<()> {
+        let g = |k: &str, d: f64| -> Result<f64> {
+            sec.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
+        };
+        self.monitor_interval_s = g("monitor_interval_s", self.monitor_interval_s)?;
+        self.sample_window_s = g("sample_window_s", self.sample_window_s)?;
+        self.history_s = g("history_s", self.history_s)?;
+        self.idle_timeout_s = g("idle_timeout_s", self.idle_timeout_s)?;
+        self.max_batch = g("max_batch", self.max_batch as f64)? as usize;
+        self.sbatch_headroom = g("sbatch_headroom", self.sbatch_headroom)?;
+        self.ewma_alpha = g("ewma_alpha", self.ewma_alpha)?;
+        self.max_stage_fraction = g("max_stage_fraction", self.max_stage_fraction)?;
+        self.batch_cost_gamma = g("batch_cost_gamma", self.batch_cost_gamma)?;
+        if let Some(v) = sec.get("slack_policy") {
+            self.slack_policy = match v.as_str()? {
+                "proportional" => SlackPolicy::Proportional,
+                "equal" => SlackPolicy::EqualDivision,
+                other => anyhow::bail!("unknown slack_policy {other:?}"),
+            };
+        }
+        Ok(())
     }
 }
 
@@ -283,44 +370,13 @@ impl SystemConfig {
             cfg.artifacts_dir = v.as_str()?.to_string();
         }
         if let Some(c) = doc.get("cluster") {
-            let g = |k: &str, d: f64| -> Result<f64> {
-                c.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
-            };
             if let Some(v) = c.get("preset") {
-                cfg.cluster = match v.as_str()? {
-                    "prototype" => ClusterConfig::prototype(),
-                    "simulation" => ClusterConfig::simulation(),
-                    other => anyhow::bail!("unknown cluster preset {other:?}"),
-                };
+                cfg.cluster = ClusterConfig::preset(v.as_str()?)?;
             }
-            cfg.cluster.nodes = g("nodes", cfg.cluster.nodes as f64)? as usize;
-            cfg.cluster.cores_per_node =
-                g("cores_per_node", cfg.cluster.cores_per_node as f64)? as usize;
-            cfg.cluster.cpu_per_container =
-                g("cpu_per_container", cfg.cluster.cpu_per_container)?;
-            cfg.cluster.idle_watts = g("idle_watts", cfg.cluster.idle_watts)?;
-            cfg.cluster.peak_watts = g("peak_watts", cfg.cluster.peak_watts)?;
-            cfg.cluster.node_off_after_s =
-                g("node_off_after_s", cfg.cluster.node_off_after_s)?;
+            cfg.cluster.apply_doc(c)?;
         }
         if let Some(r) = doc.get("rm") {
-            let g = |k: &str, d: f64| -> Result<f64> {
-                r.get(k).map(|v| v.as_f64()).unwrap_or(Ok(d))
-            };
-            cfg.rm.monitor_interval_s = g("monitor_interval_s", cfg.rm.monitor_interval_s)?;
-            cfg.rm.sample_window_s = g("sample_window_s", cfg.rm.sample_window_s)?;
-            cfg.rm.history_s = g("history_s", cfg.rm.history_s)?;
-            cfg.rm.idle_timeout_s = g("idle_timeout_s", cfg.rm.idle_timeout_s)?;
-            cfg.rm.max_batch = g("max_batch", cfg.rm.max_batch as f64)? as usize;
-            cfg.rm.sbatch_headroom = g("sbatch_headroom", cfg.rm.sbatch_headroom)?;
-            cfg.rm.ewma_alpha = g("ewma_alpha", cfg.rm.ewma_alpha)?;
-            if let Some(v) = r.get("slack_policy") {
-                cfg.rm.slack_policy = match v.as_str()? {
-                    "proportional" => SlackPolicy::Proportional,
-                    "equal" => SlackPolicy::EqualDivision,
-                    other => anyhow::bail!("unknown slack_policy {other:?}"),
-                };
-            }
+            cfg.rm.apply_doc(r)?;
         }
         Ok(cfg)
     }
@@ -416,6 +472,17 @@ slack_policy = "equal"
         assert_eq!(cfg.cluster.cores_per_node, 32); // from simulation preset
         assert_eq!(cfg.rm.idle_timeout_s, 30.0);
         assert_eq!(cfg.rm.slack_policy, SlackPolicy::EqualDivision);
+    }
+
+    #[test]
+    fn apply_doc_covers_engine_knobs() {
+        let doc = toml::parse("[rm]\nbatch_cost_gamma = 0.5\nmax_stage_fraction = 0.25").unwrap();
+        let mut rm = RmConfig::paper(Policy::Fifer);
+        rm.apply_doc(&doc["rm"]).unwrap();
+        assert_eq!(rm.batch_cost_gamma, 0.5);
+        assert_eq!(rm.max_stage_fraction, 0.25);
+        assert!(ClusterConfig::preset("nope").is_err());
+        assert_eq!(ClusterConfig::preset("simulation").unwrap().nodes, 78);
     }
 
     #[test]

@@ -55,10 +55,11 @@
 //! * `s.warm_free` / `s.starting` / `s.busy` equal `c`'s current
 //!   contribution to the per-stage and per-node aggregates.
 //!
-//! Every mutation goes through [`StateStore::refresh`] (single container)
-//! or [`StateStore::set_node_count`] + a member re-key (node membership
-//! change, which shifts the packing tie-breaker of *every* container on
-//! that node). The transition points are exactly: `spawn`, `remove`,
+//! Every mutation goes through the private `refresh` helper (single
+//! container) or `refresh_node_members` (node membership change, which
+//! shifts the packing tie-breaker of *every* container on that node).
+//! The transition points are exactly: [`StateStore::spawn`],
+//! [`StateStore::remove`],
 //! [`StateStore::dispatch`], [`StateStore::begin_batch`],
 //! [`StateStore::finish_batch`], [`StateStore::warm_up`].
 

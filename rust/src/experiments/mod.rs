@@ -1,16 +1,16 @@
-//! Experiment drivers — one per paper figure/table (DESIGN.md §4).
+//! Experiment drivers — one per paper figure/table (docs/DESIGN.md §4).
 //!
 //! Each driver builds the exact workload the paper's evaluation uses and
 //! returns structured results; the `rust/benches/*` targets print them as
-//! the same rows/series the paper plots, and `EXPERIMENTS.md` records
-//! paper-vs-measured values. Shared entry points:
+//! the same rows/series the paper plots, and `docs/EXPERIMENTS.md`
+//! records paper-vs-measured values. Shared entry points:
 //!
 //! * [`run_prototype`] — §6.1 real-system experiments: Poisson λ=50 on the
 //!   80-core prototype cluster (Figs. 8–13).
 //! * [`run_macro`] — §6.2 trace-driven simulation: Wiki/WITS on the
 //!   2500-core cluster (Figs. 14–16, Table 6).
-//! * [`fig2_coldstart`], [`fig3_stages`], [`fig6_predictors`] — the
-//!   motivation/characterization figures.
+//! * [`fig2_coldstart`], [`fig3a_breakdown`] / [`fig3b_variation`],
+//!   [`fig6_predictors`] — the motivation/characterization figures.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -20,7 +20,7 @@ use crate::config::{Policy, SystemConfig};
 use crate::metrics::{Recorder, Summary};
 use crate::model::{Catalog, MsId};
 use crate::predictor::{all_predictors, evaluate, EvalResult};
-use crate::sim::{Engine, SimParams};
+use crate::sim::SimParams;
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
 use crate::util::stats;
@@ -104,11 +104,10 @@ pub fn run_policy(
         trace,
         drain_s: 60.0,
     };
-    let recorder = Engine::new(params).run();
     // Exclude the initial cold-start transient (~2 min of cluster warm-up)
     // from the steady-state metrics, as on a long-running real cluster.
     let warmup = crate::util::secs((duration_s as f64 * 0.5).min(700.0));
-    let summary = recorder.summarize_after(&cat, warmup);
+    let (recorder, summary) = crate::sim::run_summarized(params, warmup);
     PolicyRun {
         policy,
         summary,
@@ -143,6 +142,12 @@ pub fn run_prototype(mix_name: &str, duration_s: usize, seed: u64) -> Vec<Policy
 
 /// §6.2 macro simulations: every registered RM on a real-trace workload
 /// (registry-ordered, like [`run_prototype`]).
+///
+/// Both grid drivers are special cases of the scenario subsystem: the
+/// built-in `prototype-grid` / `macro-grid` scenario files express the
+/// same matrices declaratively (see [`crate::scenario`]), and
+/// `rust/tests/test_scenario.rs` pins their cells byte-identical to
+/// these functions.
 pub fn run_macro(
     kind: TraceKind,
     mix_name: &str,

@@ -33,8 +33,27 @@
 //! drive the same trait objects. See `examples/custom_policy.rs` for a
 //! user-defined policy run through [`sim::run_sim_with`].
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! Workloads are **data**: the [`scenario`] module turns the paper's
+//! fixed trace × mix × RM evaluation grid into declarative TOML scenario
+//! files with composable traces ([`trace::Trace::overlay`] and friends)
+//! and runs arbitrary matrices through a sharded, deterministic parallel
+//! sweep runner (`fifer scenario run <file> --threads N`).
+//!
+//! # Layer map
+//!
+//! | layer | modules |
+//! |-------|---------|
+//! | workloads | [`trace`], [`model`], [`scenario`] |
+//! | policies | [`coordinator::policy`], [`config`] (registry facade) |
+//! | engines | [`sim`] (event-driven cluster), [`server`] + [`runtime`] (live PJRT) |
+//! | mechanics | [`coordinator`] (store/queues/slack/scaling), [`coldstart`], [`energy`] |
+//! | prediction | [`predictor`] (EWMA/ARIMA/LSTM zoo) |
+//! | evaluation | [`experiments`], [`metrics`], [`bench`] |
+//! | support | [`cli`], [`util`] (vendored rng/json/stats) |
+//!
+//! See the top-level `README.md` for the quickstart, `docs/DESIGN.md`
+//! for the experiment index and design notes, and `docs/EXPERIMENTS.md`
+//! for paper-vs-measured results.
 
 pub mod bench;
 pub mod cli;
@@ -47,6 +66,7 @@ pub mod metrics;
 pub mod model;
 pub mod predictor;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod sim;
 pub mod trace;

@@ -1,21 +1,25 @@
 //! `fifer` — CLI for the Fifer serverless function-chain RM framework.
 //!
-//! Subcommands map onto the paper's evaluation (DESIGN.md §4):
+//! Subcommands map onto the paper's evaluation (docs/DESIGN.md §4):
 //!
 //! ```text
 //! fifer serve      live serving: real PJRT batched inference (needs artifacts)
 //! fifer simulate   event-driven cluster simulation of one policy/mix/trace
 //! fifer compare    run all five RMs and print the Fig. 8-style table
+//! fifer scenario   run/list declarative TOML sweep matrices (parallel)
 //! fifer predict    score the Fig. 6 predictor zoo on a trace
 //! fifer coldstart  print the Fig. 2 cold/warm characterization
 //! fifer stages     print the Fig. 3 per-stage breakdown
 //! ```
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
 use fifer::bench::Table;
 use fifer::cli::Args;
 use fifer::config::{Policy, RmConfig};
 use fifer::experiments::{self, TraceKind};
+use fifer::scenario::{self, ScenarioSpec};
 use fifer::server::{serve, ServeParams};
 
 fn main() {
@@ -40,6 +44,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "compare" => cmd_compare(&args),
+        "scenario" => cmd_scenario(&args),
         "predict" => cmd_predict(&args),
         "coldstart" => cmd_coldstart(&args),
         "stages" => cmd_stages(&args),
@@ -58,6 +63,7 @@ fn run() -> Result<()> {
                         ("serve", "live serving with real PJRT batched inference"),
                         ("simulate", "event-driven cluster simulation (one policy)"),
                         ("compare", "every registered RM side by side (Fig. 8 style)"),
+                        ("scenario", "run/list declarative TOML sweep matrices"),
                         ("predict", "score load predictors on a trace (Fig. 6)"),
                         ("coldstart", "cold/warm start characterization (Fig. 2)"),
                         ("stages", "per-stage execution breakdown (Fig. 3)"),
@@ -65,6 +71,98 @@ fn run() -> Result<()> {
                     &[("--policy <name>", policy_help.as_str())],
                 )
             );
+            Ok(())
+        }
+    }
+}
+
+const SCENARIO_USAGE: &str = "usage:
+  fifer scenario run <file|builtin> [--threads N] [--json out.json] [--csv out.csv]
+  fifer scenario list              list built-in scenarios
+  fifer scenario show <builtin>    print a built-in scenario file";
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    match args.pos(0).unwrap_or("help") {
+        "run" => {
+            let target = args.pos(1).ok_or_else(|| {
+                anyhow!("scenario run needs a file or built-in name\n{SCENARIO_USAGE}")
+            })?;
+            let spec = match scenario::builtin(target) {
+                Some(text) => ScenarioSpec::parse(text)?,
+                None => ScenarioSpec::load(Path::new(target))?,
+            };
+            let threads = args.usize_or("threads", 1)?;
+            let cells = spec.cells();
+            println!(
+                "scenario {}: {} cells ({} traces x {} mixes x {} policies x {} seeds), \
+                 {} thread(s)",
+                spec.name,
+                cells.len(),
+                spec.traces.len(),
+                spec.mixes.len(),
+                spec.policies.len(),
+                spec.seeds.len(),
+                threads.clamp(1, cells.len().max(1)),
+            );
+            let results = scenario::run_scenario(&spec, threads)?;
+            let mut t = Table::new(&[
+                "trace", "mix", "policy", "seed", "jobs", "viol%", "median ms", "p99 ms",
+                "avg cont", "cold", "energy Wh",
+            ]);
+            for r in &results {
+                t.row(&[
+                    r.cell.trace.clone(),
+                    r.cell.mix.clone(),
+                    r.cell.policy.name().to_string(),
+                    format!("{}", r.cell.seed),
+                    format!("{}", r.summary.jobs),
+                    format!("{:.2}", r.summary.slo_violation_pct),
+                    format!("{:.0}", r.summary.median_ms),
+                    format!("{:.0}", r.summary.p99_ms),
+                    format!("{:.1}", r.summary.avg_containers),
+                    format!("{}", r.summary.cold_starts),
+                    format!("{:.1}", r.summary.energy_wh),
+                ]);
+            }
+            t.print();
+            if let Some(p) = args.get("json") {
+                std::fs::write(p, scenario::results_json(&spec, &results).to_string())?;
+                println!("wrote {p}");
+            }
+            if let Some(p) = args.get("csv") {
+                std::fs::write(p, scenario::results_csv(&results))?;
+                println!("wrote {p}");
+            }
+            Ok(())
+        }
+        "list" => {
+            for (name, _, about) in scenario::BUILTINS {
+                println!("{name:<16} {about}");
+            }
+            Ok(())
+        }
+        "show" => {
+            let name = args
+                .pos(1)
+                .ok_or_else(|| anyhow!("scenario show needs a built-in name\n{SCENARIO_USAGE}"))?;
+            let text = scenario::builtin(name).ok_or_else(|| {
+                anyhow!(
+                    "no built-in scenario {name:?} (try: {})",
+                    scenario::BUILTINS
+                        .iter()
+                        .map(|(n, _, _)| *n)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            print!("{text}");
+            Ok(())
+        }
+        other => {
+            if other != "help" {
+                eprintln!("unknown scenario subcommand {other:?}");
+            }
+            println!("{SCENARIO_USAGE}");
             Ok(())
         }
     }

@@ -6,9 +6,10 @@
 //! (iv) container utilization as requests-per-container (RPC),
 //! (v) cluster energy — plus the time series for Figs. 10/12/16.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::model::{Catalog, ChainId, MsId};
+use crate::util::json::Json;
 use crate::util::{stats, to_ms, Micros, MICROS_PER_S};
 
 /// Timeline of one stage of one job.
@@ -311,6 +312,16 @@ pub struct Breakdown {
     pub batch_ms: f64,
 }
 
+impl Breakdown {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("exec_ms", Json::Num(self.exec_ms)),
+            ("cold_ms", Json::Num(self.cold_ms)),
+            ("batch_ms", Json::Num(self.batch_ms)),
+        ])
+    }
+}
+
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StageStats {
     pub containers: u64,
@@ -348,6 +359,84 @@ pub struct Summary {
     pub queue_wait_median_ms: f64,
     pub queue_wait_p99_ms: f64,
     pub per_stage: HashMap<MsId, StageStats>,
+}
+
+impl Summary {
+    /// Column names of one CSV row, matching [`Summary::csv_row`].
+    pub const CSV_FIELDS: [&'static str; 12] = [
+        "jobs",
+        "slo_violation_pct",
+        "mean_ms",
+        "median_ms",
+        "p95_ms",
+        "p99_ms",
+        "avg_containers",
+        "total_spawned",
+        "cold_starts",
+        "energy_wh",
+        "queue_wait_median_ms",
+        "queue_wait_p99_ms",
+    ];
+
+    /// One CSV row (no trailing newline), columns per
+    /// [`Summary::CSV_FIELDS`]. Values use the default float rendering,
+    /// which is deterministic — sweep outputs are byte-reproducible.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.jobs,
+            self.slo_violation_pct,
+            self.mean_ms,
+            self.median_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.avg_containers,
+            self.total_spawned,
+            self.cold_starts,
+            self.energy_wh,
+            self.queue_wait_median_ms,
+            self.queue_wait_p99_ms,
+        )
+    }
+
+    /// Full JSON rendering, including the latency breakdowns and the
+    /// per-stage container stats. Object keys are sorted (the writer is
+    /// BTreeMap-backed), so the output is byte-deterministic even though
+    /// `per_stage` itself is a `HashMap`.
+    pub fn to_json(&self) -> Json {
+        let per_stage: BTreeMap<String, Json> = self
+            .per_stage
+            .iter()
+            .map(|(ms_id, st)| {
+                (
+                    ms_id.to_string(),
+                    Json::obj(vec![
+                        ("containers", Json::Num(st.containers as f64)),
+                        ("jobs", Json::Num(st.jobs as f64)),
+                        ("cold_starts", Json::Num(st.cold_starts as f64)),
+                        ("rpc", Json::Num(st.rpc())),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("slo_violation_pct", Json::Num(self.slo_violation_pct)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("median_ms", Json::Num(self.median_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("avg_containers", Json::Num(self.avg_containers)),
+            ("total_spawned", Json::Num(self.total_spawned as f64)),
+            ("cold_starts", Json::Num(self.cold_starts as f64)),
+            ("energy_wh", Json::Num(self.energy_wh)),
+            ("queue_wait_median_ms", Json::Num(self.queue_wait_median_ms)),
+            ("queue_wait_p99_ms", Json::Num(self.queue_wait_p99_ms)),
+            ("tail_breakdown", self.tail_breakdown.to_json()),
+            ("avg_breakdown", self.avg_breakdown.to_json()),
+            ("per_stage", Json::Obj(per_stage)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -471,5 +560,24 @@ mod tests {
     fn avg_containers_empty() {
         let r = Recorder::new();
         assert_eq!(r.avg_containers(), 0.0);
+    }
+
+    #[test]
+    fn summary_serialization_shape() {
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        r.container_spawned(1, 0, ms(0.0), true);
+        r.container_spawned(2, 3, ms(0.0), false);
+        r.container_executed(1, 4);
+        r.job(job(0, 0.0, 500.0, vec![]));
+        let s = r.summarize(&cat);
+        let row = s.csv_row();
+        assert_eq!(row.split(',').count(), Summary::CSV_FIELDS.len());
+        let js = s.to_json().to_string();
+        // two renders are byte-identical despite the HashMap field
+        assert_eq!(js, s.to_json().to_string());
+        assert!(js.contains("\"per_stage\"") && js.contains("\"tail_breakdown\""));
+        assert!(js.contains("\"jobs\":1"));
     }
 }

@@ -17,7 +17,7 @@
 //! | DeepAREstimator   | [`classic::Ar`] — online AR(3) substitute       |
 //! | WeaveNet          | [`classic::Holt`] — Holt double-smoothing subst.|
 //!
-//! (The last two are closed-model substitutes, documented in DESIGN.md §2;
+//! (The last two are closed-model substitutes, documented in docs/DESIGN.md §2;
 //! both are autoregressive forecasters of the same input series.)
 //!
 //! The NN forwards also exist as AOT-compiled XLA artifacts executed via

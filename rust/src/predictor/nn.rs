@@ -148,7 +148,7 @@ impl LstmPredictor {
     ///
     /// Allocation-free inner loop: two flat (T × dim) sequence buffers are
     /// ping-ponged between layers (§Perf: removed the per-step
-    /// `Vec<Vec<f32>>` clones — see EXPERIMENTS.md).
+    /// `Vec<Vec<f32>>` clones — see docs/EXPERIMENTS.md).
     pub fn forward(&self, xs_norm: &[f32]) -> f32 {
         let hidden = self.layers[0].hidden;
         let t_len = xs_norm.len();

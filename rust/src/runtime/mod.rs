@@ -4,7 +4,7 @@
 //! pipeline (`python/compile/aot.py`) lowers every (microservice × batch
 //! size) inference graph and the predictor networks to **HLO text**
 //! (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos — see
-//! DESIGN.md); here we parse that text, compile it on the PJRT CPU client
+//! docs/DESIGN.md); here we parse that text, compile it on the PJRT CPU client
 //! once per executable, and run batched inference with zero Python on the
 //! request path.
 //!

@@ -1,0 +1,546 @@
+//! Trace-expression language for scenario files.
+//!
+//! A `[trace.<name>]` section's `expr` key holds one expression that
+//! builds a [`Trace`] from generators and composition operators:
+//!
+//! ```text
+//! overlay(noise(wits, sigma=0.05, seed=9), flashcrowd(amp=800, start=300, width=45))
+//! ```
+//!
+//! Grammar (whitespace-insensitive):
+//!
+//! ```text
+//! expr  := ident | ident '(' args ')'
+//! args  := ( arg (',' arg)* )?
+//! arg   := ident '=' number        named numeric parameter
+//!        | expr                    positional trace argument
+//! ```
+//!
+//! A bare identifier references another defined trace or a built-in
+//! workload name (resolved by the [`TraceResolver`]); a call is either a
+//! generator (no trace arguments) or an operator (one or more trace
+//! arguments). Generators default their length to the resolver's
+//! scenario duration; pass `duration=<secs>` to override per-generator.
+//!
+//! | call | kind | parameters (default) |
+//! |------|------|----------------------|
+//! | `poisson(...)` | generator | `rate` (50), `duration` |
+//! | `wiki(...)` | generator | `seed` (2025), `duration` |
+//! | `wits(...)` | generator | `seed` (1316), `duration` |
+//! | `azure(...)` | generator | `seed` (1), `duration` |
+//! | `flashcrowd(...)` | generator | `base` (0), `amp` (500), `start` (duration/3), `width` (duration/10), `duration` |
+//! | `overlay(a, b, ...)` | operator | — (element-wise sum, 2+ traces) |
+//! | `splice(a, b, at=S)` | operator | `at` (required) |
+//! | `ramp(a, ...)` | operator | `from` (0), `to` (1) |
+//! | `noise(a, ...)` | operator | `sigma` (0.1), `seed` (1) |
+//! | `scale(a, by=F)` | operator | `by` (required) |
+//! | `resize(a, to=S)` | operator | `to` (required) |
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::trace::Trace;
+
+/// Every function name the evaluator understands (generators first,
+/// then operators).
+pub const FUNCTIONS: [&str; 11] = [
+    "poisson",
+    "wiki",
+    "wits",
+    "azure",
+    "flashcrowd",
+    "overlay",
+    "splice",
+    "ramp",
+    "noise",
+    "scale",
+    "resize",
+];
+
+/// Resolves bare identifiers to traces and supplies the default
+/// generator duration. Implemented by the scenario spec (which also
+/// performs cycle detection across `[trace.*]` definitions).
+pub trait TraceResolver {
+    fn resolve(&mut self, name: &str) -> Result<Trace>;
+    fn duration_s(&self) -> usize;
+}
+
+/// Parsed expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Bare identifier: a defined or built-in trace name.
+    Ref(String),
+    /// `func(args..., key=value...)`.
+    Call {
+        func: String,
+        args: Vec<Expr>,
+        params: Vec<(String, f64)>,
+    },
+}
+
+// ---------------------------------------------------------------------
+// lexer + parser
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    LParen,
+    RParen,
+    Comma,
+    Eq,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            c if c.is_whitespace() => i += 1,
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            ',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            '=' => {
+                toks.push(Tok::Eq);
+                i += 1;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(chars[start..i].iter().collect()));
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '.' => {
+                let start = i;
+                i += 1;
+                while i < chars.len()
+                    && (chars[i].is_ascii_digit()
+                        || matches!(chars[i], '.' | 'e' | 'E' | '+' | '-'))
+                {
+                    // '+'/'-' only continue a number right after an exponent
+                    if matches!(chars[i], '+' | '-') && !matches!(chars[i - 1], 'e' | 'E') {
+                        break;
+                    }
+                    i += 1;
+                }
+                let s: String = chars[start..i].iter().collect();
+                let n: f64 = s
+                    .parse()
+                    .map_err(|_| anyhow!("bad number {s:?} in trace expression"))?;
+                toks.push(Tok::Num(n));
+            }
+            other => bail!("unexpected character {other:?} in trace expression"),
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        match self.bump() {
+            Some(Tok::Ident(name)) => {
+                if self.peek() == Some(&Tok::LParen) {
+                    self.pos += 1;
+                    let (args, params) = self.args()?;
+                    match self.bump() {
+                        Some(Tok::RParen) => Ok(Expr::Call {
+                            func: name,
+                            args,
+                            params,
+                        }),
+                        other => bail!("expected ')' closing {name}(...), got {other:?}"),
+                    }
+                } else {
+                    Ok(Expr::Ref(name))
+                }
+            }
+            other => bail!("expected a trace name or call, got {other:?}"),
+        }
+    }
+
+    fn args(&mut self) -> Result<(Vec<Expr>, Vec<(String, f64)>)> {
+        let mut args = Vec::new();
+        let mut params = Vec::new();
+        if self.peek() == Some(&Tok::RParen) {
+            return Ok((args, params));
+        }
+        loop {
+            // named parameter: Ident '=' Num — otherwise a trace expr
+            let named = matches!(
+                (self.toks.get(self.pos), self.toks.get(self.pos + 1)),
+                (Some(Tok::Ident(_)), Some(Tok::Eq))
+            );
+            if named {
+                let Some(Tok::Ident(key)) = self.bump() else { unreachable!("peeked ident") };
+                self.pos += 1; // '='
+                match self.bump() {
+                    Some(Tok::Num(v)) => params.push((key, v)),
+                    other => bail!("parameter {key}= expects a number, got {other:?}"),
+                }
+            } else {
+                args.push(self.expr()?);
+            }
+            if self.peek() == Some(&Tok::Comma) {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        Ok((args, params))
+    }
+}
+
+/// Parse one trace expression into an [`Expr`] tree.
+pub fn parse(src: &str) -> Result<Expr> {
+    let toks = lex(src)?;
+    if toks.is_empty() {
+        bail!("empty trace expression");
+    }
+    let mut p = Parser { toks, pos: 0 };
+    let e = p.expr()?;
+    if p.pos != p.toks.len() {
+        bail!("trailing tokens after trace expression: {:?}", &p.toks[p.pos..]);
+    }
+    Ok(e)
+}
+
+// ---------------------------------------------------------------------
+// evaluation
+// ---------------------------------------------------------------------
+
+fn num(params: &[(String, f64)], key: &str, default: f64) -> f64 {
+    params
+        .iter()
+        .rev()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .unwrap_or(default)
+}
+
+fn num_req(func: &str, params: &[(String, f64)], key: &str) -> Result<f64> {
+    params
+        .iter()
+        .rev()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .ok_or_else(|| anyhow!("{func}() requires the {key}= parameter"))
+}
+
+fn check_keys(func: &str, params: &[(String, f64)], allowed: &[&str]) -> Result<()> {
+    for (k, _) in params {
+        if !allowed.contains(&k.as_str()) {
+            bail!("{func}() has no parameter {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn check_arity(func: &str, args: &[Expr], n: usize) -> Result<()> {
+    if args.len() != n {
+        bail!("{func}() expects {n} trace argument(s), got {}", args.len());
+    }
+    Ok(())
+}
+
+fn as_secs(func: &str, key: &str, v: f64) -> Result<usize> {
+    if !v.is_finite() || v < 0.0 {
+        bail!("{func}() {key}= must be a non-negative number of seconds, got {v}");
+    }
+    Ok(v as usize)
+}
+
+/// Evaluate an expression tree against a resolver.
+pub fn eval(e: &Expr, r: &mut dyn TraceResolver) -> Result<Trace> {
+    match e {
+        Expr::Ref(name) => r.resolve(name),
+        Expr::Call { func, args, params } => {
+            let dur = r.duration_s();
+            let gen_dur = |params: &[(String, f64)]| -> Result<usize> {
+                let d = num(params, "duration", dur as f64);
+                let d = as_secs(func, "duration", d)?;
+                if d == 0 {
+                    bail!("{func}() duration must be at least 1 s");
+                }
+                Ok(d)
+            };
+            match func.as_str() {
+                // generators -------------------------------------------
+                "poisson" => {
+                    check_arity(func, args, 0)?;
+                    check_keys(func, params, &["rate", "duration"])?;
+                    Ok(Trace::poisson(num(params, "rate", 50.0), gen_dur(params)?))
+                }
+                "wiki" => {
+                    check_arity(func, args, 0)?;
+                    check_keys(func, params, &["seed", "duration"])?;
+                    Ok(Trace::wiki(gen_dur(params)?, num(params, "seed", 2025.0) as u64))
+                }
+                "wits" => {
+                    check_arity(func, args, 0)?;
+                    check_keys(func, params, &["seed", "duration"])?;
+                    Ok(Trace::wits(gen_dur(params)?, num(params, "seed", 1316.0) as u64))
+                }
+                "azure" => {
+                    check_arity(func, args, 0)?;
+                    check_keys(func, params, &["seed", "duration"])?;
+                    Ok(Trace::azure(gen_dur(params)?, num(params, "seed", 1.0) as u64))
+                }
+                "flashcrowd" => {
+                    check_arity(func, args, 0)?;
+                    check_keys(func, params, &["base", "amp", "start", "width", "duration"])?;
+                    let d = gen_dur(params)?;
+                    let start = as_secs(func, "start", num(params, "start", (d / 3) as f64))?;
+                    let width = num(params, "width", (d / 10).max(1) as f64);
+                    let width = as_secs(func, "width", width)?;
+                    Ok(Trace::flashcrowd(
+                        d,
+                        num(params, "base", 0.0),
+                        num(params, "amp", 500.0),
+                        start,
+                        width,
+                    ))
+                }
+                // operators --------------------------------------------
+                "overlay" => {
+                    check_keys(func, params, &[])?;
+                    if args.len() < 2 {
+                        bail!("overlay() expects at least 2 trace arguments, got {}", args.len());
+                    }
+                    let mut acc = eval(&args[0], r)?;
+                    for a in &args[1..] {
+                        let t = eval(a, r)?;
+                        acc = acc.overlay(&t);
+                    }
+                    Ok(acc)
+                }
+                "splice" => {
+                    check_arity(func, args, 2)?;
+                    check_keys(func, params, &["at"])?;
+                    let at = as_secs(func, "at", num_req(func, params, "at")?)?;
+                    let a = eval(&args[0], r)?;
+                    let b = eval(&args[1], r)?;
+                    Ok(a.splice(&b, at))
+                }
+                "ramp" => {
+                    check_arity(func, args, 1)?;
+                    check_keys(func, params, &["from", "to"])?;
+                    let t = eval(&args[0], r)?;
+                    Ok(t.ramp(num(params, "from", 0.0), num(params, "to", 1.0)))
+                }
+                "noise" => {
+                    check_arity(func, args, 1)?;
+                    check_keys(func, params, &["sigma", "seed"])?;
+                    let t = eval(&args[0], r)?;
+                    Ok(t.noise(num(params, "sigma", 0.1), num(params, "seed", 1.0) as u64))
+                }
+                "scale" => {
+                    check_arity(func, args, 1)?;
+                    check_keys(func, params, &["by"])?;
+                    let t = eval(&args[0], r)?;
+                    Ok(t.scaled(num_req(func, params, "by")?))
+                }
+                "resize" => {
+                    check_arity(func, args, 1)?;
+                    check_keys(func, params, &["to"])?;
+                    let to = as_secs(func, "to", num_req(func, params, "to")?)?;
+                    let t = eval(&args[0], r)?;
+                    Ok(t.resized(to))
+                }
+                other => {
+                    bail!("unknown trace function {other:?} (known: {})", FUNCTIONS.join(", "))
+                }
+            }
+        }
+    }
+}
+
+/// Validate every call in the tree statically — known function name,
+/// trace-argument arity, parameter keys, required parameters — so
+/// scenario files fail at load time, not mid-sweep. (Value-range checks
+/// like `duration >= 1` still happen at evaluation.)
+pub fn check_funcs(e: &Expr) -> Result<()> {
+    let Expr::Call { func, args, params } = e else {
+        return Ok(());
+    };
+    let spec: (usize, usize, &[&str], &[&str]) = match func.as_str() {
+        "poisson" => (0, 0, &["rate", "duration"], &[]),
+        "wiki" | "wits" | "azure" => (0, 0, &["seed", "duration"], &[]),
+        "flashcrowd" => (0, 0, &["base", "amp", "start", "width", "duration"], &[]),
+        "overlay" => (2, usize::MAX, &[], &[]),
+        "splice" => (2, 2, &["at"], &["at"]),
+        "ramp" => (1, 1, &["from", "to"], &[]),
+        "noise" => (1, 1, &["sigma", "seed"], &[]),
+        "scale" => (1, 1, &["by"], &["by"]),
+        "resize" => (1, 1, &["to"], &["to"]),
+        other => {
+            bail!("unknown trace function {other:?} (known: {})", FUNCTIONS.join(", "))
+        }
+    };
+    let (lo, hi, allowed, required) = spec;
+    if args.len() < lo || args.len() > hi {
+        if lo == hi {
+            bail!("{func}() expects {lo} trace argument(s), got {}", args.len());
+        }
+        bail!("{func}() expects at least {lo} trace arguments, got {}", args.len());
+    }
+    check_keys(func, params, allowed)?;
+    for key in required {
+        num_req(func, params, key)?;
+    }
+    for a in args {
+        check_funcs(a)?;
+    }
+    Ok(())
+}
+
+/// Every bare-identifier reference in the tree (for eager validation of
+/// scenario files — undefined names fail at parse time, not mid-sweep).
+pub fn refs(e: &Expr) -> Vec<&str> {
+    let mut out = Vec::new();
+    fn walk<'a>(e: &'a Expr, out: &mut Vec<&'a str>) {
+        match e {
+            Expr::Ref(name) => out.push(name.as_str()),
+            Expr::Call { args, .. } => {
+                for a in args {
+                    walk(a, out);
+                }
+            }
+        }
+    }
+    walk(e, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FixedResolver;
+
+    impl TraceResolver for FixedResolver {
+        fn resolve(&mut self, name: &str) -> Result<Trace> {
+            match name {
+                "base" => Ok(Trace::poisson(10.0, 10)),
+                other => bail!("unknown trace {other:?}"),
+            }
+        }
+        fn duration_s(&self) -> usize {
+            10
+        }
+    }
+
+    fn run(src: &str) -> Result<Trace> {
+        eval(&parse(src)?, &mut FixedResolver)
+    }
+
+    #[test]
+    fn parses_nested_calls_and_params() {
+        let e = parse("overlay(noise(base, sigma=0.2, seed=7), flashcrowd(amp=80))").unwrap();
+        let Expr::Call { func, args, params } = &e else {
+            panic!("expected call")
+        };
+        assert_eq!(func, "overlay");
+        assert_eq!(args.len(), 2);
+        assert!(params.is_empty());
+        assert_eq!(refs(&e), vec!["base"]);
+    }
+
+    #[test]
+    fn evaluates_generators_at_context_duration() {
+        let t = run("poisson(rate=4)").unwrap();
+        assert_eq!(t.duration_s(), 10);
+        assert_eq!(t.rate_per_s[0], 4.0);
+        let t = run("poisson(rate=4, duration=25)").unwrap();
+        assert_eq!(t.duration_s(), 25);
+    }
+
+    #[test]
+    fn evaluates_operators() {
+        let t = run("overlay(base, flashcrowd(base=0, amp=90, start=2, width=3))").unwrap();
+        assert_eq!(t.rate_per_s[0], 10.0);
+        assert_eq!(t.rate_per_s[2], 100.0);
+        assert_eq!(t.rate_per_s[5], 10.0);
+        let t = run("scale(base, by=3)").unwrap();
+        assert_eq!(t.rate_per_s[0], 30.0);
+        let t = run("splice(base, poisson(rate=1), at=2)").unwrap();
+        assert_eq!(t.duration_s(), 12);
+        let t = run("resize(base, to=4)").unwrap();
+        assert_eq!(t.duration_s(), 4);
+    }
+
+    #[test]
+    fn deterministic_evaluation() {
+        let a = run("noise(azure(seed=3), sigma=0.2, seed=5)").unwrap();
+        let b = run("noise(azure(seed=3), sigma=0.2, seed=5)").unwrap();
+        assert_eq!(a.rate_per_s, b.rate_per_s);
+    }
+
+    #[test]
+    fn rejects_malformed_expressions() {
+        assert!(parse("").is_err());
+        assert!(parse("overlay(base,").is_err());
+        assert!(parse("overlay base").is_err());
+        assert!(parse("5(base)").is_err());
+        assert!(parse("noise(base, sigma=oops)").is_err());
+        assert!(parse("base extra").is_err());
+    }
+
+    #[test]
+    fn static_call_checks() {
+        let bad = [
+            "noise(frob(), sigma=1)", // unknown function, nested
+            "overlay(base)",          // arity
+            "splice(base, base)",     // missing required at=
+            "scale(base)",            // missing required by=
+            "noise(base, sgima=0.1)", // typo'd key
+            "poisson(base)",          // generator takes no traces
+        ];
+        for src in bad {
+            assert!(check_funcs(&parse(src).unwrap()).is_err(), "{src}");
+        }
+        // refs are not checked here, only call shapes
+        assert!(check_funcs(&parse("noise(ghost, sigma=1)").unwrap()).is_ok());
+        assert!(check_funcs(&parse("overlay(a, b, c)").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn rejects_semantic_errors() {
+        assert!(run("frobnicate(base)").is_err());
+        assert!(run("overlay(base)").is_err()); // arity
+        assert!(run("poisson(base)").is_err()); // generator takes no traces
+        assert!(run("noise(base, sgima=0.1)").is_err()); // typo'd key
+        assert!(run("scale(base)").is_err()); // missing required by=
+        assert!(run("splice(base, base, at=-3)").is_err());
+        assert!(run("nope").is_err()); // unresolved reference
+        assert!(run("poisson(duration=0)").is_err());
+    }
+}

@@ -1,0 +1,576 @@
+//! Declarative scenarios: TOML workload specs, composable traces, and a
+//! sharded parallel sweep runner.
+//!
+//! The paper's evaluation is a fixed grid — three traces × three mixes ×
+//! five RMs. A *scenario file* makes that grid (and any other) data: it
+//! declares a trace set, a workload-mix set, a policy set, a seed list,
+//! and cluster/RM knobs, and the runner executes the full cross product,
+//! one simulation per **cell**. The two paper grids ship as built-in
+//! scenario files (`prototype-grid`, `macro-grid` — see [`BUILTINS`]),
+//! proving the old `experiments::run_prototype` / `run_macro` drivers
+//! are special cases; `rust/tests/test_scenario.rs` pins the cell
+//! results byte-identical to those drivers.
+//!
+//! # File format
+//!
+//! A TOML-subset document (parsed by [`crate::config::toml`]) with one
+//! required `[scenario]` section, optional `[cluster]` / `[rm]` override
+//! sections (same keys as config files), and any number of
+//! `[trace.<name>]` sections defining composed traces:
+//!
+//! | `[scenario]` key | default | meaning |
+//! |------------------|---------|---------|
+//! | `name`           | `"unnamed"` | label echoed into results |
+//! | `duration_s`     | 600     | generator trace length (s); each cell's horizon and warm-up follow its trace's actual length |
+//! | `drain_s`        | 60      | post-trace drain window (s) |
+//! | `warmup_frac`    | 0.5     | fraction of the run excluded as warm-up |
+//! | `warmup_cap_s`   | 700     | warm-up exclusion cap (s) |
+//! | `seeds`          | `[42]`  | one sim per seed per cell |
+//! | `traces`         | —       | trace names (required, non-empty) |
+//! | `mixes`          | `["Heavy"]` | workload-mix names (Table 5) |
+//! | `policies`       | `["all"]` | policy names; `"all"` / `"paper"` expand |
+//! | `artifacts_dir`  | `"artifacts"` | where exported traces/weights live |
+//!
+//! Trace names resolve to a `[trace.<name>]` definition or to a built-in
+//! workload: `poisson`, `wiki`, `wits` (identical to the experiment
+//! drivers', artifact-preferring), `azure`, `flashcrowd`. A definition's
+//! `expr` key is a composition expression — see [`expr`] for the full
+//! language:
+//!
+//! ```text
+//! [trace.crowd]
+//! expr = "overlay(wits, flashcrowd(base=0, amp=900, start=300, width=45))"
+//! ```
+//!
+//! # Determinism
+//!
+//! Every cell is an independent simulation seeded from its own
+//! `(seed → Pcg)` stream: traces are built once up front
+//! (deterministically), and no randomness is shared across cells, so
+//! [`run_scenario`] produces **byte-identical** JSON/CSV output whether
+//! the sweep runs serially or sharded across N worker threads.
+//!
+//! # Example
+//!
+//! ```
+//! let spec = fifer::scenario::ScenarioSpec::parse(r#"
+//! [scenario]
+//! name = "demo"
+//! duration_s = 120
+//! seeds = [7, 42]
+//! traces = ["burst"]
+//! mixes = ["Heavy"]
+//! policies = ["Bline", "Fifer"]
+//!
+//! [trace.burst]
+//! expr = "overlay(poisson(rate=20), flashcrowd(amp=60, start=40, width=10))"
+//! "#).unwrap();
+//! assert_eq!(spec.cells().len(), 4); // 1 trace x 1 mix x 2 policies x 2 seeds
+//! let traces = spec.build_traces().unwrap();
+//! assert_eq!(traces["burst"].duration_s(), 120);
+//! assert_eq!(traces["burst"].rate_per_s[45], 80.0);
+//! ```
+
+pub mod expr;
+mod runner;
+
+pub use runner::run_scenario;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::toml::{self, TomlDoc, TomlValue};
+use crate::config::{ClusterConfig, Policy, RmConfig, TomlSection};
+use crate::experiments::TraceKind;
+use crate::metrics::Summary;
+use crate::model::Catalog;
+use crate::trace::Trace;
+use crate::util::json::Json;
+use crate::util::{secs, Micros, MICROS_PER_S};
+
+/// Built-in workload names usable in `traces = [...]` and expressions
+/// without a `[trace.*]` definition.
+pub const BUILTIN_TRACES: [&str; 5] = ["poisson", "wiki", "wits", "azure", "flashcrowd"];
+
+/// Built-in scenario files: `(name, toml_text, about)`. The first two
+/// re-express the paper's §6.1/§6.2 experiment grids declaratively.
+pub const BUILTINS: [(&str, &str, &str); 3] = [
+    (
+        "prototype-grid",
+        include_str!("../../../examples/scenarios/prototype_grid.toml"),
+        "§6.1 prototype grid: Poisson λ=50 × every mix × every registered RM",
+    ),
+    (
+        "macro-grid",
+        include_str!("../../../examples/scenarios/macro_grid.toml"),
+        "§6.2 macro grid: Wiki/WITS on the 2500-core cluster × every mix × every RM",
+    ),
+    (
+        "flashcrowd",
+        include_str!("../../../examples/scenarios/flashcrowd.toml"),
+        "composed-workload demo: ramped WITS + flash crowd + Azure heavy tail",
+    ),
+];
+
+/// Look up a built-in scenario file's TOML text by name.
+pub fn builtin(name: &str) -> Option<&'static str> {
+    BUILTINS
+        .iter()
+        .find(|(n, _, _)| n.eq_ignore_ascii_case(name))
+        .map(|(_, text, _)| *text)
+}
+
+/// One point of the sweep matrix: a single simulation to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    /// Position in matrix order (trace-major, seed-minor); results are
+    /// always reported in this order regardless of worker scheduling.
+    pub index: usize,
+    pub trace: String,
+    pub mix: String,
+    pub policy: Policy,
+    pub seed: u64,
+}
+
+/// The completed result of one cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: Cell,
+    pub summary: Summary,
+}
+
+/// A parsed, validated scenario file. All fields are public so callers
+/// (tests, sweeps-of-sweeps) can derive variants programmatically.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub duration_s: usize,
+    pub drain_s: f64,
+    pub warmup_frac: f64,
+    pub warmup_cap_s: f64,
+    pub seeds: Vec<u64>,
+    pub traces: Vec<String>,
+    pub mixes: Vec<String>,
+    pub policies: Vec<Policy>,
+    /// `[trace.<name>]` definitions: name → expression source.
+    pub trace_defs: BTreeMap<String, String>,
+    pub cluster: ClusterConfig,
+    /// Raw `[rm]` section, re-applied on top of each cell's per-policy
+    /// `RmConfig::paper` defaults (validated at parse time).
+    pub rm_overrides: TomlSection,
+    pub artifacts_dir: String,
+}
+
+const SCENARIO_KEYS: [&str; 10] = [
+    "name",
+    "duration_s",
+    "drain_s",
+    "warmup_frac",
+    "warmup_cap_s",
+    "seeds",
+    "traces",
+    "mixes",
+    "policies",
+    "artifacts_dir",
+];
+
+impl ScenarioSpec {
+    /// Parse and validate a scenario document from TOML text.
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let doc = toml::parse(text)?;
+        ScenarioSpec::from_doc(&doc)
+    }
+
+    /// Load a scenario file from disk.
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        ScenarioSpec::parse(&text)
+            .with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    /// Build a spec from a parsed document, validating every name and
+    /// expression eagerly so errors surface at load time, not mid-sweep.
+    pub fn from_doc(doc: &TomlDoc) -> Result<ScenarioSpec> {
+        // reject unknown sections (root keys and typo'd section names)
+        for (section, keys) in doc {
+            let known = section == "scenario"
+                || section == "cluster"
+                || section == "rm"
+                || section.starts_with("trace.");
+            if section.is_empty() {
+                if let Some(k) = keys.keys().next() {
+                    bail!("key {k:?} must live inside the [scenario] section");
+                }
+            } else if !known {
+                bail!(
+                    "unknown section [{section}] (expected [scenario], [cluster], [rm] \
+                     or [trace.<name>])"
+                );
+            }
+        }
+        let sec = doc
+            .get("scenario")
+            .ok_or_else(|| anyhow!("scenario file needs a [scenario] section"))?;
+        for k in sec.keys() {
+            if !SCENARIO_KEYS.contains(&k.as_str()) {
+                bail!("unknown [scenario] key {k:?} (known: {})", SCENARIO_KEYS.join(", "));
+            }
+        }
+
+        let duration_s = get_num(sec, "duration_s", 600.0)? as usize;
+        if duration_s == 0 {
+            bail!("[scenario] duration_s must be at least 1");
+        }
+        let drain_s = get_num(sec, "drain_s", 60.0)?;
+        if !(0.0..=3600.0).contains(&drain_s) {
+            bail!("[scenario] drain_s must be in [0, 3600], got {drain_s}");
+        }
+        let warmup_frac = get_num(sec, "warmup_frac", 0.5)?;
+        if !(0.0..=1.0).contains(&warmup_frac) {
+            bail!("[scenario] warmup_frac must be in [0, 1], got {warmup_frac}");
+        }
+        let warmup_cap_s = get_num(sec, "warmup_cap_s", 700.0)?;
+
+        let seeds: Vec<u64> = match sec.get("seeds") {
+            None => vec![42],
+            Some(v) => num_list(v)?
+                .into_iter()
+                .map(|x| {
+                    if x < 0.0 || x.fract() != 0.0 {
+                        bail!("[scenario] seeds must be non-negative integers, got {x}");
+                    }
+                    Ok(x as u64)
+                })
+                .collect::<Result<_>>()?,
+        };
+        if seeds.is_empty() {
+            bail!("[scenario] seeds must not be empty");
+        }
+
+        let traces = match sec.get("traces") {
+            Some(v) => str_list(v)?,
+            None => bail!("[scenario] needs a traces = [...] list"),
+        };
+        if traces.is_empty() {
+            bail!("[scenario] traces must not be empty");
+        }
+
+        let cat = Catalog::paper();
+        let mixes = match sec.get("mixes") {
+            Some(v) => str_list(v)?,
+            None => vec!["Heavy".to_string()],
+        };
+        if mixes.is_empty() {
+            bail!("[scenario] mixes must not be empty");
+        }
+        for m in &mixes {
+            if cat.mix(m).is_none() {
+                let known: Vec<&str> = cat.mixes.iter().map(|x| x.name).collect();
+                bail!("unknown mix {m:?} (known: {})", known.join(", "));
+            }
+        }
+
+        let policy_names = match sec.get("policies") {
+            Some(v) => str_list(v)?,
+            None => vec!["all".to_string()],
+        };
+        let mut policies = Vec::new();
+        for name in &policy_names {
+            match name.to_ascii_lowercase().as_str() {
+                "all" => policies.extend(Policy::ALL),
+                "paper" => policies.extend(Policy::PAPER),
+                _ => policies.push(Policy::from_name(name)?),
+            }
+        }
+        if policies.is_empty() {
+            bail!("[scenario] policies must not be empty");
+        }
+
+        // [trace.<name>] definitions
+        let mut trace_defs: BTreeMap<String, String> = BTreeMap::new();
+        for (section, keys) in doc {
+            let Some(name) = section.strip_prefix("trace.") else {
+                continue;
+            };
+            // identifier names only: expressions reference them by ident
+            // syntax, and CSV rows embed them unquoted
+            let ident = !name.is_empty()
+                && name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+            if !ident {
+                bail!(
+                    "bad trace name [trace.{name}] — names must be identifiers \
+                     (letters, digits, underscores)"
+                );
+            }
+            for k in keys.keys() {
+                if k != "expr" {
+                    bail!("[trace.{name}] has unknown key {k:?} (only expr = \"...\")");
+                }
+            }
+            let src = keys
+                .get("expr")
+                .ok_or_else(|| anyhow!("[trace.{name}] needs an expr = \"...\" key"))?
+                .as_str()?
+                .to_string();
+            trace_defs.insert(name.to_string(), src);
+        }
+        // every expression parses, every call names a known function,
+        // and every reference resolves
+        for (name, src) in &trace_defs {
+            let ast = expr::parse(src).with_context(|| format!("[trace.{name}] expr"))?;
+            expr::check_funcs(&ast).with_context(|| format!("[trace.{name}] expr"))?;
+            for r in expr::refs(&ast) {
+                if !trace_defs.contains_key(r) && !BUILTIN_TRACES.contains(&r) {
+                    bail!("[trace.{name}] references unknown trace {r:?}");
+                }
+            }
+        }
+        for t in &traces {
+            if !trace_defs.contains_key(t.as_str()) && !BUILTIN_TRACES.contains(&t.as_str()) {
+                bail!(
+                    "[scenario] traces lists {t:?}, which is neither a [trace.{t}] \
+                     definition nor a built-in ({})",
+                    BUILTIN_TRACES.join(", ")
+                );
+            }
+        }
+
+        // cluster + rm overrides (validated now — including unknown-key
+        // typos, which config files tolerate but sweeps must not —
+        // applied per cell)
+        let mut cluster = ClusterConfig::prototype();
+        if let Some(c) = doc.get("cluster") {
+            for k in c.keys() {
+                if !ClusterConfig::DOC_KEYS.contains(&k.as_str()) {
+                    bail!(
+                        "unknown [cluster] key {k:?} (known: {})",
+                        ClusterConfig::DOC_KEYS.join(", ")
+                    );
+                }
+            }
+            if let Some(v) = c.get("preset") {
+                cluster = ClusterConfig::preset(v.as_str()?)?;
+            }
+            cluster.apply_doc(c)?;
+        }
+        let rm_overrides = doc.get("rm").cloned().unwrap_or_default();
+        for k in rm_overrides.keys() {
+            if !RmConfig::DOC_KEYS.contains(&k.as_str()) {
+                bail!("unknown [rm] key {k:?} (known: {})", RmConfig::DOC_KEYS.join(", "));
+            }
+        }
+        RmConfig::paper(Policy::Fifer).apply_doc(&rm_overrides)?;
+
+        Ok(ScenarioSpec {
+            name: get_str(sec, "name", "unnamed")?,
+            duration_s,
+            drain_s,
+            warmup_frac,
+            warmup_cap_s,
+            seeds,
+            traces,
+            mixes,
+            policies,
+            trace_defs,
+            cluster,
+            rm_overrides,
+            artifacts_dir: get_str(sec, "artifacts_dir", "artifacts")?,
+        })
+    }
+
+    /// Expand the sweep matrix in deterministic order: traces (major) ×
+    /// mixes × policies × seeds (minor).
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for trace in &self.traces {
+            for mix in &self.mixes {
+                for &policy in &self.policies {
+                    for &seed in &self.seeds {
+                        out.push(Cell {
+                            index: out.len(),
+                            trace: trace.clone(),
+                            mix: mix.clone(),
+                            policy,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Steady-state cutoff (µs) for a trace of `trace_duration_s`
+    /// seconds: jobs arriving before this are excluded from summaries —
+    /// same rule as `experiments::run_policy`. Cells compute it from
+    /// each trace's *actual* length, since expressions (`resize`,
+    /// `splice`, `duration=`) may deviate from `duration_s`.
+    pub fn warmup_for(&self, trace_duration_s: usize) -> Micros {
+        secs((trace_duration_s as f64 * self.warmup_frac).min(self.warmup_cap_s))
+    }
+
+    /// [`ScenarioSpec::warmup_for`] at the nominal `duration_s` (what
+    /// every built-in generator trace uses).
+    pub fn warmup(&self) -> Micros {
+        self.warmup_for(self.duration_s)
+    }
+
+    /// Build every workload trace once, in name order. Cells clone from
+    /// this map, so trace construction cost is paid once per sweep and
+    /// parallel workers share identical inputs.
+    pub fn build_traces(&self) -> Result<BTreeMap<String, Trace>> {
+        let mut out = BTreeMap::new();
+        for name in &self.traces {
+            if !out.contains_key(name) {
+                let t = self.build_trace(name, &mut Vec::new())?;
+                out.insert(name.clone(), t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resolve one trace name (definition or built-in), detecting
+    /// definition cycles via the resolution stack.
+    fn build_trace(&self, name: &str, stack: &mut Vec<String>) -> Result<Trace> {
+        if stack.iter().any(|s| s == name) {
+            stack.push(name.to_string());
+            bail!(
+                "trace {name:?} is defined in terms of itself ({})",
+                stack.join(" -> ")
+            );
+        }
+        if let Some(src) = self.trace_defs.get(name) {
+            stack.push(name.to_string());
+            let ast = expr::parse(src).with_context(|| format!("[trace.{name}] expr"))?;
+            let mut resolver = SpecResolver {
+                spec: self,
+                stack: &mut *stack,
+            };
+            let mut t = expr::eval(&ast, &mut resolver).with_context(|| format!("[trace.{name}]"))?;
+            stack.pop();
+            t.name = name.to_string();
+            Ok(t)
+        } else {
+            self.builtin_trace(name)
+        }
+    }
+
+    /// The built-in workloads. `poisson` / `wiki` / `wits` go through
+    /// [`TraceKind::build`], i.e. they prefer the Python-exported
+    /// artifact and fall back to the seeded generator — exactly what the
+    /// experiment drivers run, which is what makes the built-in grid
+    /// scenarios byte-identical to `run_prototype` / `run_macro`.
+    fn builtin_trace(&self, name: &str) -> Result<Trace> {
+        match name {
+            "poisson" => Ok(TraceKind::Poisson.build(self.duration_s, &self.artifacts_dir)),
+            "wiki" => Ok(TraceKind::Wiki.build(self.duration_s, &self.artifacts_dir)),
+            "wits" => Ok(TraceKind::Wits.build(self.duration_s, &self.artifacts_dir)),
+            "azure" => Ok(Trace::azure(self.duration_s, 1)),
+            "flashcrowd" => Ok(Trace::flashcrowd(
+                self.duration_s,
+                0.0,
+                500.0,
+                self.duration_s / 3,
+                (self.duration_s / 10).max(1),
+            )),
+            other => bail!("unknown trace {other:?}"),
+        }
+    }
+}
+
+struct SpecResolver<'a, 'b> {
+    spec: &'a ScenarioSpec,
+    stack: &'b mut Vec<String>,
+}
+
+impl expr::TraceResolver for SpecResolver<'_, '_> {
+    fn resolve(&mut self, name: &str) -> Result<Trace> {
+        self.spec.build_trace(name, self.stack)
+    }
+
+    fn duration_s(&self) -> usize {
+        self.spec.duration_s
+    }
+}
+
+// ---------------------------------------------------------------------
+// result emission
+// ---------------------------------------------------------------------
+
+/// Render sweep results as one JSON document (cells in matrix order).
+/// Byte-deterministic: object keys are sorted by the writer. The
+/// `warmup_s` header is the nominal (duration_s-length) cutoff; cells
+/// whose trace expressions change the horizon scale it accordingly.
+pub fn results_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
+    let cells = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("trace", Json::Str(r.cell.trace.clone())),
+                ("mix", Json::Str(r.cell.mix.clone())),
+                ("policy", Json::Str(r.cell.policy.name().to_string())),
+                ("seed", Json::Num(r.cell.seed as f64)),
+                ("summary", r.summary.to_json()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::Str(spec.name.clone())),
+        ("duration_s", Json::Num(spec.duration_s as f64)),
+        ("warmup_s", Json::Num(spec.warmup() as f64 / MICROS_PER_S as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Render sweep results as CSV: one header line, one row per cell.
+pub fn results_csv(results: &[CellResult]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("trace,mix,policy,seed,");
+    s.push_str(&Summary::CSV_FIELDS.join(","));
+    s.push('\n');
+    for r in results {
+        let c = &r.cell;
+        let _ = write!(s, "{},{},{},{},", c.trace, c.mix, c.policy.name(), c.seed);
+        s.push_str(&r.summary.csv_row());
+        s.push('\n');
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// toml helpers
+// ---------------------------------------------------------------------
+
+fn get_str(sec: &TomlSection, key: &str, default: &str) -> Result<String> {
+    match sec.get(key) {
+        Some(v) => Ok(v.as_str()?.to_string()),
+        None => Ok(default.to_string()),
+    }
+}
+
+fn get_num(sec: &TomlSection, key: &str, default: f64) -> Result<f64> {
+    match sec.get(key) {
+        Some(v) => v.as_f64().with_context(|| format!("[scenario] {key}")),
+        None => Ok(default),
+    }
+}
+
+fn str_list(v: &TomlValue) -> Result<Vec<String>> {
+    match v {
+        TomlValue::Arr(items) => items.iter().map(|i| Ok(i.as_str()?.to_string())).collect(),
+        TomlValue::Str(s) => Ok(vec![s.clone()]),
+        other => bail!("expected a list of strings, got {other:?}"),
+    }
+}
+
+fn num_list(v: &TomlValue) -> Result<Vec<f64>> {
+    match v {
+        TomlValue::Arr(items) => items.iter().map(|i| i.as_f64()).collect(),
+        TomlValue::Num(n) => Ok(vec![*n]),
+        other => bail!("expected a list of numbers, got {other:?}"),
+    }
+}

@@ -1,0 +1,92 @@
+//! Sharded parallel execution of a scenario's sweep matrix.
+//!
+//! Workers pull cell indices from a shared atomic counter, so load
+//! balances regardless of per-cell cost; results land in a slot vector
+//! indexed by cell, so output order is matrix order no matter which
+//! worker ran what. Every cell is an independent, fully-seeded
+//! simulation (its own `Pcg` stream from the cell seed; traces prebuilt
+//! and shared read-only), so the parallel sweep is byte-identical to the
+//! serial one.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::{Cell, CellResult, ScenarioSpec};
+use crate::config::{RmConfig, SystemConfig};
+use crate::model::Catalog;
+use crate::sim::{run_summarized, SimParams};
+use crate::trace::Trace;
+
+/// Run one cell of the matrix. Identical to `experiments::run_policy`
+/// modulo the spec's cluster/RM/warm-up knobs (the built-in grid
+/// scenarios pin that equivalence in `rust/tests/test_scenario.rs`).
+fn run_cell(spec: &ScenarioSpec, traces: &BTreeMap<String, Trace>, cell: &Cell) -> CellResult {
+    let cat = Catalog::paper();
+    let mut rm = RmConfig::paper(cell.policy);
+    rm.apply_doc(&spec.rm_overrides)
+        .expect("rm overrides validated at parse time");
+    let cfg = SystemConfig {
+        cluster: spec.cluster.clone(),
+        rm,
+        artifacts_dir: spec.artifacts_dir.clone(),
+        seed: cell.seed,
+    };
+    let chains = cat
+        .mix(&cell.mix)
+        .expect("mix validated at parse time")
+        .chains
+        .clone();
+    let trace = traces[&cell.trace].clone();
+    let warmup = spec.warmup_for(trace.duration_s());
+    let params = SimParams {
+        cfg,
+        chains,
+        trace,
+        drain_s: spec.drain_s,
+    };
+    let (_, summary) = run_summarized(params, warmup);
+    CellResult {
+        cell: cell.clone(),
+        summary,
+    }
+}
+
+/// Execute the full sweep matrix, sharded across `threads` workers
+/// (clamped to [1, #cells]; 1 = serial). Results come back in matrix
+/// order and are byte-identical for any thread count.
+pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> Result<Vec<CellResult>> {
+    let traces = spec.build_traces()?;
+    let cells = spec.cells();
+    if cells.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = threads.clamp(1, cells.len());
+    if threads == 1 {
+        return Ok(cells.iter().map(|c| run_cell(spec, &traces, c)).collect());
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellResult>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let r = run_cell(spec, &traces, &cells[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    Ok(slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("worker thread did not panic")
+                .expect("every cell index was claimed and completed")
+        })
+        .collect())
+}

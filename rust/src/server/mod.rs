@@ -1,6 +1,6 @@
 //! Live serving runtime: real batched inference behind Fifer batching.
 //!
-//! This is the end-to-end validation layer (DESIGN.md §1): a load
+//! This is the end-to-end validation layer (docs/DESIGN.md §1): a load
 //! generator produces requests for the paper's function chains; the
 //! coordinator applies the *same* slack-based batching plan as the
 //! simulator; executor threads run the actual AOT-compiled XLA artifacts

@@ -6,7 +6,7 @@
 //! scale-in, node power — at microsecond resolution, driven by the same
 //! coordinator primitives as the live server. The paper validated its
 //! simulator against the real prototype; we do the same in
-//! `rust/tests/test_sim_vs_live.rs`.
+//! `rust/tests/test_server_live.rs` (graceful no-op without artifacts).
 //!
 //! All *policy* decisions (spawning, scaling, reclamation, queue
 //! ordering) are delegated to a [`SchedulerPolicy`] trait object — the
@@ -613,6 +613,17 @@ impl Engine {
 pub fn run_sim(p: SimParams) -> (Recorder, crate::metrics::Summary) {
     let pol = p.cfg.rm.policy.build();
     run_sim_with(p, pol)
+}
+
+/// Run one simulation and summarize jobs arriving at or after `warmup`
+/// (µs) — the shared plumbing behind `experiments::run_policy` and the
+/// scenario sweep runner, so the steady-state cutoff is applied the same
+/// way everywhere.
+pub fn run_summarized(p: SimParams, warmup: Micros) -> (Recorder, crate::metrics::Summary) {
+    let cat = Catalog::paper();
+    let rec = Engine::new(p).run();
+    let sum = rec.summarize_after(&cat, warmup);
+    (rec, sum)
 }
 
 /// Run one simulation under an arbitrary [`SchedulerPolicy`] — the

@@ -1,4 +1,4 @@
-//! Arrival traces: Poisson, Wiki-like diurnal, WITS-like bursty (§5.3).
+//! Arrival traces: generators + composition operators (§5.3).
 //!
 //! Rust re-implements the same generator formulas as
 //! `python/compile/traces.py`, and can also *load* the exact traces the
@@ -8,6 +8,17 @@
 //! A [`Trace`] is a per-second arrival-rate series; [`Trace::arrivals`]
 //! expands it into concrete request timestamps via a piecewise-constant
 //! Poisson process.
+//!
+//! Beyond the paper's three workloads (constant-rate [`Trace::poisson`],
+//! diurnal [`Trace::wiki`], bursty [`Trace::wits`]) there are two
+//! post-paper generators — [`Trace::azure`] (an
+//! Azure-FunctionsInvocationTrace-like heavy-tailed aggregate) and
+//! [`Trace::flashcrowd`] (a step spike) — and four composition operators
+//! ([`Trace::overlay`], [`Trace::splice`], [`Trace::ramp`],
+//! [`Trace::noise`]) so arbitrary workload shapes can be expressed
+//! without code edits. The [`crate::scenario`] module exposes all of
+//! these through a declarative expression language in scenario files.
+//! Every generator and operator is deterministic given its seed.
 
 use std::path::Path;
 
@@ -45,14 +56,87 @@ impl Trace {
         }
     }
 
-    /// Truncate/extend (by tiling) to `duration_s` seconds.
+    /// Truncate/extend (by tiling) to `duration_s` seconds. An empty
+    /// series resizes to all-zero rates (there is nothing to tile)
+    /// instead of panicking on the modulo.
     pub fn resized(&self, duration_s: usize) -> Trace {
+        if self.rate_per_s.is_empty() {
+            return Trace {
+                name: self.name.clone(),
+                rate_per_s: vec![0.0; duration_s],
+            };
+        }
         let mut rate = Vec::with_capacity(duration_s);
         for i in 0..duration_s {
             rate.push(self.rate_per_s[i % self.rate_per_s.len()]);
         }
         Trace {
             name: self.name.clone(),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Element-wise sum of two traces. The result is as long as the
+    /// longer input; past the shorter one's end its rate counts as 0.
+    pub fn overlay(&self, other: &Trace) -> Trace {
+        let n = self.rate_per_s.len().max(other.rate_per_s.len());
+        let rate = (0..n)
+            .map(|i| {
+                self.rate_per_s.get(i).copied().unwrap_or(0.0)
+                    + other.rate_per_s.get(i).copied().unwrap_or(0.0)
+            })
+            .collect();
+        Trace {
+            name: format!("{}+{}", self.name, other.name),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Switch workloads mid-run: `self` for the first `at_s` seconds
+    /// (zero-padded if `self` is shorter), then all of `other` starting
+    /// from its own t = 0. Length = `at_s` + `other.duration_s()`.
+    pub fn splice(&self, other: &Trace, at_s: usize) -> Trace {
+        let mut rate = Vec::with_capacity(at_s + other.rate_per_s.len());
+        for i in 0..at_s {
+            rate.push(self.rate_per_s.get(i).copied().unwrap_or(0.0));
+        }
+        rate.extend_from_slice(&other.rate_per_s);
+        Trace {
+            name: format!("{}>{}", self.name, other.name),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Multiply the series by a factor ramping linearly from `from` at
+    /// t = 0 to `to` at the final sample (e.g. `from = 0, to = 1` fades
+    /// a workload in over the whole run).
+    pub fn ramp(&self, from: f64, to: f64) -> Trace {
+        let n = self.rate_per_s.len();
+        let denom = n.saturating_sub(1).max(1) as f64;
+        let rate = self
+            .rate_per_s
+            .iter()
+            .enumerate()
+            .map(|(i, r)| r * (from + (to - from) * i as f64 / denom))
+            .collect();
+        Trace {
+            name: format!("{}~ramp", self.name),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Multiplicative lognormal jitter: each sample is scaled by
+    /// exp(N(0, sigma)). Deterministic given `seed`; sigma = 0 is the
+    /// identity.
+    pub fn noise(&self, sigma: f64, seed: u64) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let rate = self
+            .rate_per_s
+            .iter()
+            .map(|r| r * rng.lognormal(0.0, sigma))
+            .collect();
+        Trace {
+            name: format!("{}~noise", self.name),
             rate_per_s: rate,
         }
     }
@@ -144,10 +228,110 @@ impl Trace {
         }
     }
 
+    /// Azure-FunctionsInvocationTrace-like aggregate (Shahrad et al.,
+    /// ATC'20 characterization): many "functions" whose per-function
+    /// rates are Pareto-distributed (a few hot functions dominate the
+    /// aggregate), mild phase-shifted diurnal modulation, per-second
+    /// lognormal jitter, and rare bursts whose *amplitudes* are
+    /// heavy-tailed too. The deterministic base is normalized to a mean
+    /// of ~100 req/s so cluster sizing stays predictable; compose with
+    /// [`Trace::scaled`] to change the level.
+    pub fn azure(duration_s: usize, seed: u64) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        const FUNCS: usize = 200;
+        // per-function weight ~ Pareto(x_m = 0.05, alpha = 1.1), capped
+        let mut funcs = Vec::with_capacity(FUNCS);
+        for _ in 0..FUNCS {
+            let u = loop {
+                let u = rng.f64();
+                if u > 1e-12 {
+                    break u;
+                }
+            };
+            let weight = (0.05 / u.powf(1.0 / 1.1)).min(50.0);
+            let phase = rng.range(0.0, two_pi);
+            let diurnal = rng.range(0.0, 0.6);
+            funcs.push((weight, phase, diurnal));
+        }
+        let mut rate: Vec<f64> = (0..duration_s)
+            .map(|t| {
+                let tf = t as f64;
+                funcs
+                    .iter()
+                    .map(|&(w, phase, amp)| w * (1.0 + amp * (two_pi * tf / 3600.0 + phase).sin()))
+                    .sum()
+            })
+            .collect();
+        // normalize the deterministic base to mean ~100 req/s
+        let mean = crate::util::stats::mean(&rate).max(1e-9);
+        for r in rate.iter_mut() {
+            *r *= 100.0 / mean;
+        }
+        // per-second jitter
+        for r in rate.iter_mut() {
+            *r *= rng.lognormal(0.0, 0.3);
+        }
+        // rare heavy-tailed bursts (Gaussian in time, Pareto amplitude)
+        let mut pos = 0.0f64;
+        loop {
+            pos += rng.exponential(600.0);
+            if pos >= duration_s as f64 {
+                break;
+            }
+            let u = rng.f64().max(1e-12);
+            let amp = (50.0 / u.powf(1.0 / 1.2)).min(1500.0);
+            let width = 20.0 * rng.lognormal(0.0, 0.5);
+            let sigma = (width / 2.355).max(1.0);
+            let lo = ((pos - 4.0 * sigma).max(0.0)) as usize;
+            let hi = ((pos + 4.0 * sigma) as usize).min(duration_s);
+            for (t, r) in rate.iter_mut().enumerate().take(hi).skip(lo) {
+                let d = (t as f64 - pos) / sigma;
+                *r += amp * (-0.5 * d * d).exp();
+            }
+        }
+        for r in rate.iter_mut() {
+            *r = r.clamp(0.1, 2000.0);
+        }
+        Trace {
+            name: "azure".to_string(),
+            rate_per_s: rate,
+        }
+    }
+
+    /// Flash-crowd step spike: `base` req/s everywhere except
+    /// `[start_s, start_s + width_s)`, where the rate jumps to
+    /// `base + amp`. Deterministic (no randomness); typically composed
+    /// onto another trace via [`Trace::overlay`] with `base = 0`.
+    pub fn flashcrowd(
+        duration_s: usize,
+        base: f64,
+        amp: f64,
+        start_s: usize,
+        width_s: usize,
+    ) -> Trace {
+        let rate = (0..duration_s)
+            .map(|t| {
+                if t >= start_s && t < start_s + width_s {
+                    base + amp
+                } else {
+                    base
+                }
+            })
+            .collect();
+        Trace {
+            name: "flashcrowd".to_string(),
+            rate_per_s: rate,
+        }
+    }
+
     /// Max arrival rate per adjacent window (paper §4.5: W_s = 5 s).
+    /// A trailing partial window contributes its own maximum — the
+    /// predictor input must not silently lose the end of the series
+    /// when the duration is not a multiple of `window_s`.
     pub fn window_maxima(&self, window_s: usize) -> Vec<f64> {
         self.rate_per_s
-            .chunks_exact(window_s)
+            .chunks(window_s.max(1))
             .map(|w| w.iter().copied().fold(0.0, f64::max))
             .collect()
     }
@@ -216,6 +400,107 @@ mod tests {
         };
         assert_eq!(t.window_maxima(2), vec![5.0, 8.0, 3.0]);
         assert_eq!(t.window_maxima(3), vec![5.0, 8.0]);
+    }
+
+    #[test]
+    fn window_maxima_includes_trailing_partial_window() {
+        // regression: chunks_exact silently dropped the tail window,
+        // so the predictor never saw the last duration % window_s secs.
+        let t = Trace {
+            name: "x".into(),
+            rate_per_s: vec![1.0, 5.0, 2.0, 8.0, 3.0, 1.0, 9.0],
+        };
+        assert_eq!(t.window_maxima(2), vec![5.0, 8.0, 3.0, 9.0]);
+        assert_eq!(t.window_maxima(3), vec![5.0, 8.0, 9.0]);
+        assert_eq!(t.window_maxima(100), vec![9.0]);
+        let empty = Trace {
+            name: "e".into(),
+            rate_per_s: vec![],
+        };
+        assert!(empty.window_maxima(5).is_empty());
+    }
+
+    #[test]
+    fn resized_empty_series_does_not_panic() {
+        // regression: `i % 0` panicked when a loaded trace was empty
+        let empty = Trace {
+            name: "e".into(),
+            rate_per_s: vec![],
+        };
+        let r = empty.resized(10);
+        assert_eq!(r.duration_s(), 10);
+        assert!(r.rate_per_s.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn overlay_sums_and_pads() {
+        let a = Trace::poisson(10.0, 3);
+        let b = Trace::poisson(5.0, 5);
+        let o = a.overlay(&b);
+        assert_eq!(o.rate_per_s, vec![15.0, 15.0, 15.0, 5.0, 5.0]);
+        // commutative on rates
+        assert_eq!(b.overlay(&a).rate_per_s, o.rate_per_s);
+    }
+
+    #[test]
+    fn splice_switches_workloads() {
+        let a = Trace::poisson(10.0, 2);
+        let b = Trace::poisson(3.0, 2);
+        let s = a.splice(&b, 4); // a is shorter than the splice point
+        assert_eq!(s.rate_per_s, vec![10.0, 10.0, 0.0, 0.0, 3.0, 3.0]);
+        assert_eq!(a.splice(&b, 1).rate_per_s, vec![10.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn ramp_scales_linearly() {
+        let t = Trace::poisson(100.0, 5);
+        let r = t.ramp(0.0, 1.0);
+        assert_eq!(r.rate_per_s[0], 0.0);
+        assert_eq!(r.rate_per_s[4], 100.0);
+        assert!((r.rate_per_s[2] - 50.0).abs() < 1e-9);
+        // single-sample trace: factor is `from`, no divide-by-zero
+        let one = Trace::poisson(10.0, 1).ramp(0.5, 2.0);
+        assert_eq!(one.rate_per_s, vec![5.0]);
+    }
+
+    #[test]
+    fn noise_is_seeded_and_sigma_zero_is_identity() {
+        let t = Trace::poisson(50.0, 100);
+        let a = t.noise(0.2, 9);
+        let b = t.noise(0.2, 9);
+        assert_eq!(a.rate_per_s, b.rate_per_s);
+        assert_ne!(a.rate_per_s, t.noise(0.2, 10).rate_per_s);
+        assert_eq!(t.noise(0.0, 9).rate_per_s, t.rate_per_s);
+    }
+
+    #[test]
+    fn azure_is_heavy_tailed_and_deterministic() {
+        let t = Trace::azure(4000, 1);
+        assert_eq!(t.rate_per_s, Trace::azure(4000, 1).rate_per_s);
+        assert_ne!(t.rate_per_s, Trace::azure(4000, 2).rate_per_s);
+        // base normalized near 100 req/s (jitter/bursts push the mean up)
+        let avg = t.avg_rate();
+        assert!((60.0..=400.0).contains(&avg), "avg {avg}");
+        // heavy tail: peak well above the median (lognormal jitter alone
+        // would put the ratio near 2; bursts push it past this bound)
+        let mut v = t.rate_per_s.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = crate::util::stats::percentile_sorted(&v, 50.0);
+        assert!(t.peak_rate() / median >= 2.5, "ratio {}", t.peak_rate() / median);
+        assert!(t.rate_per_s.iter().all(|&r| r >= 0.1));
+    }
+
+    #[test]
+    fn flashcrowd_is_an_exact_step() {
+        let t = Trace::flashcrowd(10, 5.0, 100.0, 3, 4);
+        assert_eq!(t.rate_per_s[2], 5.0);
+        assert_eq!(t.rate_per_s[3], 105.0);
+        assert_eq!(t.rate_per_s[6], 105.0);
+        assert_eq!(t.rate_per_s[7], 5.0);
+        assert_eq!(t.duration_s(), 10);
+        // spike window clipped by the duration is fine
+        let clipped = Trace::flashcrowd(5, 0.0, 10.0, 4, 100);
+        assert_eq!(clipped.rate_per_s, vec![0.0, 0.0, 0.0, 0.0, 10.0]);
     }
 
     #[test]

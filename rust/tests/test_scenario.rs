@@ -1,0 +1,301 @@
+//! Scenario-layer guarantees:
+//!
+//! 1. TOML scenario files round-trip into validated specs, and every
+//!    class of bad input fails with an error at parse time.
+//! 2. The sharded parallel sweep is byte-identical to the serial one at
+//!    fixed seeds (JSON and CSV).
+//! 3. The built-in `prototype-grid` / `macro-grid` scenarios reproduce
+//!    `experiments::run_policy` cells exactly — the paper's evaluation
+//!    grid is a special case of the scenario subsystem.
+//! 4. Trace operators/generators evaluate deterministically through the
+//!    scenario pipeline.
+
+use fifer::config::Policy;
+use fifer::experiments::{self, TraceKind};
+use fifer::metrics::Summary;
+use fifer::scenario::{self, ScenarioSpec};
+
+const SMALL: &str = r#"
+# four-cell sweep on the prototype cluster
+[scenario]
+name = "small"
+duration_s = 30
+drain_s = 30
+seeds = [7, 11]
+traces = ["poisson"]
+mixes = ["Heavy"]
+policies = ["Bline", "Fifer"]
+
+[cluster]
+preset = "prototype"
+
+[rm]
+idle_timeout_s = 60
+"#;
+
+#[test]
+fn toml_round_trip() {
+    let spec = ScenarioSpec::parse(SMALL).unwrap();
+    assert_eq!(spec.name, "small");
+    assert_eq!(spec.duration_s, 30);
+    assert_eq!(spec.drain_s, 30.0);
+    assert_eq!(spec.seeds, vec![7, 11]);
+    assert_eq!(spec.traces, vec!["poisson"]);
+    assert_eq!(spec.mixes, vec!["Heavy"]);
+    assert_eq!(spec.policies, vec![Policy::Bline, Policy::Fifer]);
+    assert_eq!(spec.cluster.nodes, 5);
+    // defaults
+    assert_eq!(spec.warmup_frac, 0.5);
+    assert_eq!(spec.warmup_cap_s, 700.0);
+    assert_eq!(spec.artifacts_dir, "artifacts");
+    // matrix order: trace-major, seed-minor, contiguous indices
+    let cells = spec.cells();
+    assert_eq!(cells.len(), 4);
+    assert_eq!(
+        cells.iter().map(|c| (c.policy, c.seed)).collect::<Vec<_>>(),
+        vec![
+            (Policy::Bline, 7),
+            (Policy::Bline, 11),
+            (Policy::Fifer, 7),
+            (Policy::Fifer, 11),
+        ]
+    );
+    for (i, c) in cells.iter().enumerate() {
+        assert_eq!(c.index, i);
+    }
+}
+
+#[test]
+fn policy_groups_expand() {
+    let all = ScenarioSpec::parse(
+        "[scenario]\nduration_s = 10\ntraces = [\"poisson\"]\npolicies = [\"all\"]",
+    )
+    .unwrap();
+    assert_eq!(all.policies, Policy::ALL.to_vec());
+    let paper = ScenarioSpec::parse(
+        "[scenario]\nduration_s = 10\ntraces = [\"poisson\"]\npolicies = [\"paper\"]",
+    )
+    .unwrap();
+    assert_eq!(paper.policies, Policy::PAPER.to_vec());
+    // defaults: policies -> all, mixes -> Heavy, seeds -> [42]
+    let d = ScenarioSpec::parse("[scenario]\ntraces = [\"wits\"]").unwrap();
+    assert_eq!(d.policies, Policy::ALL.to_vec());
+    assert_eq!(d.mixes, vec!["Heavy"]);
+    assert_eq!(d.seeds, vec![42]);
+    assert_eq!(d.duration_s, 600);
+}
+
+#[test]
+fn bad_inputs_error_at_parse_time() {
+    // complete documents, each broken in one way
+    let standalone: &[(&str, &str)] = &[
+        ("no scenario section", "duration_s = 10"),
+        ("no traces", "[scenario]\nduration_s = 10"),
+        ("empty traces", "[scenario]\ntraces = []"),
+        ("unknown trace name", "[scenario]\ntraces = [\"mystery\"]"),
+        ("root-level key", "x = 1\n[scenario]\ntraces = [\"wits\"]"),
+    ];
+    // one broken tail appended to an otherwise-valid [scenario] head
+    let tails: &[(&str, &str)] = &[
+        ("unknown policy", "policies = [\"zline\"]"),
+        ("unknown mix", "mixes = [\"Spicy\"]"),
+        ("unknown scenario key", "polices = [\"Fifer\"]"),
+        ("unknown section", "[traces.x]\nexpr = \"wits()\""),
+        ("bad expression syntax", "[trace.t]\nexpr = \"overlay(wits,\""),
+        ("unknown function", "[trace.t]\nexpr = \"frobnicate()\""),
+        ("unknown expr reference", "[trace.t]\nexpr = \"scale(ghost, by=2)\""),
+        ("wrong expr arity", "[trace.t]\nexpr = \"overlay(wits)\""),
+        ("missing required expr param", "[trace.t]\nexpr = \"scale(wits)\""),
+        ("typo'd expr param", "[trace.t]\nexpr = \"noise(wits, sgima=0.1)\""),
+        ("trace section extra key", "[trace.t]\nexpr = \"wits()\"\nrate = 5"),
+        ("trace section missing expr", "[trace.t]\nname = \"t\""),
+        ("bad trace name", "[trace.a,b]\nexpr = \"wits()\""),
+        ("unknown rm key", "[rm]\nidle_timeout = 60"),
+        ("unknown cluster key", "[cluster]\nnods = 3"),
+        ("negative seed", "seeds = [-1]"),
+        ("fractional seed", "seeds = [1.5]"),
+        ("seeds not numbers", "seeds = [\"a\"]"),
+        ("zero duration", "duration_s = 0"),
+        ("warmup_frac out of range", "warmup_frac = 1.5"),
+        ("bad rm override", "[rm]\nslack_policy = \"zigzag\""),
+        ("bad cluster preset", "[cluster]\npreset = \"mega\""),
+    ];
+    let check = |what: &str, text: &str| {
+        assert!(
+            ScenarioSpec::parse(text).is_err(),
+            "{what}: expected a parse error\n{text}"
+        );
+    };
+    for &(what, text) in standalone {
+        check(what, text);
+    }
+    for &(what, tail) in tails {
+        check(what, &format!("[scenario]\ntraces = [\"wits\"]\n{tail}"));
+    }
+}
+
+#[test]
+fn definition_cycles_are_detected() {
+    let spec = ScenarioSpec::parse(
+        r#"
+[scenario]
+duration_s = 10
+traces = ["a"]
+
+[trace.a]
+expr = "scale(b, by=2)"
+
+[trace.b]
+expr = "scale(a, by=2)"
+"#,
+    )
+    .unwrap();
+    let err = spec.build_traces().unwrap_err().to_string();
+    assert!(err.contains("itself"), "unexpected error: {err}");
+}
+
+#[test]
+fn composed_traces_build_deterministically() {
+    let text = r#"
+[scenario]
+duration_s = 120
+traces = ["base", "crowd"]
+
+[trace.base]
+expr = "noise(ramp(wits(seed=5), from=0.5, to=1.0), sigma=0.1, seed=9)"
+
+[trace.crowd]
+expr = "overlay(base, flashcrowd(base=0, amp=300, start=60, width=20))"
+"#;
+    let spec = ScenarioSpec::parse(text).unwrap();
+    let a = spec.build_traces().unwrap();
+    let b = spec.build_traces().unwrap();
+    assert_eq!(a["crowd"].rate_per_s, b["crowd"].rate_per_s);
+    assert_eq!(a["crowd"].duration_s(), 120);
+    // crowd is exactly base + the 300 req/s step inside [60, 80)
+    for t in 0..120 {
+        let step = if (60..80).contains(&t) { 300.0 } else { 0.0 };
+        assert_eq!(a["crowd"].rate_per_s[t], a["base"].rate_per_s[t] + step, "t={t}");
+    }
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    let spec = ScenarioSpec::parse(SMALL).unwrap();
+    let serial = scenario::run_scenario(&spec, 1).unwrap();
+    let sharded = scenario::run_scenario(&spec, 3).unwrap();
+    assert_eq!(serial.len(), 4);
+    assert_eq!(
+        scenario::results_json(&spec, &serial).to_string(),
+        scenario::results_json(&spec, &sharded).to_string()
+    );
+    assert_eq!(
+        scenario::results_csv(&serial),
+        scenario::results_csv(&sharded)
+    );
+    // oversubscribed thread count is clamped, still identical
+    let over = scenario::run_scenario(&spec, 64).unwrap();
+    assert_eq!(
+        scenario::results_json(&spec, &serial).to_string(),
+        scenario::results_json(&spec, &over).to_string()
+    );
+}
+
+#[test]
+fn csv_shape_matches_results() {
+    let spec = ScenarioSpec::parse(SMALL).unwrap();
+    let results = scenario::run_scenario(&spec, 2).unwrap();
+    let csv = scenario::results_csv(&results);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 1 + results.len());
+    let ncols = 4 + Summary::CSV_FIELDS.len();
+    for line in &lines {
+        assert_eq!(line.split(',').count(), ncols, "{line}");
+    }
+    assert!(lines[0].starts_with("trace,mix,policy,seed,jobs,"));
+}
+
+/// The §6.1 grid is a special case: a `prototype-grid` cell is
+/// byte-identical to `experiments::run_policy` with the same knobs.
+#[test]
+fn builtin_prototype_grid_matches_experiment_driver() {
+    let mut spec = ScenarioSpec::parse(scenario::builtin("prototype-grid").unwrap()).unwrap();
+    // shrink the grid to one cheap cell; the shared knobs stay as shipped
+    spec.duration_s = 30;
+    spec.seeds = vec![7];
+    spec.policies = vec![Policy::Fifer];
+    spec.mixes = vec!["Heavy".to_string()];
+    let results = scenario::run_scenario(&spec, 2).unwrap();
+    assert_eq!(results.len(), 1);
+    let driver = experiments::run_policy(Policy::Fifer, "Heavy", TraceKind::Poisson, 30, true, 7);
+    assert_eq!(
+        results[0].summary.to_json().to_string(),
+        driver.summary.to_json().to_string(),
+        "scenario cell must equal the run_prototype driver cell"
+    );
+}
+
+/// Same for the §6.2 macro grid (simulation cluster, real trace).
+#[test]
+fn builtin_macro_grid_matches_experiment_driver() {
+    let mut spec = ScenarioSpec::parse(scenario::builtin("macro-grid").unwrap()).unwrap();
+    spec.duration_s = 90;
+    spec.seeds = vec![42];
+    spec.policies = vec![Policy::Bline];
+    spec.mixes = vec!["Heavy".to_string()];
+    spec.traces = vec!["wits".to_string()];
+    let results = scenario::run_scenario(&spec, 1).unwrap();
+    assert_eq!(results.len(), 1);
+    let driver = experiments::run_policy(Policy::Bline, "Heavy", TraceKind::Wits, 90, false, 42);
+    assert_eq!(
+        results[0].summary.to_json().to_string(),
+        driver.summary.to_json().to_string(),
+        "scenario cell must equal the run_macro driver cell"
+    );
+}
+
+/// Warm-up follows each trace's *actual* horizon: a cell whose
+/// expression resizes the trace must equal the driver run at the
+/// resized duration, not at the nominal `duration_s`.
+#[test]
+fn warmup_follows_actual_trace_horizon() {
+    let spec = ScenarioSpec::parse(
+        r#"
+[scenario]
+duration_s = 30
+seeds = [7]
+traces = ["longer"]
+mixes = ["Heavy"]
+policies = ["Fifer"]
+
+[trace.longer]
+expr = "resize(poisson(rate=50), to=60)"
+"#,
+    )
+    .unwrap();
+    let results = scenario::run_scenario(&spec, 1).unwrap();
+    // same workload as the Poisson driver at duration 60 (resize of a
+    // constant-rate series is the same series), so summaries match iff
+    // the warm-up cutoff scales with the real 60 s horizon
+    let driver = experiments::run_policy(Policy::Fifer, "Heavy", TraceKind::Poisson, 60, true, 7);
+    assert_eq!(
+        results[0].summary.to_json().to_string(),
+        driver.summary.to_json().to_string()
+    );
+}
+
+#[test]
+fn all_builtin_scenarios_parse_and_validate() {
+    for (name, text, _) in scenario::BUILTINS {
+        let spec = ScenarioSpec::parse(text)
+            .unwrap_or_else(|e| panic!("builtin {name} failed to parse: {e:#}"));
+        assert!(!spec.cells().is_empty(), "{name}: empty matrix");
+    }
+    // the composed demo also builds its traces (without running the sims)
+    let demo = ScenarioSpec::parse(scenario::builtin("flashcrowd").unwrap()).unwrap();
+    let traces = demo.build_traces().unwrap();
+    assert_eq!(traces.len(), 2);
+    assert!(traces.contains_key("crowd") && traces.contains_key("azure"));
+    assert_eq!(demo.cells().len(), 12); // 2 traces x 1 mix x 3 policies x 2 seeds
+    assert!(scenario::builtin("no-such-scenario").is_none());
+}
