@@ -1,14 +1,15 @@
 //! End-to-end live serving driver (the docs/DESIGN.md validation workload).
 //!
-//! Loads the real AOT-compiled microservice models, serves Poisson
-//! traffic for the heavy workload mix through Fifer's slack-based
-//! batcher, and reports latency/throughput — with a batching-off
-//! (Bline-style) run for comparison. Everything on the request path is
-//! Rust + PJRT; Python was only involved at `make artifacts` time.
+//! Serves Poisson traffic for the heavy workload mix through the
+//! real-time driver: the registered policy spawns, batches onto, and
+//! retires real executor threads ("containers") through the same
+//! `coordinator::engine` core as the simulator — with a batching-off
+//! (Bline-style) run for comparison. With `make artifacts` the executors
+//! run real PJRT inference; pass `--synthetic` to run the modeled
+//! executor backend anywhere:
 //!
 //! ```bash
-//! make artifacts && cargo build --release
-//! cargo run --release --example serve_cluster -- --rate 30 --duration 20
+//! cargo run --release --example serve_cluster -- --rate 25 --duration 15 --synthetic
 //! ```
 
 use anyhow::Result;
@@ -17,16 +18,20 @@ use fifer::config::{Policy, RmConfig};
 use fifer::server::{serve, ServeParams, ServeReport};
 
 fn report(tag: &str, r: &ServeReport) {
+    let s = &r.summary;
     println!(
         "{tag:>12}: {} jobs, {:.1} req/s, median {:.0} ms, p99 {:.0} ms, \
-         {:.2}% SLO violations, {} batches (avg size {:.2}), {} cold compiles",
-        r.jobs,
+         {:.2}% SLO violations, {} batches (avg size {:.2}), \
+         {} containers spawned ({} reclaimed), {} cold compiles",
+        s.jobs,
         r.throughput_rps,
-        r.median_ms,
-        r.p99_ms,
-        r.slo_violation_pct,
+        s.median_ms,
+        s.p99_ms,
+        s.slo_violation_pct,
         r.batches,
         r.avg_batch,
+        s.total_spawned,
+        r.recorder.reclaimed,
         r.cold_compiles
     );
     let mut rows: Vec<_> = r.stage_exec_ms.iter().collect();
@@ -40,24 +45,35 @@ fn main() -> Result<()> {
     let args = Args::from_env()?;
     let rate = args.f64_or("rate", 25.0)?;
     let duration = args.f64_or("duration", 15.0)?;
-    let executors = args.usize_or("executors", 2)?;
+    let executors = args.usize_or("executors", 12)?;
+    let synthetic = args.flag("synthetic");
 
     println!("== Fifer live cluster: heavy mix (IPA + DetectFatigue) ==");
-    println!("rate {rate} req/s for {duration} s, {executors} executor thread(s)\n");
+    println!(
+        "rate {rate} req/s for {duration} s, up to {executors} container thread(s), {} backend\n",
+        if synthetic { "synthetic" } else { "PJRT" }
+    );
 
-    let mut fifer = ServeParams::quick(rate, duration);
-    fifer.executors = executors;
-    let r1 = serve(fifer)?;
+    let quick = |policy: Policy| {
+        let mut p = ServeParams::quick(rate, duration);
+        p.executors = executors;
+        p.synthetic = synthetic;
+        p.cfg.rm = RmConfig::paper(policy);
+        // a tight monitor loop keeps reactive scaling responsive over
+        // short demo runs (the paper's T = 10 s suits long traces)
+        p.cfg.rm.monitor_interval_s = 1.0;
+        p.cfg.rm.sample_window_s = 1.0;
+        p
+    };
+
+    let r1 = serve(quick(Policy::Fifer))?;
     report("Fifer", &r1);
 
-    let mut bline = ServeParams::quick(rate, duration);
-    bline.executors = executors;
-    bline.cfg.rm = RmConfig::paper(Policy::Bline); // batching off via policy
-    let r2 = serve(bline)?;
+    let r2 = serve(quick(Policy::Bline))?; // batching off via policy
     report("no-batching", &r2);
 
     println!(
-        "\nbatching amortization: {:.2}x fewer model invocations \
+        "\nbatching amortization: {:.2}x fewer executor invocations \
          ({} vs {} batches for ~the same jobs)",
         r2.batches as f64 / r1.batches.max(1) as f64,
         r1.batches,

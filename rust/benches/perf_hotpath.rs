@@ -91,6 +91,9 @@ fn case_json(name: &str, pool: usize, t: &Timing) -> Json {
 
 fn main() {
     let quick = std::env::var("FIFER_BENCH_QUICK").is_ok();
+    // the §6.1.5 dispatch-decision latency probe is opt-in (it reads
+    // host time inside the engine); this bench is the opt-in site
+    std::env::set_var("FIFER_DECISION_PROBE", "1");
     let mut cases: Vec<Json> = Vec::new();
     let mut t = Table::new(&["operation", "mean", "p50", "p99", "paper ref"]);
 

@@ -1,0 +1,859 @@
+//! The driver-agnostic coordinator engine: one control loop, two drivers.
+//!
+//! [`EngineCore`] is the single implementation of the Fifer coordinator
+//! state machine: per-stage global queues, the indexed
+//! [`StateStore`], slack-plan batching, predictor sampling windows, and
+//! every [`SchedulerPolicy`] hook. It contains **no notion of where time
+//! or execution comes from** — that is the [`Driver`]'s job. The
+//! event-driven simulator (`crate::sim`) plugs in a *virtual-time*
+//! driver (modeled cold starts and execution latencies, scheduled on the
+//! core's event heap), and the live server (`crate::server`) plugs in a
+//! *real-time* driver (executor threads running actual inference, with
+//! completions injected as they happen). Both make exactly the same
+//! scheduling decisions, because the decisions live here.
+//!
+//! # Driver contract
+//!
+//! This is the effect-side counterpart of the `SchedulerPolicy` hook
+//! contract (see [`crate::coordinator::policy`]):
+//!
+//! * **The core owns decisions; the driver owns effects.** A driver
+//!   never touches the queues, the store, or the policy — it only
+//!   realizes the spawns and batch executions the core asks for, so the
+//!   two drivers cannot drift apart on scheduling behavior.
+//! * **Engine time is driver-defined µs, advancing monotonically.**
+//!   Virtual heap time in the simulator, monotonic elapsed wall time in
+//!   the live server. The core never reads a clock itself.
+//! * **Effects are either virtual or asynchronous.** `begin_spawn`
+//!   returns [`SpawnEffect::Ready`] (the core schedules warm-up after
+//!   the returned virtual latency) or [`SpawnEffect::Pending`] (the
+//!   driver delivers readiness later via [`EngineCore::spawn_completed`]).
+//!   `exec_batch` returns `Some(duration)` for a virtual completion or
+//!   `None` when the driver will call [`EngineCore::batch_completed`].
+//! * **All modeled randomness draws from the core's seeded PCG**, handed
+//!   to the driver through [`EffectCtx`] in a fixed call order. A
+//!   virtual driver that performs the same draws in the same order
+//!   reproduces a run bit-for-bit from its seed (this is what pins the
+//!   simulator byte-identical across refactors); a real-time driver is
+//!   free to ignore the RNG — its nondeterminism is physical, not
+//!   sampled.
+//! * **Host-time probes are opt-in.** The §6.1.5 dispatch-decision
+//!   latency probe reads `std::time::Instant` and is disabled unless
+//!   [`EngineCore::set_decision_probe`] (or the `FIFER_DECISION_PROBE`
+//!   environment variable) turns it on, so deterministic runs perform no
+//!   wall-clock reads at all.
+//!
+//! Metrics flow through one [`Recorder`] regardless of driver, so live
+//! runs and simulations summarize identically
+//! (`crate::metrics::Summary`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::coldstart::ColdStartModel;
+use crate::config::SystemConfig;
+use crate::coordinator::policy::{PolicyView, ScalingPlan, SchedulerPolicy};
+use crate::coordinator::queue::{QueueEntry, StageQueue};
+use crate::coordinator::state::{BatchStart, CState, StateStore};
+use crate::coordinator::{lsf_key, scaling, slack::SlackPlan};
+use crate::energy::ClusterEnergy;
+use crate::metrics::{JobRecord, Recorder, StageRecord};
+use crate::model::{Catalog, ChainId, MsId};
+use crate::predictor::Predictor;
+use crate::util::rng::Pcg;
+use crate::util::{ms, secs, Micros, MICROS_PER_S};
+
+/// Core events. Ord is required by the heap; ordering beyond the
+/// (time, seq) key is irrelevant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    /// A request for `chain` arrives.
+    Arrival { chain: ChainId },
+    /// Container finished cold-starting.
+    SpawnDone { cid: u64 },
+    /// Container finished executing its current batch.
+    BatchDone { cid: u64 },
+    /// Close one W_s arrival-sampling window (predictor input).
+    WindowClose,
+    /// Periodic monitoring: the policy's `on_monitor` hook (Algorithm 1).
+    Monitor,
+    /// Periodic `on_scan` reclamation + energy sampling.
+    Scan,
+}
+
+/// Per-job state; stage records accumulate in place and move into the
+/// [`Recorder`] at completion.
+#[derive(Debug)]
+struct JobState {
+    chain: ChainId,
+    arrival: Micros,
+    stage_idx: usize,
+    stages: Vec<StageRecord>,
+    cur_enqueued: Micros,
+    cur_exec_start: Micros,
+    cur_cold_wait: Micros,
+    done: bool,
+}
+
+/// Read-only slice of the core handed to [`Driver`] effect hooks: the
+/// catalog/config/cold-start model plus the engine clock and the seeded
+/// RNG every modeled latency must draw from.
+pub struct EffectCtx<'a> {
+    pub cat: &'a Catalog,
+    pub cfg: &'a SystemConfig,
+    pub coldstart: &'a ColdStartModel,
+    /// Engine time (virtual or monotonic µs — never a wall clock).
+    pub now: Micros,
+    /// The core's seeded PCG. Virtual drivers sample modeled latencies
+    /// from it (draw order defines reproducibility); real-time drivers
+    /// may fork per-container streams or ignore it.
+    pub rng: &'a mut Pcg,
+}
+
+impl EffectCtx<'_> {
+    /// Sample the modeled cold-start latency (spawn + image pull +
+    /// runtime init) for one container of `ms_id`. THE single
+    /// definition of the modeled cold start: the simulator's virtual
+    /// driver and the live server's synthetic backend both call this,
+    /// so the two cannot drift apart.
+    pub fn sample_cold_start(&mut self, ms_id: MsId) -> Micros {
+        self.coldstart
+            .sample(&self.cat.microservices[ms_id], self.rng)
+            .total()
+    }
+
+    /// Sample the modeled batched-execution duration for a captured
+    /// batch: exec(B) = exec(1)·(1 + γ·(B−1)) plus the warm scheduling
+    /// overhead. Shared by the virtual driver and the synthetic live
+    /// backend — one exec model, two drivers.
+    pub fn sample_batch_exec(&mut self, b: &BatchStart) -> Micros {
+        let base_ms = self.cat.microservices[b.ms_id].sample_exec_ms(self.rng);
+        let gamma = self.cfg.rm.batch_cost_gamma;
+        let exec_ms = base_ms * (1.0 + gamma * (b.jobs.len() as f64 - 1.0));
+        self.coldstart.warm_overhead() + ms(exec_ms)
+    }
+}
+
+/// How a requested container spawn materializes.
+#[derive(Debug, Clone, Copy)]
+pub enum SpawnEffect {
+    /// The container becomes warm after this much engine time (0 =
+    /// instantly warm); the core schedules the warm-up itself.
+    Ready(Micros),
+    /// The driver brings the container up asynchronously and will call
+    /// [`EngineCore::spawn_completed`]; the payload is the *expected*
+    /// cold-start latency, used for `ready_at`/cold-wait attribution
+    /// until the real warm-up arrives.
+    Pending(Micros),
+}
+
+impl SpawnEffect {
+    /// The (expected) cold-start latency carried by either variant.
+    pub fn latency(self) -> Micros {
+        match self {
+            SpawnEffect::Ready(l) | SpawnEffect::Pending(l) => l,
+        }
+    }
+}
+
+/// The effect side of the engine: how spawns and batch executions
+/// actually happen. See the module docs for the full contract.
+pub trait Driver {
+    /// A container for `ms_id` is about to spawn. Decide (and, for
+    /// virtual drivers, sample) its cold-start latency. Called before
+    /// placement — the spawn may still be rejected by a full cluster, in
+    /// which case no matching [`Driver::container_spawned`] follows.
+    fn begin_spawn(&mut self, ms_id: MsId, cold: bool, ctx: EffectCtx<'_>) -> SpawnEffect;
+
+    /// Execute a captured batch on container `cid`. Return
+    /// `Some(duration)` to complete virtually after that much engine
+    /// time, or `None` when completion is delivered asynchronously via
+    /// [`EngineCore::batch_completed`].
+    fn exec_batch(&mut self, cid: u64, batch: &BatchStart, ctx: EffectCtx<'_>) -> Option<Micros>;
+
+    /// A container was admitted to the store (real-time drivers launch
+    /// the executor here). `effect` is the value this driver returned
+    /// from the matching [`Driver::begin_spawn`] — passed back so
+    /// drivers need no call-pairing side state.
+    fn container_spawned(
+        &mut self,
+        _cid: u64,
+        _ms_id: MsId,
+        _batch: usize,
+        _effect: SpawnEffect,
+        _ctx: EffectCtx<'_>,
+    ) {
+    }
+
+    /// A container was retired or evicted (real-time drivers tear the
+    /// executor down here). Only ever called for idle containers.
+    fn container_retired(&mut self, _cid: u64) {}
+}
+
+/// The coordinator state machine, generic over its [`Driver`].
+///
+/// Use `crate::sim::Engine` (= `EngineCore<VirtualDriver>`) for
+/// simulations and `crate::server::serve` for live runs; drive the core
+/// directly only when building a new driver.
+pub struct EngineCore<D: Driver> {
+    pub(crate) cat: Catalog,
+    pub(crate) cfg: SystemConfig,
+    pub(crate) chains: Vec<ChainId>,
+    pub(crate) plan: SlackPlan,
+    pub(crate) queues: HashMap<MsId, StageQueue>,
+    pub(crate) store: StateStore,
+    pub(crate) cold: ColdStartModel,
+    /// The scheduler policy. Held in an Option so hooks can borrow the
+    /// engine immutably (for the `PolicyView`) while the trait object is
+    /// temporarily taken out; always `Some` between events.
+    pub(crate) policy: Option<Box<dyn SchedulerPolicy>>,
+    pub(crate) predictor: Option<Box<dyn Predictor>>,
+    pub(crate) rng: Pcg,
+    events: BinaryHeap<Reverse<(Micros, u64, Event)>>,
+    pub(crate) seq: u64,
+    pub(crate) now: Micros,
+    jobs: Vec<JobState>,
+    jobs_done: usize,
+    pub recorder: Recorder,
+    pub(crate) energy: ClusterEnergy,
+    /// Per-second arrival counts inside the current sampling window.
+    window_counts: Vec<u64>,
+    window_start: Micros,
+    /// Trailing window maxima used to sanity-clamp out-of-distribution
+    /// forecasts; retention = history_s / sample_window_s windows.
+    recent_maxima: VecDeque<f64>,
+    maxima_keep: usize,
+    pub(crate) stages: Vec<MsId>,
+    /// Average workload rate, exposed to policies (SBatch pool sizing).
+    pub(crate) avg_rate: f64,
+    /// End of the workload window (arrivals + monitor scaling).
+    pub(crate) horizon: Micros,
+    /// End of the run (drain included); periodic scans stop here.
+    pub(crate) end: Micros,
+    /// Opt-in host-time sampling of dispatch decisions (§6.1.5).
+    probe_decisions: bool,
+    decision_probe: u64,
+    pub(crate) driver: D,
+}
+
+impl<D: Driver> EngineCore<D> {
+    /// Assemble a core around a policy and a driver. Drivers supply the
+    /// workload separately (the simulator seeds arrivals from a trace;
+    /// the live server injects them from a generator thread), so the
+    /// core only needs the long-run `avg_rate` hint here.
+    pub fn build(
+        cfg: SystemConfig,
+        chains: Vec<ChainId>,
+        avg_rate: f64,
+        pol: Box<dyn SchedulerPolicy>,
+        driver: D,
+    ) -> EngineCore<D> {
+        let cat = Catalog::paper();
+        let plan = SlackPlan::build(&cat, &chains, &cfg.rm, pol.batching());
+        let order = pol.queue_order();
+        let mut stages: Vec<MsId> = Vec::new();
+        for &c in &chains {
+            for &s in &cat.chains[c].stages {
+                if !stages.contains(&s) {
+                    stages.push(s);
+                }
+            }
+        }
+        let queues = stages
+            .iter()
+            .map(|&s| (s, StageQueue::new(order)))
+            .collect();
+        let store = StateStore::new(
+            cfg.cluster.nodes,
+            cfg.cluster.cores_per_node,
+            cfg.cluster.cpu_per_container,
+        );
+        let energy = ClusterEnergy::new(cfg.cluster.nodes);
+        let predictor = pol.make_predictor(&cfg);
+        let nwin = cfg.rm.sample_window_s.max(1.0) as usize;
+        let maxima_keep = (cfg.rm.history_s / cfg.rm.sample_window_s.max(1e-9))
+            .ceil()
+            .max(1.0) as usize;
+        let rng = Pcg::new(cfg.seed);
+        EngineCore {
+            cat,
+            cfg,
+            chains,
+            plan,
+            queues,
+            store,
+            cold: ColdStartModel::default(),
+            policy: Some(pol),
+            predictor,
+            rng,
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            jobs: Vec::new(),
+            jobs_done: 0,
+            recorder: Recorder::new(),
+            energy,
+            window_counts: vec![0; nwin],
+            window_start: 0,
+            recent_maxima: VecDeque::with_capacity(maxima_keep),
+            maxima_keep,
+            stages,
+            avg_rate,
+            horizon: 0,
+            end: Micros::MAX,
+            probe_decisions: std::env::var_os("FIFER_DECISION_PROBE").is_some(),
+            decision_probe: 0,
+            driver,
+        }
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.cat
+    }
+
+    /// Enable/disable the host-time dispatch-decision probe (§6.1.5).
+    /// Off by default so deterministic runs never read a wall clock; the
+    /// `perf_hotpath` bench opts in.
+    pub fn set_decision_probe(&mut self, on: bool) {
+        self.probe_decisions = on;
+    }
+
+    /// Requests that have entered the system.
+    pub fn jobs_arrived(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Requests that have completed their whole chain.
+    pub fn jobs_completed(&self) -> usize {
+        self.jobs_done
+    }
+
+    fn push(&mut self, t: Micros, ev: Event) {
+        self.seq += 1;
+        self.events.push(Reverse((t, self.seq, ev)));
+    }
+
+    /// Seed a future arrival (virtual-time drivers preload the whole
+    /// trace; real-time drivers use [`EngineCore::arrival_at`] instead).
+    pub fn schedule_arrival(&mut self, t: Micros, chain: ChainId) {
+        self.push(t, Event::Arrival { chain });
+    }
+
+    /// Read-only snapshot for policy hooks.
+    fn view(&self, forecast: Option<f64>) -> PolicyView<'_> {
+        PolicyView {
+            cat: &self.cat,
+            cfg: &self.cfg,
+            chains: &self.chains,
+            plan: &self.plan,
+            stages: &self.stages,
+            queues: &self.queues,
+            store: &self.store,
+            cold: &self.cold,
+            now: self.now,
+            forecast,
+            avg_rate_hint: self.avg_rate,
+        }
+    }
+
+    /// Run the policy's initial provisioning and arm the periodic
+    /// events. `horizon` bounds arrivals/monitor scaling, `end` bounds
+    /// the whole run (drain included). Call once, at engine time 0,
+    /// after any virtual arrivals have been seeded.
+    pub fn bootstrap(&mut self, horizon: Micros, end: Micros) {
+        self.horizon = horizon;
+        self.end = end;
+        // initial provisioning at t = 0 (e.g. SBatch's fixed pool)
+        let mut pol = self.policy.take().expect("policy present");
+        let start_plan = pol.on_start(&self.view(None));
+        self.policy = Some(pol);
+        self.execute_plan(start_plan);
+        // periodic events
+        self.push(secs(self.cfg.rm.sample_window_s), Event::WindowClose);
+        self.push(secs(self.cfg.rm.monitor_interval_s), Event::Monitor);
+        self.push(secs(self.cfg.rm.monitor_interval_s), Event::Scan);
+    }
+
+    /// Spawn the plan's containers in order. Within an entry, a rejected
+    /// spawn skips to the next entry — or aborts the whole plan when the
+    /// policy asked for `stop_on_full` (fixed-pool provisioning).
+    fn execute_plan(&mut self, plan: ScalingPlan) {
+        let ScalingPlan {
+            spawns,
+            stop_on_full,
+        } = plan;
+        'spawning: for (ms_id, n) in spawns {
+            for _ in 0..n {
+                if self.spawn_container(ms_id, true).is_none() {
+                    if stop_on_full {
+                        break 'spawning;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // event dispatch
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Arrival { chain } => self.handle_arrival(chain),
+            Event::SpawnDone { cid } => self.handle_spawn_done(cid),
+            Event::BatchDone { cid } => self.handle_batch_done(cid),
+            Event::WindowClose => self.handle_window_close(),
+            Event::Monitor => {
+                if self.now <= self.horizon {
+                    self.run_monitor();
+                    let next = self.now + secs(self.cfg.rm.monitor_interval_s);
+                    self.push(next, Event::Monitor);
+                }
+            }
+            Event::Scan => {
+                self.run_scan();
+                if self.now <= self.end {
+                    let next = self.now + secs(self.cfg.rm.monitor_interval_s);
+                    self.push(next, Event::Scan);
+                }
+            }
+        }
+    }
+
+    /// Drain the event heap in time order until it is empty or the next
+    /// event lies beyond `end` (virtual-time run loop), verifying
+    /// invariants every `check_every` events (0 = never).
+    pub(crate) fn run_events(&mut self, check_every: u64) -> Result<(), String> {
+        let mut steps = 0u64;
+        while let Some(Reverse((t, _, ev))) = self.events.pop() {
+            if t > self.end {
+                break;
+            }
+            self.now = t;
+            self.handle(ev);
+            steps += 1;
+            if check_every > 0 && steps % check_every == 0 {
+                self.check_conservation()?;
+                self.check_store()?;
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // real-time ingress (the live driver's API)
+    // ------------------------------------------------------------------
+
+    /// Advance engine time to `t`, firing every internal event (window
+    /// closes, monitor ticks, scans, virtual completions) due on the
+    /// way. Real-time drivers call this from their tickers and before
+    /// every injection; time never moves backwards.
+    pub fn advance_to(&mut self, t: Micros) {
+        let t = t.max(self.now);
+        loop {
+            let due = self
+                .events
+                .peek()
+                .is_some_and(|&Reverse((et, _, _))| et <= t && et <= self.end);
+            if !due {
+                break;
+            }
+            let Reverse((et, _, ev)) = self.events.pop().expect("peeked event");
+            self.now = et;
+            self.handle(ev);
+        }
+        self.now = t;
+    }
+
+    /// Inject a live arrival at engine time `t`.
+    pub fn arrival_at(&mut self, chain: ChainId, t: Micros) {
+        self.advance_to(t);
+        self.handle_arrival(chain);
+    }
+
+    /// A [`SpawnEffect::Pending`] container came up for real.
+    pub fn spawn_completed(&mut self, cid: u64, t: Micros) {
+        self.advance_to(t);
+        self.handle_spawn_done(cid);
+    }
+
+    /// An asynchronously executed batch (`exec_batch` returned `None`)
+    /// finished. Ignored unless the container is still in the store and
+    /// executing (a failed spawn's fallback may have completed the batch
+    /// virtually in the meantime).
+    pub fn batch_completed(&mut self, cid: u64, t: Micros) {
+        self.advance_to(t);
+        if self.store.get(cid).map(|c| c.state) != Some(CState::Busy) {
+            return;
+        }
+        self.handle_batch_done(cid);
+    }
+
+    /// Final settlement: retire whatever is still running (accounting
+    /// only), settle energy, stamp the horizon. Returns the recorder and
+    /// the driver (so real-time drivers can join their executors).
+    pub fn into_parts(mut self) -> (Recorder, D) {
+        let cids: Vec<u64> = self.store.container_ids();
+        for cid in cids {
+            self.recorder.container_retired(cid, self.now.min(self.end));
+        }
+        self.settle_energy(self.end.min(self.now.max(self.horizon)));
+        self.recorder.horizon = self.horizon;
+        self.recorder.energy_wh = self.energy.total_wh();
+        (self.recorder, self.driver)
+    }
+
+    // ------------------------------------------------------------------
+    // event handlers
+    // ------------------------------------------------------------------
+
+    fn handle_arrival(&mut self, chain: ChainId) {
+        let job_id = self.jobs.len() as u64;
+        self.jobs.push(JobState {
+            chain,
+            arrival: self.now,
+            stage_idx: 0,
+            stages: Vec::with_capacity(self.cat.chains[chain].stages.len()),
+            cur_enqueued: 0,
+            cur_exec_start: 0,
+            cur_cold_wait: 0,
+            done: false,
+        });
+        // arrival-rate sampling for the predictor; an arrival delivered
+        // exactly at a window boundary (before the WindowClose event
+        // fires) still counts — clamp into the final bucket instead of
+        // silently dropping it from the predictor input.
+        let sec_in_window = ((self.now - self.window_start) / MICROS_PER_S) as usize;
+        let bucket = sec_in_window.min(self.window_counts.len() - 1);
+        self.window_counts[bucket] += 1;
+        self.enqueue_stage(job_id, self.now);
+    }
+
+    fn enqueue_stage(&mut self, job_id: u64, t: Micros) {
+        let (chain, stage_idx, arrival) = {
+            let j = &mut self.jobs[job_id as usize];
+            j.cur_enqueued = t;
+            j.cur_cold_wait = 0;
+            (j.chain, j.stage_idx, j.arrival)
+        };
+        let ms_id = self.cat.chains[chain].stages[stage_idx];
+        let key = lsf_key(&self.cat, chain, stage_idx, arrival);
+        self.seq += 1;
+        let entry = QueueEntry {
+            job_id,
+            lsf_key: key,
+            enqueued: t,
+            seq: self.seq,
+        };
+        self.queues.get_mut(&ms_id).unwrap().push(entry);
+
+        // event-driven per-request spawning is the policy's call (e.g.
+        // Bline/BPred spawn the uncovered deficit, §3)
+        let mut pol = self.policy.take().expect("policy present");
+        let n = pol.on_arrival(ms_id, &self.view(None));
+        self.policy = Some(pol);
+        for _ in 0..n {
+            if self.spawn_container(ms_id, true).is_none() {
+                break; // cluster full
+            }
+        }
+        self.try_dispatch(ms_id);
+    }
+
+    /// Move queued requests into warm container slots (greedy §4.4.1).
+    fn try_dispatch(&mut self, ms_id: MsId) {
+        let probe = self.probe_decisions && self.decision_probe % 512 == 0;
+        let t0 = probe.then(std::time::Instant::now);
+        loop {
+            if self.queues[&ms_id].is_empty() {
+                break;
+            }
+            let Some(cid) = self.store.pick_container(ms_id) else {
+                break;
+            };
+            let entry = self.queues.get_mut(&ms_id).unwrap().pop().unwrap();
+            if self.store.dispatch(cid, entry.job_id, self.now) {
+                self.start_exec(cid);
+            }
+        }
+        self.decision_probe += 1;
+        if let Some(t0) = t0 {
+            self.recorder.decision_ns.push(t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Begin executing the container's queued requests as ONE batched
+    /// inference pass (continuous batching: everything queued locally at
+    /// kick-off time runs together). The driver realizes the execution —
+    /// the virtual driver samples exec(B) = exec(1)·(1 + γ·(B−1)), the
+    /// real-time driver hands the batch to the container's executor.
+    fn start_exec(&mut self, cid: u64) {
+        let b = self.store.begin_batch(cid);
+        let dur = self.driver.exec_batch(
+            cid,
+            &b,
+            EffectCtx {
+                cat: &self.cat,
+                cfg: &self.cfg,
+                coldstart: &self.cold,
+                now: self.now,
+                rng: &mut self.rng,
+            },
+        );
+        for &job_id in &b.jobs {
+            let j = &mut self.jobs[job_id as usize];
+            j.cur_exec_start = self.now;
+            // cold-start attribution: the job waited on this container's
+            // spawn if it was enqueued before the container came up.
+            j.cur_cold_wait = if b.started_cold && j.cur_enqueued < b.ready_at {
+                (self.now - j.cur_enqueued).min(b.spawn_latency)
+            } else {
+                0
+            };
+        }
+        if let Some(d) = dur {
+            self.push(self.now + d, Event::BatchDone { cid });
+        }
+    }
+
+    fn handle_batch_done(&mut self, cid: u64) {
+        let (ms_id, batch_jobs) = self.store.finish_batch(cid, self.now);
+        self.recorder.container_executed(cid, batch_jobs.len() as u64);
+
+        // Kick off the next batch immediately: the container must be Busy
+        // again *before* job advancement below can trigger spawns (which
+        // may evict idle containers — including this one otherwise).
+        if !self
+            .store
+            .get(cid)
+            .expect("container alive after finish_batch")
+            .local
+            .is_empty()
+        {
+            self.start_exec(cid);
+        }
+
+        // finalize stage records and advance every job of the batch
+        for job_id in batch_jobs {
+            let advance = {
+                let j = &mut self.jobs[job_id as usize];
+                j.stages.push(StageRecord {
+                    ms_id,
+                    enqueued: j.cur_enqueued,
+                    exec_start: j.cur_exec_start,
+                    exec_end: self.now,
+                    cold_wait: j.cur_cold_wait,
+                });
+                j.stage_idx += 1;
+                if j.stage_idx >= self.cat.chains[j.chain].stages.len() {
+                    j.done = true;
+                    None
+                } else {
+                    Some(job_id)
+                }
+            };
+            match advance {
+                None => {
+                    self.jobs_done += 1;
+                    let j = &mut self.jobs[job_id as usize];
+                    self.recorder.job(JobRecord {
+                        chain: j.chain,
+                        arrival: j.arrival,
+                        completion: self.now,
+                        stages: std::mem::take(&mut j.stages),
+                    });
+                }
+                Some(jid) => self.enqueue_stage(jid, self.now),
+            }
+        }
+
+        // refill from the global queue (cid itself may have been evicted
+        // by a capacity-pressure spawn during job advancement — fine, the
+        // dispatcher picks any warm container of this stage)
+        self.try_dispatch(ms_id);
+    }
+
+    fn handle_spawn_done(&mut self, cid: u64) {
+        // None when the container was already reclaimed — or was never
+        // Starting (a zero-latency Pending spawn is warm from birth);
+        // in the latter case still offer it queued work
+        let ms_id = match self.store.warm_up(cid, self.now) {
+            Some(ms_id) => Some(ms_id),
+            None => self.store.get(cid).map(|c| c.ms_id),
+        };
+        if let Some(ms_id) = ms_id {
+            self.try_dispatch(ms_id);
+        }
+    }
+
+    fn handle_window_close(&mut self) {
+        // max per-second arrival rate inside the window (paper §4.5)
+        let max_rate = self.window_counts.iter().copied().max().unwrap_or(0) as f64;
+        if let Some(p) = self.predictor.as_mut() {
+            p.observe(max_rate);
+        }
+        if self.recent_maxima.len() >= self.maxima_keep {
+            self.recent_maxima.pop_front();
+        }
+        self.recent_maxima.push_back(max_rate);
+        self.window_counts.iter_mut().for_each(|c| *c = 0);
+        self.window_start = self.now;
+        self.push(
+            self.now + secs(self.cfg.rm.sample_window_s),
+            Event::WindowClose,
+        );
+    }
+
+    /// Forecast for this monitor tick, sanity-clamped: a pre-trained
+    /// model queried far out of its training distribution must not
+    /// over-provision more than 2x the recently observed peak (§8
+    /// "Design Limitations"). `None` when the policy built no predictor.
+    fn clamped_forecast(&mut self) -> Option<f64> {
+        let recent_max = self
+            .recent_maxima
+            .iter()
+            .copied()
+            .fold(0.0f64, f64::max);
+        self.predictor
+            .as_mut()
+            .map(|p| p.forecast().min((2.0 * recent_max).max(1.0)))
+    }
+
+    fn run_monitor(&mut self) {
+        let forecast = self.clamped_forecast();
+        let mut pol = self.policy.take().expect("policy present");
+        let plan = pol.on_monitor(&self.view(forecast));
+        self.policy = Some(pol);
+        self.execute_plan(plan);
+    }
+
+    fn run_scan(&mut self) {
+        let mut pol = self.policy.take().expect("policy present");
+        let retire = pol.on_scan(&self.view(None));
+        self.policy = Some(pol);
+        for cid in retire {
+            if self.store.remove(cid).is_some() {
+                self.recorder.container_retired(cid, self.now);
+                self.recorder.reclaimed += 1;
+                self.driver.container_retired(cid);
+            }
+        }
+        self.settle_energy(self.now);
+        self.recorder
+            .energy_series
+            .push((self.now, self.energy.total_wh()));
+    }
+
+    fn settle_energy(&mut self, t: Micros) {
+        let loads = self.store.node_loads();
+        for (i, (busy, alloc)) in loads.into_iter().enumerate() {
+            self.energy.nodes[i].update(t, busy, alloc, &self.cfg.cluster);
+        }
+    }
+
+    fn spawn_container(&mut self, ms_id: MsId, cold: bool) -> Option<u64> {
+        // capacity guard: one stage may hold at most max_stage_fraction of
+        // the cluster's container slots (see RmConfig docs)
+        let cap = scaling::stage_cap(
+            self.cfg.cluster.max_containers(),
+            self.cfg.rm.max_stage_fraction,
+        );
+        if self.store.stage_containers(ms_id) >= cap {
+            return None;
+        }
+        let batch = self.plan.batch_for(ms_id);
+        let effect = self.driver.begin_spawn(
+            ms_id,
+            cold,
+            EffectCtx {
+                cat: &self.cat,
+                cfg: &self.cfg,
+                coldstart: &self.cold,
+                now: self.now,
+                rng: &mut self.rng,
+            },
+        );
+        let latency = effect.latency();
+        let cid = match self.store.spawn(ms_id, batch, self.now, latency, cold) {
+            Some(cid) => cid,
+            None => {
+                // Cluster full. Rebalance by evicting the globally
+                // longest-idle container, but only when this stage is
+                // genuinely underwater — containerless (startup
+                // starvation), or its whole warm pool saturated with
+                // nothing starting — and only a victim that has been idle
+                // past a grace period (an over-provisioned pool member,
+                // not a hot-pool straggler). Otherwise fail: requests
+                // queue on the stage's warm pool, as on a full
+                // Kubernetes cluster (pods pend, running pods serve).
+                let starved = self.store.stage_containers(ms_id) == 0
+                    || (self.store.warm_free_slots(ms_id) == 0
+                        && self.store.starting_slots(ms_id) == 0);
+                if !starved {
+                    return None;
+                }
+                let grace = secs((self.cfg.rm.idle_timeout_s / 2.0).min(30.0));
+                let victim = self.store.lru_idle_since(self.now.saturating_sub(grace))?;
+                if self.store.get(victim).map(|c| c.ms_id) == Some(ms_id) {
+                    return None;
+                }
+                self.store.remove(victim);
+                self.recorder.container_retired(victim, self.now);
+                self.recorder.reclaimed += 1;
+                self.driver.container_retired(victim);
+                self.store.spawn(ms_id, batch, self.now, latency, cold)?
+            }
+        };
+        self.recorder.container_spawned(cid, ms_id, self.now, cold);
+        self.driver.container_spawned(
+            cid,
+            ms_id,
+            batch,
+            effect,
+            EffectCtx {
+                cat: &self.cat,
+                cfg: &self.cfg,
+                coldstart: &self.cold,
+                now: self.now,
+                rng: &mut self.rng,
+            },
+        );
+        match effect {
+            SpawnEffect::Ready(0) => self.try_dispatch(ms_id),
+            SpawnEffect::Ready(l) => self.push(self.now + l, Event::SpawnDone { cid }),
+            SpawnEffect::Pending(_) => {}
+        }
+        Some(cid)
+    }
+
+    // ------------------------------------------------------------------
+    // invariant checks (used by property tests)
+    // ------------------------------------------------------------------
+
+    /// Total requests conserved: every arrival is queued, in-flight, or done.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let queued: usize = self.queues.values().map(|q| q.len()).sum();
+        let in_flight: usize = self.store.iter().map(|c| c.local.len()).sum();
+        let done = self.jobs.iter().filter(|j| j.done).count();
+        // jobs between stages are accounted at enqueue, so:
+        let total = self.jobs.len();
+        let accounted = queued + in_flight + done;
+        if accounted != total {
+            return Err(format!(
+                "conservation violated: queued {queued} + in-flight {in_flight} + done {done} != {total}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// No node over capacity; all store indexes and aggregates consistent.
+    pub fn check_store(&self) -> Result<(), String> {
+        for n in &self.store.nodes {
+            if n.alloc_cores > n.total_cores + 1e-9 {
+                return Err(format!("node {} over capacity", n.id));
+            }
+        }
+        self.store.check_consistency()
+    }
+}

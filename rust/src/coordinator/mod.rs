@@ -16,13 +16,18 @@
 //!   trait — the engines contain no per-policy branches.
 //!
 //! Policies *decide* over a read-only [`policy::PolicyView`] snapshot and
-//! return plans; the engines *execute*. The event-driven simulator
-//! (`crate::sim`) and the live serving runtime (`crate::server`) drive the
-//! same trait objects with virtual and wall-clock time respectively, so a
-//! policy written once runs in both worlds (and in yours — see
-//! `examples/custom_policy.rs` for a user-defined policy that plugs into
-//! `run_sim_with` without touching crate internals).
+//! return plans; the engine *executes*. Since PR 4 there is exactly one
+//! engine: [`engine::EngineCore`] owns the whole control loop (queues,
+//! store transitions, slack batching, predictor windows, every policy
+//! hook) and is parameterized over a small [`engine::Driver`] that
+//! supplies time and effects. The event-driven simulator (`crate::sim`)
+//! is the virtual-time driver and the live serving runtime
+//! (`crate::server`) is the real-time driver, so a policy written once
+//! runs — and makes the *same decisions* — in both worlds (and in yours;
+//! see `examples/custom_policy.rs` for a user-defined policy that plugs
+//! into `run_sim_with` without touching crate internals).
 
+pub mod engine;
 pub mod policy;
 pub mod queue;
 pub mod scaling;

@@ -3,13 +3,15 @@
 //! Fifer's contribution is a *family* of resource-management policies
 //! (paper §5.3, Table 6) compared under identical cluster mechanics. This
 //! module makes that family an open set: every decision point the engine
-//! exposes is one hook on [`SchedulerPolicy`], and both the event-driven
-//! simulator (`crate::sim::Engine`) and the live serving path
-//! (`crate::server::serve`) drive the *same* trait objects — one policy
-//! implementation serves virtual- and wall-clock execution. (The live
-//! path has a fixed executor pool and flushes whole stage buffers, so it
-//! consults only the `batching` hook; the simulator exercises the full
-//! hook surface.)
+//! exposes is one hook on [`SchedulerPolicy`], and there is exactly one
+//! engine — [`crate::coordinator::engine::EngineCore`] — driven in
+//! virtual time by the simulator (`crate::sim::Engine`) and in wall-clock
+//! time by the live server (`crate::server::serve`). Both paths exercise
+//! the *full* hook surface against the same trait objects: live
+//! containers are real executor threads that `on_start`/`on_arrival`/
+//! `on_monitor` plans spawn and `on_scan` retires. The effect-side
+//! counterpart of this contract (what a `Driver` may and may not do)
+//! is documented in [`crate::coordinator::engine`].
 //!
 //! ## Hooks (one per engine decision point)
 //!
@@ -102,7 +104,7 @@ pub trait SchedulerPolicy {
     }
 
     /// Batch requests per container? Drives Eq. 1 batch sizing in the
-    /// slack plan and deadline-based flushing on the live path.
+    /// slack plan (container local-queue capacity on both drivers).
     fn batching(&self) -> bool {
         false
     }

@@ -117,7 +117,10 @@ impl StageQueue {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        match self.order {
+            Ordering::Fifo => self.fifo.is_empty(),
+            Ordering::LeastSlackFirst => self.heap.is_empty(),
+        }
     }
 
     /// Oldest enqueue time still waiting (for queuing-delay monitoring).

@@ -535,11 +535,13 @@ impl StateStore {
     }
 
     /// Cold start finished: Starting → Idle. Returns the stage, or None
-    /// if the container was reclaimed (or its slot recycled) meanwhile.
+    /// if the container was reclaimed (or its slot recycled) meanwhile —
+    /// or is no longer Starting (a duplicate/late warm-up notification
+    /// must never yank a dispatched container back to Idle).
     pub fn warm_up(&mut self, cid: u64, now: Micros) -> Option<MsId> {
         let slot = slot_of(cid);
         let ms_id = match self.slots.get_mut(slot)?.as_mut() {
-            Some(s) if s.c.id == cid => {
+            Some(s) if s.c.id == cid && s.c.state == CState::Starting => {
                 s.c.state = CState::Idle;
                 s.c.last_used = now;
                 s.c.ms_id

@@ -27,11 +27,19 @@
 //! request path) and a **high-fidelity event-driven cluster simulator**
 //! used for the paper's large-scale trace-driven experiments.
 //!
-//! Resource-management policies are **plug-ins**: the paper's five RMs,
-//! the Knative-style `Kn` autoscaler, and the `FiferEq` ablation all
-//! implement [`coordinator::policy::SchedulerPolicy`], and both engines
-//! drive the same trait objects. See `examples/custom_policy.rs` for a
-//! user-defined policy run through [`sim::run_sim_with`].
+//! Both run on **one engine with two drivers**: the coordinator state
+//! machine ([`coordinator::engine::EngineCore`]) owns every scheduling
+//! decision, parameterized over a small [`coordinator::engine::Driver`]
+//! that supplies time and effects — virtual time with modeled latencies
+//! in the simulator, wall-clock time with real executor threads in the
+//! live server. Resource-management policies are **plug-ins**: the
+//! paper's five RMs, the Knative-style `Kn` autoscaler, and the
+//! `FiferEq` ablation all implement
+//! [`coordinator::policy::SchedulerPolicy`], and both drivers exercise
+//! the full hook surface against the same trait objects (live runs get
+//! policy-driven container autoscaling, not just batching). See
+//! `examples/custom_policy.rs` for a user-defined policy run through
+//! [`sim::run_sim_with`].
 //!
 //! Workloads are **data**: the [`scenario`] module turns the paper's
 //! fixed trace × mix × RM evaluation grid into declarative TOML scenario
@@ -45,7 +53,8 @@
 //! |-------|---------|
 //! | workloads | [`trace`], [`model`], [`scenario`] |
 //! | policies | [`coordinator::policy`], [`config`] (registry facade) |
-//! | engines | [`sim`] (event-driven cluster), [`server`] + [`runtime`] (live PJRT) |
+//! | engine core | [`coordinator::engine`] (one state machine, `Driver`-parameterized) |
+//! | drivers | [`sim`] (virtual time), [`server`] + [`runtime`] (real time, PJRT/synthetic) |
 //! | mechanics | [`coordinator`] (store/queues/slack/scaling), [`coldstart`], [`energy`] |
 //! | prediction | [`predictor`] (EWMA/ARIMA/LSTM zoo) |
 //! | evaluation | [`experiments`], [`metrics`], [`bench`] |

@@ -68,7 +68,20 @@ fn run() -> Result<()> {
                         ("coldstart", "cold/warm start characterization (Fig. 2)"),
                         ("stages", "per-stage execution breakdown (Fig. 3)"),
                     ],
-                    &[("--policy <name>", policy_help.as_str())],
+                    &[
+                        ("--policy <name>", policy_help.as_str()),
+                        (
+                            "--synthetic",
+                            "serve: modeled executors (no artifacts/PJRT needed)",
+                        ),
+                        (
+                            "--executors <n>",
+                            "serve: max live containers (executor threads)",
+                        ),
+                        ("--drain <s>", "serve: drain window after the generator stops"),
+                        ("--monitor <s>", "serve: monitor-tick interval override"),
+                        ("--json <file>", "serve: write the metrics summary as JSON"),
+                    ],
                 )
             );
             Ok(())
@@ -173,7 +186,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.f64_or("rate", 20.0)?,
         args.f64_or("duration", 10.0)?,
     );
-    p.executors = args.usize_or("executors", 2)?;
+    p.executors = args.usize_or("executors", p.executors)?;
+    p.drain_s = args.f64_or("drain", p.drain_s)?;
+    p.synthetic = args.flag("synthetic");
     // --no-batching is shorthand for the non-batching baseline policy;
     // combining it with an explicit batching --policy is contradictory
     let policy = match (args.get("policy"), args.flag("no-batching")) {
@@ -192,26 +207,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     p.cfg.rm = RmConfig::paper(policy);
+    p.cfg.rm.monitor_interval_s = args.f64_or("monitor", p.cfg.rm.monitor_interval_s)?;
     p.cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
     println!(
-        "live serve: rate={} req/s, {}s, policy={} (batching={})",
+        "live serve: rate={} req/s, {}s (+{}s drain), policy={} (batching={}), \
+         up to {} containers, {} backend",
         p.rate,
         p.duration_s,
+        p.drain_s,
         policy.name(),
-        policy.batching()
+        policy.batching(),
+        p.executors,
+        if p.synthetic { "synthetic" } else { "PJRT" }
     );
     let r = serve(p)?;
+    let s = &r.summary;
     println!(
         "jobs={} throughput={:.1} req/s median={:.1}ms p99={:.1}ms \
          slo-violations={:.2}% batches={} avg-batch={:.2} cold-compiles={}",
-        r.jobs,
+        s.jobs,
         r.throughput_rps,
-        r.median_ms,
-        r.p99_ms,
-        r.slo_violation_pct,
+        s.median_ms,
+        s.p99_ms,
+        s.slo_violation_pct,
         r.batches,
         r.avg_batch,
         r.cold_compiles
+    );
+    println!(
+        "containers: spawned={} avg-live={:.1} cold-starts={} reclaimed={} energy={:.1}Wh",
+        s.total_spawned,
+        s.avg_containers,
+        s.cold_starts,
+        r.recorder.reclaimed,
+        s.energy_wh
     );
     let mut t = Table::new(&["stage", "mean batch exec (ms)"]);
     let mut rows: Vec<_> = r.stage_exec_ms.iter().collect();
@@ -220,6 +249,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         t.row(&[name.to_string(), format!("{ms:.2}")]);
     }
     t.print();
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, s.to_json().to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -85,6 +85,12 @@ pub struct Recorder {
     pub containers: Vec<ContainerRecord>,
     container_index: HashMap<u64, usize>,
     pub cold_starts: u64,
+    /// Batched execution passes kicked off (one per `container_executed`
+    /// call) — the denominator of the realized average batch size.
+    pub batches: u64,
+    /// Containers retired by policy reclamation or capacity eviction
+    /// *during* the run (end-of-run accounting retirement excluded).
+    pub reclaimed: u64,
     pub energy_wh: f64,
     /// Cumulative cluster energy sampled over time (µs, Wh) — lets
     /// summaries exclude the warm-up transient consistently.
@@ -119,6 +125,7 @@ impl Recorder {
     }
 
     pub fn container_executed(&mut self, cid: u64, jobs: u64) {
+        self.batches += 1;
         if let Some(&i) = self.container_index.get(&cid) {
             self.containers[i].jobs_executed += jobs;
         }

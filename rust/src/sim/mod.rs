@@ -1,70 +1,38 @@
-//! High-fidelity event-driven cluster simulator (paper §5.2).
+//! High-fidelity event-driven cluster simulator (paper §5.2): the
+//! **virtual-time driver** over the shared coordinator engine.
 //!
 //! Simulates the full serverless stack — request arrival, per-stage global
 //! queues, container local queues, cold starts (spawn + image pull +
 //! runtime init), serial in-container execution, greedy placement, idle
-//! scale-in, node power — at microsecond resolution, driven by the same
-//! coordinator primitives as the live server. The paper validated its
-//! simulator against the real prototype; we do the same in
-//! `rust/tests/test_server_live.rs` (graceful no-op without artifacts).
+//! scale-in, node power — at microsecond resolution. The entire control
+//! loop (queues, state store, slack batching, predictor windows, every
+//! policy hook) lives in [`EngineCore`]
+//! (`crate::coordinator::engine`); this module contributes only the
+//! [`VirtualDriver`]: modeled cold-start and execution latencies sampled
+//! from the seeded PCG and scheduled on the core's event heap, with the
+//! whole trace preloaded as arrival events. The live server
+//! (`crate::server`) drives the *same* core in wall-clock time, so the
+//! paper's §5.2 sim-vs-prototype validation is structural here —
+//! `rust/tests/test_driver_differential.rs` runs every policy through
+//! both drivers.
 //!
 //! All *policy* decisions (spawning, scaling, reclamation, queue
 //! ordering) are delegated to a [`SchedulerPolicy`] trait object — the
 //! engine owns mechanics only and contains no per-policy branches. Use
 //! [`run_sim`] for a registered policy, [`run_sim_with`] /
-//! [`Engine::with_policy`] to inject your own implementation.
+//! `Engine::with_policy` to inject your own implementation.
 //!
 //! Events are processed from a binary heap ordered by (time, seq); all
 //! randomness flows from one seeded PCG, so runs are exactly reproducible.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
-
-use crate::coldstart::ColdStartModel;
 use crate::config::SystemConfig;
-use crate::coordinator::policy::{PolicyView, ScalingPlan, SchedulerPolicy};
-use crate::coordinator::queue::{QueueEntry, StageQueue};
-use crate::coordinator::state::StateStore;
-use crate::coordinator::{lsf_key, scaling, slack::SlackPlan};
-use crate::energy::ClusterEnergy;
-use crate::metrics::{JobRecord, Recorder, StageRecord};
+use crate::coordinator::engine::{Driver, EffectCtx, EngineCore, SpawnEffect};
+use crate::coordinator::policy::SchedulerPolicy;
+use crate::coordinator::state::BatchStart;
+use crate::metrics::Recorder;
 use crate::model::{Catalog, ChainId, MsId};
-use crate::predictor::Predictor;
 use crate::trace::Trace;
-use crate::util::rng::Pcg;
-use crate::util::{ms, secs, Micros, MICROS_PER_S};
-
-/// Simulator events. Ord is required by the heap; ordering beyond the
-/// (time, seq) key is irrelevant.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Event {
-    /// A request for `chain` arrives.
-    Arrival { chain: ChainId },
-    /// Container finished cold-starting.
-    SpawnDone { cid: u64 },
-    /// Container finished executing its current batch.
-    BatchDone { cid: u64 },
-    /// Close one W_s arrival-sampling window (predictor input).
-    WindowClose,
-    /// Periodic monitoring: the policy's `on_monitor` hook (Algorithm 1).
-    Monitor,
-    /// Periodic `on_scan` reclamation + energy sampling.
-    Scan,
-}
-
-/// Per-job simulation state; stage records accumulate in place and move
-/// into the [`Recorder`] at completion.
-#[derive(Debug)]
-struct JobState {
-    chain: ChainId,
-    arrival: Micros,
-    stage_idx: usize,
-    stages: Vec<StageRecord>,
-    cur_enqueued: Micros,
-    cur_exec_start: Micros,
-    cur_cold_wait: Micros,
-    done: bool,
-}
+use crate::util::{secs, Micros};
 
 /// Simulation parameters beyond the [`SystemConfig`].
 #[derive(Debug, Clone)]
@@ -77,40 +45,37 @@ pub struct SimParams {
     pub drain_s: f64,
 }
 
-pub struct Engine {
-    cat: Catalog,
-    p: SimParams,
-    plan: SlackPlan,
-    queues: HashMap<MsId, StageQueue>,
-    store: StateStore,
-    cold: ColdStartModel,
-    /// The scheduler policy. Held in an Option so hooks can borrow the
-    /// engine immutably (for the `PolicyView`) while the trait object is
-    /// temporarily taken out; always `Some` between events.
-    policy: Option<Box<dyn SchedulerPolicy>>,
-    predictor: Option<Box<dyn Predictor>>,
-    rng: Pcg,
-    events: BinaryHeap<Reverse<(Micros, u64, Event)>>,
-    seq: u64,
-    now: Micros,
-    jobs: Vec<JobState>,
-    pub recorder: Recorder,
-    energy: ClusterEnergy,
-    /// Per-second arrival counts inside the current sampling window.
-    window_counts: Vec<u64>,
-    window_start: Micros,
-    /// Trailing window maxima used to sanity-clamp out-of-distribution
-    /// forecasts; retention = history_s / sample_window_s windows.
-    recent_maxima: VecDeque<f64>,
-    maxima_keep: usize,
-    stages: Vec<MsId>,
-    /// Average trace rate, exposed to policies (SBatch pool sizing).
-    avg_rate: f64,
-    /// host-time sampling of dispatch decisions (§6.1.5 overhead metric)
-    decision_probe: u64,
+/// The virtual-time [`Driver`]: every effect is a modeled latency drawn
+/// from the core's seeded PCG and scheduled on the event heap, so a run
+/// is a pure function of its seed. Holds the workload source (trace +
+/// drain window) that `Engine::run` feeds into the core.
+pub struct VirtualDriver {
+    trace: Trace,
+    drain_s: f64,
 }
 
-impl Engine {
+impl Driver for VirtualDriver {
+    /// Cold starts: spawn + image pull + runtime init, sampled from the
+    /// calibrated model via the shared `EffectCtx::sample_cold_start`.
+    fn begin_spawn(&mut self, ms_id: MsId, cold: bool, mut ctx: EffectCtx<'_>) -> SpawnEffect {
+        let latency = if cold { ctx.sample_cold_start(ms_id) } else { 0 };
+        SpawnEffect::Ready(latency)
+    }
+
+    /// Batched execution: the shared `EffectCtx::sample_batch_exec`
+    /// model, completing virtually after that long.
+    fn exec_batch(&mut self, _cid: u64, b: &BatchStart, mut ctx: EffectCtx<'_>) -> Option<Micros> {
+        Some(ctx.sample_batch_exec(b))
+    }
+}
+
+/// The simulator: the shared coordinator core under the virtual-time
+/// driver. All state-machine behavior (and its documentation) lives on
+/// [`EngineCore`]; the methods below add trace seeding and the
+/// virtual-time run loop.
+pub type Engine = EngineCore<VirtualDriver>;
+
+impl EngineCore<VirtualDriver> {
     /// Build an engine for the policy registered under `cfg.rm.policy`.
     pub fn new(p: SimParams) -> Engine {
         let pol = p.cfg.rm.policy.build();
@@ -121,104 +86,12 @@ impl Engine {
     /// extension point for policies outside the registry (see
     /// `examples/custom_policy.rs`).
     pub fn with_policy(p: SimParams, pol: Box<dyn SchedulerPolicy>) -> Engine {
-        let cat = Catalog::paper();
-        let plan = SlackPlan::build(&cat, &p.chains, &p.cfg.rm, pol.batching());
-        let order = pol.queue_order();
-        let mut stages: Vec<MsId> = Vec::new();
-        for &c in &p.chains {
-            for &s in &cat.chains[c].stages {
-                if !stages.contains(&s) {
-                    stages.push(s);
-                }
-            }
-        }
-        let queues = stages
-            .iter()
-            .map(|&s| (s, StageQueue::new(order)))
-            .collect();
-        let store = StateStore::new(
-            p.cfg.cluster.nodes,
-            p.cfg.cluster.cores_per_node,
-            p.cfg.cluster.cpu_per_container,
-        );
-        let energy = ClusterEnergy::new(p.cfg.cluster.nodes);
-        let predictor = pol.make_predictor(&p.cfg);
-        let nwin = p.cfg.rm.sample_window_s.max(1.0) as usize;
-        let maxima_keep = (p.cfg.rm.history_s / p.cfg.rm.sample_window_s.max(1e-9))
-            .ceil()
-            .max(1.0) as usize;
         let avg_rate = p.trace.avg_rate();
-        let rng = Pcg::new(p.cfg.seed);
-        Engine {
-            cat,
-            plan,
-            queues,
-            store,
-            cold: ColdStartModel::default(),
-            policy: Some(pol),
-            predictor,
-            rng,
-            events: BinaryHeap::new(),
-            seq: 0,
-            now: 0,
-            jobs: Vec::new(),
-            recorder: Recorder::new(),
-            energy,
-            window_counts: vec![0; nwin],
-            window_start: 0,
-            recent_maxima: VecDeque::with_capacity(maxima_keep),
-            maxima_keep,
-            stages,
-            avg_rate,
-            decision_probe: 0,
-            p,
-        }
-    }
-
-    pub fn catalog(&self) -> &Catalog {
-        &self.cat
-    }
-
-    fn push(&mut self, t: Micros, ev: Event) {
-        self.seq += 1;
-        self.events.push(Reverse((t, self.seq, ev)));
-    }
-
-    /// Read-only snapshot for policy hooks.
-    fn view(&self, forecast: Option<f64>) -> PolicyView<'_> {
-        PolicyView {
-            cat: &self.cat,
-            cfg: &self.p.cfg,
-            chains: &self.p.chains,
-            plan: &self.plan,
-            stages: &self.stages,
-            queues: &self.queues,
-            store: &self.store,
-            cold: &self.cold,
-            now: self.now,
-            forecast,
-            avg_rate_hint: self.avg_rate,
-        }
-    }
-
-    /// Spawn the plan's containers in order. Within an entry, a rejected
-    /// spawn skips to the next entry — or aborts the whole plan when the
-    /// policy asked for `stop_on_full` (fixed-pool provisioning).
-    fn execute_plan(&mut self, plan: ScalingPlan) {
-        let ScalingPlan {
-            spawns,
-            stop_on_full,
-        } = plan;
-        'spawning: for (ms_id, n) in spawns {
-            for _ in 0..n {
-                if self.spawn_container(ms_id, true).is_none() {
-                    if stop_on_full {
-                        break 'spawning;
-                    }
-                    break;
-                }
-            }
-        }
+        let driver = VirtualDriver {
+            trace: p.trace,
+            drain_s: p.drain_s,
+        };
+        EngineCore::build(p.cfg, p.chains, avg_rate, pol, driver)
     }
 
     /// Run the full simulation; returns the populated recorder.
@@ -231,381 +104,21 @@ impl Engine {
     /// invariants every `check_every` events (0 = never). Used by the
     /// policy-conformance suite to certify arbitrary policies.
     pub fn run_checked(mut self, check_every: u64) -> Result<Recorder, String> {
-        let horizon = secs(self.p.trace.duration_s() as f64);
+        let horizon = secs(self.driver.trace.duration_s() as f64);
+        let end = horizon + secs(self.driver.drain_s);
         // seed arrivals
         let mut arr_rng = self.rng.fork(0xa221);
-        let arrivals = self.p.trace.arrivals(&mut arr_rng);
-        let nchains = self.p.chains.len();
+        let arrivals = self.driver.trace.arrivals(&mut arr_rng);
+        let nchains = self.chains.len();
         for (i, t) in arrivals.into_iter().enumerate() {
-            let chain = self.p.chains[i % nchains.max(1)];
-            self.push(t, Event::Arrival { chain });
+            let chain = self.chains[i % nchains.max(1)];
+            self.schedule_arrival(t, chain);
         }
-        // initial provisioning at t = 0 (e.g. SBatch's fixed pool)
-        let mut pol = self.policy.take().expect("policy present");
-        let start_plan = pol.on_start(&self.view(None));
-        self.policy = Some(pol);
-        self.execute_plan(start_plan);
-        // periodic events
-        self.push(secs(self.p.cfg.rm.sample_window_s), Event::WindowClose);
-        self.push(secs(self.p.cfg.rm.monitor_interval_s), Event::Monitor);
-        self.push(secs(self.p.cfg.rm.monitor_interval_s), Event::Scan);
-
-        let end = horizon + secs(self.p.drain_s);
-        let mut steps = 0u64;
-        while let Some(Reverse((t, _, ev))) = self.events.pop() {
-            if t > end {
-                break;
-            }
-            self.now = t;
-            match ev {
-                Event::Arrival { chain } => self.on_arrival(chain),
-                Event::SpawnDone { cid } => self.on_spawn_done(cid),
-                Event::BatchDone { cid } => self.on_batch_done(cid),
-                Event::WindowClose => self.on_window_close(),
-                Event::Monitor => {
-                    if t <= horizon {
-                        self.on_monitor();
-                        let next = t + secs(self.p.cfg.rm.monitor_interval_s);
-                        self.push(next, Event::Monitor);
-                    }
-                }
-                Event::Scan => {
-                    self.on_scan();
-                    if t <= end {
-                        let next = t + secs(self.p.cfg.rm.monitor_interval_s);
-                        self.push(next, Event::Scan);
-                    }
-                }
-            }
-            steps += 1;
-            if check_every > 0 && steps % check_every == 0 {
-                self.check_conservation()?;
-                self.check_store()?;
-            }
-        }
-        // final energy settlement + retire remaining containers at horizon
-        let cids: Vec<u64> = self.store.container_ids();
-        for cid in cids {
-            self.recorder.container_retired(cid, self.now.min(end));
-        }
-        self.settle_energy(end.min(self.now.max(horizon)));
-        self.recorder.horizon = horizon;
-        self.recorder.energy_wh = self.energy.total_wh();
-        Ok(self.recorder)
-    }
-
-    // ------------------------------------------------------------------
-    // event handlers
-    // ------------------------------------------------------------------
-
-    fn on_arrival(&mut self, chain: ChainId) {
-        let job_id = self.jobs.len() as u64;
-        self.jobs.push(JobState {
-            chain,
-            arrival: self.now,
-            stage_idx: 0,
-            stages: Vec::with_capacity(self.cat.chains[chain].stages.len()),
-            cur_enqueued: 0,
-            cur_exec_start: 0,
-            cur_cold_wait: 0,
-            done: false,
-        });
-        // arrival-rate sampling for the predictor; an arrival delivered
-        // exactly at a window boundary (before the WindowClose event
-        // fires) still counts — clamp into the final bucket instead of
-        // silently dropping it from the predictor input.
-        let sec_in_window = ((self.now - self.window_start) / MICROS_PER_S) as usize;
-        let bucket = sec_in_window.min(self.window_counts.len() - 1);
-        self.window_counts[bucket] += 1;
-        self.enqueue_stage(job_id, self.now);
-    }
-
-    fn enqueue_stage(&mut self, job_id: u64, t: Micros) {
-        let (chain, stage_idx, arrival) = {
-            let j = &mut self.jobs[job_id as usize];
-            j.cur_enqueued = t;
-            j.cur_cold_wait = 0;
-            (j.chain, j.stage_idx, j.arrival)
-        };
-        let ms_id = self.cat.chains[chain].stages[stage_idx];
-        let key = lsf_key(&self.cat, chain, stage_idx, arrival);
-        self.seq += 1;
-        let entry = QueueEntry {
-            job_id,
-            lsf_key: key,
-            enqueued: t,
-            seq: self.seq,
-        };
-        self.queues.get_mut(&ms_id).unwrap().push(entry);
-
-        // event-driven per-request spawning is the policy's call (e.g.
-        // Bline/BPred spawn the uncovered deficit, §3)
-        let mut pol = self.policy.take().expect("policy present");
-        let n = pol.on_arrival(ms_id, &self.view(None));
-        self.policy = Some(pol);
-        for _ in 0..n {
-            if self.spawn_container(ms_id, true).is_none() {
-                break; // cluster full
-            }
-        }
-        self.try_dispatch(ms_id);
-    }
-
-    /// Move queued requests into warm container slots (greedy §4.4.1).
-    fn try_dispatch(&mut self, ms_id: MsId) {
-        let probe = self.decision_probe % 512 == 0;
-        let t0 = probe.then(std::time::Instant::now);
-        loop {
-            if self.queues[&ms_id].is_empty() {
-                break;
-            }
-            let Some(cid) = self.store.pick_container(ms_id) else {
-                break;
-            };
-            let entry = self.queues.get_mut(&ms_id).unwrap().pop().unwrap();
-            if self.store.dispatch(cid, entry.job_id, self.now) {
-                self.start_exec(cid);
-            }
-        }
-        self.decision_probe += 1;
-        if let Some(t0) = t0 {
-            self.recorder.decision_ns.push(t0.elapsed().as_nanos() as u64);
-        }
-    }
-
-    /// Begin executing the container's queued requests as ONE batched
-    /// inference pass (continuous batching: everything queued locally at
-    /// kick-off time runs together; exec(B) = exec(1)·(1 + γ·(B−1))).
-    fn start_exec(&mut self, cid: u64) {
-        let b = self.store.begin_batch(cid);
-        let base_ms = self.cat.microservices[b.ms_id].sample_exec_ms(&mut self.rng);
-        let gamma = self.p.cfg.rm.batch_cost_gamma;
-        let exec_ms = base_ms * (1.0 + gamma * (b.jobs.len() as f64 - 1.0));
-        let overhead = self.cold.warm_overhead();
-        let done_at = self.now + overhead + ms(exec_ms);
-        for &job_id in &b.jobs {
-            let j = &mut self.jobs[job_id as usize];
-            j.cur_exec_start = self.now;
-            // cold-start attribution: the job waited on this container's
-            // spawn if it was enqueued before the container came up.
-            j.cur_cold_wait = if b.started_cold && j.cur_enqueued < b.ready_at {
-                (self.now - j.cur_enqueued).min(b.spawn_latency)
-            } else {
-                0
-            };
-        }
-        self.push(done_at, Event::BatchDone { cid });
-    }
-
-    fn on_batch_done(&mut self, cid: u64) {
-        let (ms_id, batch_jobs) = self.store.finish_batch(cid, self.now);
-        self.recorder.container_executed(cid, batch_jobs.len() as u64);
-
-        // Kick off the next batch immediately: the container must be Busy
-        // again *before* job advancement below can trigger spawns (which
-        // may evict idle containers — including this one otherwise).
-        if !self
-            .store
-            .get(cid)
-            .expect("container alive after finish_batch")
-            .local
-            .is_empty()
-        {
-            self.start_exec(cid);
-        }
-
-        // finalize stage records and advance every job of the batch
-        for job_id in batch_jobs {
-            let advance = {
-                let j = &mut self.jobs[job_id as usize];
-                j.stages.push(StageRecord {
-                    ms_id,
-                    enqueued: j.cur_enqueued,
-                    exec_start: j.cur_exec_start,
-                    exec_end: self.now,
-                    cold_wait: j.cur_cold_wait,
-                });
-                j.stage_idx += 1;
-                if j.stage_idx >= self.cat.chains[j.chain].stages.len() {
-                    j.done = true;
-                    None
-                } else {
-                    Some(job_id)
-                }
-            };
-            match advance {
-                None => {
-                    let j = &mut self.jobs[job_id as usize];
-                    self.recorder.job(JobRecord {
-                        chain: j.chain,
-                        arrival: j.arrival,
-                        completion: self.now,
-                        stages: std::mem::take(&mut j.stages),
-                    });
-                }
-                Some(jid) => self.enqueue_stage(jid, self.now),
-            }
-        }
-
-        // refill from the global queue (cid itself may have been evicted
-        // by a capacity-pressure spawn during job advancement — fine, the
-        // dispatcher picks any warm container of this stage)
-        self.try_dispatch(ms_id);
-    }
-
-    fn on_spawn_done(&mut self, cid: u64) {
-        // None when the container was already reclaimed
-        if let Some(ms_id) = self.store.warm_up(cid, self.now) {
-            self.try_dispatch(ms_id);
-        }
-    }
-
-    fn on_window_close(&mut self) {
-        // max per-second arrival rate inside the window (paper §4.5)
-        let max_rate = self.window_counts.iter().copied().max().unwrap_or(0) as f64;
-        if let Some(p) = self.predictor.as_mut() {
-            p.observe(max_rate);
-        }
-        if self.recent_maxima.len() >= self.maxima_keep {
-            self.recent_maxima.pop_front();
-        }
-        self.recent_maxima.push_back(max_rate);
-        self.window_counts.iter_mut().for_each(|c| *c = 0);
-        self.window_start = self.now;
-        self.push(
-            self.now + secs(self.p.cfg.rm.sample_window_s),
-            Event::WindowClose,
-        );
-    }
-
-    /// Forecast for this monitor tick, sanity-clamped: a pre-trained
-    /// model queried far out of its training distribution must not
-    /// over-provision more than 2x the recently observed peak (§8
-    /// "Design Limitations"). `None` when the policy built no predictor.
-    fn clamped_forecast(&mut self) -> Option<f64> {
-        let recent_max = self
-            .recent_maxima
-            .iter()
-            .copied()
-            .fold(0.0f64, f64::max);
-        self.predictor
-            .as_mut()
-            .map(|p| p.forecast().min((2.0 * recent_max).max(1.0)))
-    }
-
-    fn on_monitor(&mut self) {
-        let forecast = self.clamped_forecast();
-        let mut pol = self.policy.take().expect("policy present");
-        let plan = pol.on_monitor(&self.view(forecast));
-        self.policy = Some(pol);
-        self.execute_plan(plan);
-    }
-
-    fn on_scan(&mut self) {
-        let mut pol = self.policy.take().expect("policy present");
-        let retire = pol.on_scan(&self.view(None));
-        self.policy = Some(pol);
-        for cid in retire {
-            if self.store.remove(cid).is_some() {
-                self.recorder.container_retired(cid, self.now);
-            }
-        }
-        self.settle_energy(self.now);
-        self.recorder
-            .energy_series
-            .push((self.now, self.energy.total_wh()));
-    }
-
-    fn settle_energy(&mut self, t: Micros) {
-        let loads = self.store.node_loads();
-        for (i, (busy, alloc)) in loads.into_iter().enumerate() {
-            self.energy.nodes[i].update(t, busy, alloc, &self.p.cfg.cluster);
-        }
-    }
-
-    fn spawn_container(&mut self, ms_id: MsId, cold: bool) -> Option<u64> {
-        // capacity guard: one stage may hold at most max_stage_fraction of
-        // the cluster's container slots (see RmConfig docs)
-        let cap = scaling::stage_cap(
-            self.p.cfg.cluster.max_containers(),
-            self.p.cfg.rm.max_stage_fraction,
-        );
-        if self.store.stage_containers(ms_id) >= cap {
-            return None;
-        }
-        let batch = self.plan.batch_for(ms_id);
-        let latency = if cold {
-            self.cold
-                .sample(&self.cat.microservices[ms_id], &mut self.rng)
-                .total()
-        } else {
-            0
-        };
-        let cid = match self.store.spawn(ms_id, batch, self.now, latency, cold) {
-            Some(cid) => cid,
-            None => {
-                // Cluster full. Rebalance by evicting the globally
-                // longest-idle container, but only when this stage is
-                // genuinely underwater — containerless (startup
-                // starvation), or its whole warm pool saturated with
-                // nothing starting — and only a victim that has been idle
-                // past a grace period (an over-provisioned pool member,
-                // not a hot-pool straggler). Otherwise fail: requests
-                // queue on the stage's warm pool, as on a full
-                // Kubernetes cluster (pods pend, running pods serve).
-                let starved = self.store.stage_containers(ms_id) == 0
-                    || (self.store.warm_free_slots(ms_id) == 0
-                        && self.store.starting_slots(ms_id) == 0);
-                if !starved {
-                    return None;
-                }
-                let grace = secs((self.p.cfg.rm.idle_timeout_s / 2.0).min(30.0));
-                let victim = self.store.lru_idle_since(self.now.saturating_sub(grace))?;
-                if self.store.get(victim).map(|c| c.ms_id) == Some(ms_id) {
-                    return None;
-                }
-                self.store.remove(victim);
-                self.recorder.container_retired(victim, self.now);
-                self.store.spawn(ms_id, batch, self.now, latency, cold)?
-            }
-        };
-        self.recorder.container_spawned(cid, ms_id, self.now, cold);
-        if latency > 0 {
-            self.push(self.now + latency, Event::SpawnDone { cid });
-        } else {
-            self.try_dispatch(ms_id);
-        }
-        Some(cid)
-    }
-
-    // ------------------------------------------------------------------
-    // invariant checks (used by property tests)
-    // ------------------------------------------------------------------
-
-    /// Total requests conserved: every arrival is queued, in-flight, or done.
-    pub fn check_conservation(&self) -> Result<(), String> {
-        let queued: usize = self.queues.values().map(|q| q.len()).sum();
-        let in_flight: usize = self.store.iter().map(|c| c.local.len()).sum();
-        let done = self.jobs.iter().filter(|j| j.done).count();
-        // jobs between stages are accounted at enqueue, so:
-        let total = self.jobs.len();
-        let accounted = queued + in_flight + done;
-        if accounted != total {
-            return Err(format!(
-                "conservation violated: queued {queued} + in-flight {in_flight} + done {done} != {total}"
-            ));
-        }
-        Ok(())
-    }
-
-    /// No node over capacity; all store indexes and aggregates consistent.
-    pub fn check_store(&self) -> Result<(), String> {
-        for n in &self.store.nodes {
-            if n.alloc_cores > n.total_cores + 1e-9 {
-                return Err(format!("node {} over capacity", n.id));
-            }
-        }
-        self.store.check_consistency()
+        // initial provisioning + periodic events, then drain the heap
+        self.bootstrap(horizon, end);
+        self.run_events(check_every)?;
+        let (recorder, _driver) = self.into_parts();
+        Ok(recorder)
     }
 }
 
@@ -643,6 +156,7 @@ pub fn run_sim_with(
 mod tests {
     use super::*;
     use crate::config::{Policy, SystemConfig};
+    use crate::coordinator::policy::PolicyView;
 
     fn params(policy: Policy, lambda: f64, dur: usize) -> SimParams {
         let cat = Catalog::paper();

@@ -1,0 +1,146 @@
+//! Sim-vs-live agreement: every registered policy runs through BOTH
+//! drivers of the shared `coordinator::engine` core — the virtual-time
+//! simulator and the real-time server (synthetic executor backend, so no
+//! artifacts/PJRT are needed) — on the same seed, cluster shape, and RM
+//! knobs, and the decision counts (container spawns, batched executions,
+//! completed jobs, reclamations) must agree within the live path's
+//! timing tolerance.
+//!
+//! This is the paper's §5.2 "simulator validated against the prototype"
+//! claim, restructured: after PR 4 the two paths share one decision
+//! core, so the only divergence left is physical timing (thread
+//! scheduling, real sleeps vs sampled latencies, generator jitter). The
+//! bounds below are deliberately loose — they catch structural drift
+//! (a driver that stops spawning, retiring, or batching), not noise.
+
+use fifer::config::{ClusterConfig, Policy, SystemConfig};
+use fifer::model::Catalog;
+use fifer::server::{serve, ServeParams};
+use fifer::sim::{run_sim, SimParams};
+use fifer::trace::Trace;
+
+/// Live container slots == sim cluster capacity (1 node x SLOTS).
+const SLOTS: usize = 16;
+const RATE: f64 = 10.0;
+const DURATION_S: usize = 12;
+const DRAIN_S: f64 = 15.0;
+
+fn config(policy: Policy) -> SystemConfig {
+    let mut cfg = SystemConfig::prototype(policy);
+    cfg.seed = 42;
+    cfg.cluster = ClusterConfig {
+        nodes: 1,
+        cores_per_node: SLOTS,
+        cpu_per_container: 1.0,
+        ..ClusterConfig::prototype()
+    };
+    // tight control loop so monitor-driven policies act inside the short
+    // horizon, and idle reclamation fires before the drain ends
+    cfg.rm.monitor_interval_s = 1.0;
+    cfg.rm.sample_window_s = 1.0;
+    cfg.rm.idle_timeout_s = 6.0;
+    cfg
+}
+
+/// |a - b| within a factor-4 band plus an absolute slack — loose enough
+/// for wall-clock jitter, tight enough to catch a driver that stopped
+/// making a class of decisions.
+fn close(a: u64, b: u64, slack: u64) -> bool {
+    a <= b * 4 + slack && b <= a * 4 + slack
+}
+
+fn differential(policy: Policy) {
+    let cat = Catalog::paper();
+    let chains = cat.mix("Heavy").unwrap().chains.clone();
+
+    let (sim_rec, sim_sum) = run_sim(SimParams {
+        cfg: config(policy),
+        chains: chains.clone(),
+        trace: Trace::poisson(RATE, DURATION_S),
+        drain_s: DRAIN_S,
+    });
+
+    let mut p = ServeParams::quick(RATE, DURATION_S as f64);
+    p.cfg = config(policy);
+    p.chains = chains;
+    p.executors = SLOTS;
+    p.drain_s = DRAIN_S;
+    p.synthetic = true;
+    let live = serve(p).expect("synthetic live run");
+
+    let tag = policy.name();
+    let (sj, lj) = (sim_sum.jobs, live.summary.jobs);
+    let (ss, ls) = (sim_sum.total_spawned, live.summary.total_spawned);
+    let (sb, lb) = (sim_rec.batches, live.recorder.batches);
+    let (sr, lr) = (sim_rec.reclaimed, live.recorder.reclaimed);
+
+    // every policy moves traffic in both worlds at this rate
+    assert!(lj > 0, "{tag}: live completed no jobs (sim {sj})");
+    assert!(ls > 0, "{tag}: live spawned no containers (sim {ss})");
+    assert!(lb > 0, "{tag}: live executed no batches (sim {sb})");
+
+    // decision counts agree within timing tolerance
+    assert!(
+        lj >= sj / 2 && lj <= sj * 2 + 5,
+        "{tag}: completed jobs diverge (sim {sj}, live {lj})"
+    );
+    assert!(close(ss, ls, 8), "{tag}: spawns diverge (sim {ss}, live {ls})");
+    assert!(close(sb, lb, 8), "{tag}: batches diverge (sim {sb}, live {lb})");
+
+    // reclamation: SBatch never scales in; for everyone else a clearly
+    // reclaiming sim implies a reclaiming live path
+    if policy == Policy::SBatch {
+        assert_eq!(sr, 0, "{tag}: sim reclaimed a fixed-pool container");
+        assert_eq!(lr, 0, "{tag}: live reclaimed a fixed-pool container");
+    } else {
+        assert!(lr <= ls, "{tag}: more reclaims than spawns");
+        if sr >= 3 {
+            assert!(lr > 0, "{tag}: sim reclaimed {sr}, live reclaimed none");
+        }
+    }
+}
+
+// One #[test] per policy so the wall-clock runs overlap under the
+// default parallel test runner.
+
+#[test]
+fn differential_bline() {
+    differential(Policy::Bline);
+}
+
+#[test]
+fn differential_sbatch() {
+    differential(Policy::SBatch);
+}
+
+#[test]
+fn differential_rscale() {
+    differential(Policy::RScale);
+}
+
+#[test]
+fn differential_bpred() {
+    differential(Policy::BPred);
+}
+
+#[test]
+fn differential_fifer() {
+    differential(Policy::Fifer);
+}
+
+#[test]
+fn differential_kn() {
+    differential(Policy::Kn);
+}
+
+#[test]
+fn differential_fifereq() {
+    differential(Policy::FiferEq);
+}
+
+#[test]
+fn registry_is_fully_covered() {
+    // fail loudly when a policy is registered without a differential
+    // smoke above
+    assert_eq!(Policy::ALL.len(), 7, "add a differential_<name> test");
+}

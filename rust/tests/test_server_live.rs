@@ -1,10 +1,14 @@
 //! Integration: the live serving path end to end (real PJRT inference).
-//! Requires `make artifacts`; no-ops gracefully without them.
+//! Requires `make artifacts` plus a real `xla` binding; no-ops
+//! gracefully without them. (The driver machinery itself is exercised
+//! everywhere via the synthetic backend — see
+//! `test_driver_differential.rs`.)
 //!
-//! The live path is driven by the same `SchedulerPolicy` trait objects
-//! as the simulator — batching comes from the policy, so the smoke
-//! tests below swap policies (including the post-paper `Kn`/`FiferEq`)
-//! purely through config.
+//! The live path is the real-time driver over the same
+//! `coordinator::engine` core as the simulator: container executor
+//! threads are spawned, batched onto, and retired by the registered
+//! `SchedulerPolicy` — the smoke tests below swap policies (including
+//! the post-paper `Kn`/`FiferEq`) purely through config.
 
 use fifer::config::{Policy, RmConfig};
 use fifer::server::{serve, ServeParams};
@@ -16,7 +20,10 @@ fn have_artifacts() -> bool {
 fn quick_with_policy(policy: Policy, rate: f64, duration_s: f64) -> ServeParams {
     let mut p = ServeParams::quick(rate, duration_s);
     p.cfg.rm = RmConfig::paper(policy);
-    p.executors = 1;
+    // tight control loop so monitor-driven scaling acts inside short runs
+    p.cfg.rm.monitor_interval_s = 1.0;
+    p.cfg.rm.sample_window_s = 1.0;
+    p.executors = 8;
     p
 }
 
@@ -27,15 +34,15 @@ fn live_serve_completes_jobs_within_slo() {
     }
     let p = quick_with_policy(Policy::Fifer, 8.0, 4.0);
     let r = serve(p).unwrap();
-    assert!(r.jobs > 5, "only {} jobs", r.jobs);
-    assert!(r.median_ms > 0.0 && r.median_ms.is_finite());
-    assert!(r.batches >= r.jobs / 32, "batch accounting broken");
+    assert!(r.summary.jobs > 5, "only {} jobs", r.summary.jobs);
+    assert!(r.summary.median_ms > 0.0 && r.summary.median_ms.is_finite());
+    assert!(r.batches >= r.summary.jobs / 32, "batch accounting broken");
     // the warm path should comfortably meet the paper's 1000 ms SLO on
     // these small models; allow cold-compile stragglers at the start
     assert!(
-        r.slo_violation_pct < 60.0,
+        r.summary.slo_violation_pct < 60.0,
         "violations {:.1}%",
-        r.slo_violation_pct
+        r.summary.slo_violation_pct
     );
 }
 
@@ -48,8 +55,8 @@ fn live_serve_batching_reduces_model_invocations() {
     // Bline is the non-batching baseline: batch = 1 at every stage
     let ru = serve(quick_with_policy(Policy::Bline, 25.0, 4.0)).unwrap();
     // with batching, strictly fewer PJRT calls per completed job
-    let per_job_b = rb.batches as f64 / rb.jobs.max(1) as f64;
-    let per_job_u = ru.batches as f64 / ru.jobs.max(1) as f64;
+    let per_job_b = rb.batches as f64 / rb.summary.jobs.max(1) as f64;
+    let per_job_u = ru.batches as f64 / ru.summary.jobs.max(1) as f64;
     assert!(
         per_job_b < per_job_u,
         "batched {per_job_b:.2} vs unbatched {per_job_u:.2} calls/job"
@@ -61,14 +68,19 @@ fn live_serve_batching_reduces_model_invocations() {
 fn live_serve_runs_every_registered_policy() {
     // `--policy kn` / `--policy fifereq` end-to-end: every registry
     // entry — present and future — must drive the live coordinator
-    // without engine edits
+    // (including container scaling) without engine edits
     if !have_artifacts() {
         return;
     }
     for policy in Policy::ALL {
         let r = serve(quick_with_policy(policy, 10.0, 2.0)).unwrap();
-        assert!(r.jobs > 0, "{}: no jobs served", policy.name());
+        assert!(r.summary.jobs > 0, "{}: no jobs served", policy.name());
         assert!(r.batches > 0, "{}: no batches", policy.name());
+        assert!(
+            r.summary.total_spawned > 0,
+            "{}: no containers spawned",
+            policy.name()
+        );
         // every realized batch holds at least one request
         assert!(r.avg_batch >= 1.0, "{}", policy.name());
     }
