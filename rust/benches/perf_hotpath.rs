@@ -12,6 +12,15 @@
 //! the same store (the pre-index implementation), asserting both agree
 //! on every answer before trusting the speedup. Set `FIFER_BENCH_QUICK=1`
 //! (CI smoke) to trim the sweep and the end-to-end simulation.
+//!
+//! With `--features bench-alloc` a counting global allocator is
+//! installed and the **zero-allocation dispatch pin** is asserted: a
+//! steady-state dispatch cycle (enqueue → pick_container → pop →
+//! dispatch → begin_batch → finish_batch with a warm container
+//! available and no spawn) must perform 0 heap allocations, and
+//! end-to-end `jobs_per_s` must stay within the pinned fraction of the
+//! committed baseline (`benches/perf_baseline.json`). A violation
+//! panics, failing the CI perf job.
 
 use fifer::bench::{bench, section, Table, Timing};
 use fifer::config::Policy;
@@ -21,6 +30,31 @@ use fifer::experiments::{run_policy, TraceKind};
 use fifer::predictor::{nn::LstmPredictor, Predictor};
 use fifer::util::json::Json;
 use fifer::util::stats;
+
+/// The allocation counter behind the zero-alloc pin (see module docs).
+#[cfg(feature = "bench-alloc")]
+#[global_allocator]
+static ALLOC: fifer::bench::alloc_count::CountingAlloc =
+    fifer::bench::alloc_count::CountingAlloc;
+
+/// Zero the allocation counter (no-op without `bench-alloc`).
+fn alloc_reset() {
+    #[cfg(feature = "bench-alloc")]
+    fifer::bench::alloc_count::reset();
+}
+
+/// Heap allocations since the last [`alloc_reset`]; None without the
+/// `bench-alloc` feature (nothing is counted).
+fn alloc_count() -> Option<u64> {
+    #[cfg(feature = "bench-alloc")]
+    {
+        Some(fifer::bench::alloc_count::allocs())
+    }
+    #[cfg(not(feature = "bench-alloc"))]
+    {
+        None
+    }
+}
 
 /// The scan-based container pick the indexed store replaced — kept here
 /// as the yardstick (and correctness oracle) for the sweep.
@@ -77,6 +111,40 @@ fn build_pool(nodes: usize, cores: usize, pool: usize) -> StateStore {
         }
     }
     store
+}
+
+/// One steady-state dispatch cycle over the pinned fixture: enqueue →
+/// pick_container → pop → dispatch → begin_batch → finish_batch, with a
+/// warm container always available (no spawn, no eviction). The fixture
+/// is shaped so every B-tree on the path stays at 2..=11 elements — a
+/// single root node, where remove+insert never splits, merges, or frees
+/// — and every Vec/VecDeque runs at settled capacity, so the cycle is
+/// heap-silent. That is the property the `bench-alloc` pin asserts.
+fn dispatch_cycle(
+    store: &mut StateStore,
+    q: &mut StageQueue,
+    seq: &mut u64,
+    now: &mut u64,
+    batch_buf: &mut Vec<u64>,
+    done_buf: &mut Vec<u64>,
+) {
+    *seq += 1;
+    *now += 1;
+    q.push(QueueEntry {
+        job_id: *seq,
+        lsf_key: *seq,
+        enqueued: *now,
+        seq: *seq,
+    });
+    let cid = store.pick_container(0).expect("warm container available");
+    let entry = q.pop().expect("standing backlog");
+    let was_idle = store.dispatch(cid, entry.job_id, *now);
+    assert!(was_idle, "fixture containers are idle between cycles");
+    let b = store.begin_batch(cid, batch_buf);
+    std::hint::black_box(b.len);
+    *now += 1;
+    let ms = store.finish_batch(cid, *now, done_buf);
+    std::hint::black_box(ms);
 }
 
 fn case_json(name: &str, pool: usize, t: &Timing) -> Json {
@@ -282,15 +350,87 @@ fn main() {
         );
     }
 
+    // ------------------------------------------------------------------
+    // Zero-alloc steady-state dispatch pin (+ cycle latency).
+    // ------------------------------------------------------------------
+    section(
+        "Perf",
+        "steady-state dispatch cycle (warm container available, no spawn)",
+    );
+    // committed regression pin: alloc budget + jobs/s baselines
+    let baseline_path =
+        std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/benches/perf_baseline.json"));
+    let baseline = Json::parse_file(baseline_path)
+        .unwrap_or_else(|e| panic!("perf_baseline.json unreadable: {e}"));
+    let alloc_budget = baseline
+        .opt("allocs_per_dispatch_budget")
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+
+    // fixture: one stage, 4 warm containers (batch 4) on two roomy
+    // nodes, an LSF queue with a standing backlog of 4 — see
+    // `dispatch_cycle` for why this shape guarantees zero heap traffic
+    let mut dstore = StateStore::new(2, 16, 1.0);
+    for _ in 0..4 {
+        dstore.spawn(0, 4, 0, 0, false).expect("fixture fits");
+    }
+    let mut dq = StageQueue::new(QOrder::LeastSlackFirst);
+    let mut seq = 0u64;
+    let mut now = 0u64;
+    for _ in 0..4 {
+        seq += 1;
+        now += 1;
+        dq.push(QueueEntry {
+            job_id: seq,
+            lsf_key: seq,
+            enqueued: now,
+            seq,
+        });
+    }
+    let mut batch_buf: Vec<u64> = Vec::with_capacity(8);
+    let mut done_buf: Vec<u64> = Vec::with_capacity(8);
+    // settle every capacity (heap, queue mirror, scratch) before counting
+    for _ in 0..1_000 {
+        dispatch_cycle(&mut dstore, &mut dq, &mut seq, &mut now, &mut batch_buf, &mut done_buf);
+    }
+    const CYCLES: u64 = 100_000;
+    alloc_reset();
+    let t0 = std::time::Instant::now();
+    for _ in 0..CYCLES {
+        dispatch_cycle(&mut dstore, &mut dq, &mut seq, &mut now, &mut batch_buf, &mut done_buf);
+    }
+    let dispatch_cycle_ns = t0.elapsed().as_nanos() as f64 / CYCLES as f64;
+    let allocs_per_dispatch = alloc_count().map(|n| n as f64 / CYCLES as f64);
+    dstore.check_consistency().expect("fixture store consistent");
+    println!(
+        "dispatch cycle: {dispatch_cycle_ns:.0} ns, allocs/dispatch: {} (budget {alloc_budget})",
+        match allocs_per_dispatch {
+            Some(a) => format!("{a:.4}"),
+            None => "not counted (run with --features bench-alloc)".to_string(),
+        }
+    );
+    if let Some(a) = allocs_per_dispatch {
+        assert!(
+            a <= alloc_budget,
+            "zero-alloc dispatch pin violated: {a:.4} allocs/dispatch > budget {alloc_budget}"
+        );
+        println!("acceptance: allocs/dispatch {a:.4} <= {alloc_budget} -> PASS");
+    }
+
     // whole-sim throughput + sampled dispatch decision latency (§6.1.5)
     let dur = if quick { 60 } else { 600 };
     section(
         "Perf",
         &format!("end-to-end simulator throughput (heavy mix, λ=50, {dur} s)"),
     );
+    alloc_reset();
     let t0 = std::time::Instant::now();
     let run = run_policy(Policy::Fifer, "Heavy", TraceKind::Poisson, dur, true, 42);
     let wall = t0.elapsed().as_secs_f64();
+    // informational only (the metrics log inherently retains per-job
+    // records, so end-to-end cannot be literally zero-alloc)
+    let allocs_per_job_e2e = alloc_count().map(|n| n as f64 / (run.summary.jobs as f64).max(1.0));
+    let jobs_per_s = run.summary.jobs as f64 / wall.max(1e-9);
     let stage_events: u64 = run.summary.jobs * 4; // ≈2 events per stage visit
     println!(
         "sim {dur} s ({} jobs) in {:.2} s wall -> {:.0} jobs/s, ~{:.2} M events/s",
@@ -299,6 +439,35 @@ fn main() {
         run.summary.jobs as f64 / wall,
         stage_events as f64 / wall / 1e6
     );
+    if let Some(a) = allocs_per_job_e2e {
+        println!("end-to-end allocations: {a:.1} allocs/job (informational)");
+    }
+    // throughput regression pin vs the committed baseline (quick and
+    // full modes are pinned separately — they are different workloads)
+    let base_key = if quick { "jobs_per_s_quick" } else { "jobs_per_s_full" };
+    let jobs_per_s_baseline = baseline.opt(base_key).and_then(|v| v.as_f64().ok());
+    let min_fraction = baseline
+        .opt("jobs_per_s_min_fraction")
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.8);
+    match jobs_per_s_baseline {
+        Some(base) => {
+            assert!(
+                jobs_per_s >= min_fraction * base,
+                "throughput regression: {jobs_per_s:.0} jobs/s < {:.0} \
+                 ({min_fraction} x baseline {base:.0})",
+                min_fraction * base
+            );
+            println!(
+                "acceptance: jobs/s {jobs_per_s:.0} >= {:.0} ({min_fraction} x baseline) -> PASS",
+                min_fraction * base
+            );
+        }
+        None => println!(
+            "no {base_key} baseline recorded yet -> throughput pin skipped \
+             (record the first measured run in benches/perf_baseline.json)"
+        ),
+    }
     let dn: Vec<f64> = run.recorder.decision_ns.iter().map(|&n| n as f64).collect();
     if !dn.is_empty() {
         println!(
@@ -312,7 +481,15 @@ fn main() {
         ("duration_s", Json::Num(dur as f64)),
         ("jobs", Json::Num(run.summary.jobs as f64)),
         ("wall_s", Json::Num(wall)),
-        ("jobs_per_s", Json::Num(run.summary.jobs as f64 / wall.max(1e-9))),
+        ("jobs_per_s", Json::Num(jobs_per_s)),
+        (
+            "jobs_per_s_baseline",
+            jobs_per_s_baseline.map_or(Json::Null, Json::Num),
+        ),
+        (
+            "allocs_per_job_e2e",
+            allocs_per_job_e2e.map_or(Json::Null, Json::Num),
+        ),
         (
             "decision_p99_us",
             Json::Num(if dn.is_empty() {
@@ -337,6 +514,12 @@ fn main() {
                 None => Json::Null,
             },
         ),
+        ("alloc_counting", Json::Bool(cfg!(feature = "bench-alloc"))),
+        (
+            "allocs_per_dispatch",
+            allocs_per_dispatch.map_or(Json::Null, Json::Num),
+        ),
+        ("dispatch_cycle_ns", Json::Num(dispatch_cycle_ns)),
         ("sim", sim_json),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");

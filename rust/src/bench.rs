@@ -125,6 +125,74 @@ pub fn section(fig: &str, caption: &str) {
     println!("\n=== {fig} — {caption} ===");
 }
 
+/// Heap-allocation counting for the zero-alloc dispatch pin (compiled
+/// only with `--features bench-alloc`).
+///
+/// [`CountingAlloc`] wraps the system allocator and counts every
+/// `alloc`/`realloc` (frees are counted separately). Register it as the
+/// `#[global_allocator]` in a bench target, then bracket the measured
+/// region with [`alloc_count::reset`] / [`alloc_count::allocs`]:
+///
+/// ```ignore
+/// #[cfg(feature = "bench-alloc")]
+/// #[global_allocator]
+/// static ALLOC: fifer::bench::alloc_count::CountingAlloc =
+///     fifer::bench::alloc_count::CountingAlloc;
+///
+/// fifer::bench::alloc_count::reset();
+/// hot_path();
+/// let n = fifer::bench::alloc_count::allocs();
+/// ```
+///
+/// Counters are relaxed atomics: exact under single-threaded measurement
+/// (the bench loop), merely approximate if other threads allocate.
+#[cfg(feature = "bench-alloc")]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static FREES: AtomicU64 = AtomicU64::new(0);
+
+    /// A [`System`]-backed global allocator that counts calls.
+    pub struct CountingAlloc;
+
+    // SAFETY: defers every operation to `System`; the counters do not
+    // affect allocation behavior.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            FREES.fetch_add(1, Ordering::Relaxed);
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    /// Zero both counters (start of a measured region).
+    pub fn reset() {
+        ALLOCS.store(0, Ordering::Relaxed);
+        FREES.store(0, Ordering::Relaxed);
+    }
+
+    /// Heap allocations (alloc + realloc) since the last [`reset`].
+    pub fn allocs() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Deallocations since the last [`reset`].
+    pub fn frees() -> u64 {
+        FREES.load(Ordering::Relaxed)
+    }
+}
+
 /// Format a normalized value as the paper plots it ("x.xx" of baseline).
 pub fn norm(v: f64, base: f64) -> String {
     if base == 0.0 {

@@ -48,7 +48,7 @@
 //! (`crate::metrics::Summary`).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coldstart::ColdStartModel;
 use crate::config::SystemConfig;
@@ -129,7 +129,7 @@ impl EffectCtx<'_> {
     pub fn sample_batch_exec(&mut self, b: &BatchStart) -> Micros {
         let base_ms = self.cat.microservices[b.ms_id].sample_exec_ms(self.rng);
         let gamma = self.cfg.rm.batch_cost_gamma;
-        let exec_ms = base_ms * (1.0 + gamma * (b.jobs.len() as f64 - 1.0));
+        let exec_ms = base_ms * (1.0 + gamma * (b.len as f64 - 1.0));
         self.coldstart.warm_overhead() + ms(exec_ms)
     }
 }
@@ -200,7 +200,10 @@ pub struct EngineCore<D: Driver> {
     pub(crate) cfg: SystemConfig,
     pub(crate) chains: Vec<ChainId>,
     pub(crate) plan: SlackPlan,
-    pub(crate) queues: HashMap<MsId, StageQueue>,
+    /// Dense per-stage queue table indexed by `MsId` (stage ids are small
+    /// integers from `Catalog::ms_id`, so a Vec beats a hash map on the
+    /// dispatch path). Stages outside the workload mix hold empty queues.
+    pub(crate) queues: Vec<StageQueue>,
     pub(crate) store: StateStore,
     pub(crate) cold: ColdStartModel,
     /// The scheduler policy. Held in an Option so hooks can borrow the
@@ -233,6 +236,13 @@ pub struct EngineCore<D: Driver> {
     /// Opt-in host-time sampling of dispatch decisions (§6.1.5).
     probe_decisions: bool,
     decision_probe: u64,
+    /// Reusable batch-capture buffer for `start_exec` (taken/restored
+    /// around each kickoff, so steady-state batching never allocates).
+    scratch_batch: Vec<u64>,
+    /// Reusable drained-jobs buffer for `handle_batch_done`. Separate
+    /// from `scratch_batch`: job advancement inside the completion loop
+    /// can recursively kick off new batches.
+    scratch_done: Vec<u64>,
     pub(crate) driver: D,
 }
 
@@ -259,10 +269,8 @@ impl<D: Driver> EngineCore<D> {
                 }
             }
         }
-        let queues = stages
-            .iter()
-            .map(|&s| (s, StageQueue::new(order)))
-            .collect();
+        let nstages = stages.iter().copied().max().map_or(0, |m| m + 1);
+        let queues: Vec<StageQueue> = (0..nstages).map(|_| StageQueue::new(order)).collect();
         let store = StateStore::new(
             cfg.cluster.nodes,
             cfg.cluster.cores_per_node,
@@ -286,7 +294,7 @@ impl<D: Driver> EngineCore<D> {
             policy: Some(pol),
             predictor,
             rng,
-            events: BinaryHeap::new(),
+            events: BinaryHeap::with_capacity(64),
             seq: 0,
             now: 0,
             jobs: Vec::new(),
@@ -303,8 +311,18 @@ impl<D: Driver> EngineCore<D> {
             end: Micros::MAX,
             probe_decisions: std::env::var_os("FIFER_DECISION_PROBE").is_some(),
             decision_probe: 0,
+            scratch_batch: Vec::with_capacity(16),
+            scratch_done: Vec::with_capacity(16),
             driver,
         }
+    }
+
+    /// Pre-size the event heap and job table for a known workload (the
+    /// simulator calls this with the trace's arrival count, so the heap
+    /// and job storage never grow during the run).
+    pub fn reserve_workload(&mut self, arrivals: usize) {
+        self.events.reserve(arrivals);
+        self.jobs.reserve(arrivals);
     }
 
     pub fn catalog(&self) -> &Catalog {
@@ -494,9 +512,9 @@ impl<D: Driver> EngineCore<D> {
     /// only), settle energy, stamp the horizon. Returns the recorder and
     /// the driver (so real-time drivers can join their executors).
     pub fn into_parts(mut self) -> (Recorder, D) {
-        let cids: Vec<u64> = self.store.container_ids();
-        for cid in cids {
-            self.recorder.container_retired(cid, self.now.min(self.end));
+        let retire_t = self.now.min(self.end);
+        for c in self.store.iter() {
+            self.recorder.container_retired(c.id, retire_t);
         }
         self.settle_energy(self.end.min(self.now.max(self.horizon)));
         self.recorder.horizon = self.horizon;
@@ -546,7 +564,7 @@ impl<D: Driver> EngineCore<D> {
             enqueued: t,
             seq: self.seq,
         };
-        self.queues.get_mut(&ms_id).unwrap().push(entry);
+        self.queues[ms_id].push(entry);
 
         // event-driven per-request spawning is the policy's call (e.g.
         // Bline/BPred spawn the uncovered deficit, §3)
@@ -566,13 +584,13 @@ impl<D: Driver> EngineCore<D> {
         let probe = self.probe_decisions && self.decision_probe % 512 == 0;
         let t0 = probe.then(std::time::Instant::now);
         loop {
-            if self.queues[&ms_id].is_empty() {
+            if self.queues[ms_id].is_empty() {
                 break;
             }
             let Some(cid) = self.store.pick_container(ms_id) else {
                 break;
             };
-            let entry = self.queues.get_mut(&ms_id).unwrap().pop().unwrap();
+            let entry = self.queues[ms_id].pop().unwrap();
             if self.store.dispatch(cid, entry.job_id, self.now) {
                 self.start_exec(cid);
             }
@@ -589,7 +607,10 @@ impl<D: Driver> EngineCore<D> {
     /// the virtual driver samples exec(B) = exec(1)·(1 + γ·(B−1)), the
     /// real-time driver hands the batch to the container's executor.
     fn start_exec(&mut self, cid: u64) {
-        let b = self.store.begin_batch(cid);
+        // reusable capture buffer: taken out so the store can fill it
+        // while the driver borrows the rest of the engine, restored below
+        let mut batch = std::mem::take(&mut self.scratch_batch);
+        let b = self.store.begin_batch(cid, &mut batch);
         let dur = self.driver.exec_batch(
             cid,
             &b,
@@ -601,7 +622,7 @@ impl<D: Driver> EngineCore<D> {
                 rng: &mut self.rng,
             },
         );
-        for &job_id in &b.jobs {
+        for &job_id in &batch {
             let j = &mut self.jobs[job_id as usize];
             j.cur_exec_start = self.now;
             // cold-start attribution: the job waited on this container's
@@ -612,13 +633,17 @@ impl<D: Driver> EngineCore<D> {
                 0
             };
         }
+        self.scratch_batch = batch;
         if let Some(d) = dur {
             self.push(self.now + d, Event::BatchDone { cid });
         }
     }
 
     fn handle_batch_done(&mut self, cid: u64) {
-        let (ms_id, batch_jobs) = self.store.finish_batch(cid, self.now);
+        // reusable drained-jobs buffer (distinct from `scratch_batch`:
+        // the advancement loop below can nest a `start_exec`)
+        let mut batch_jobs = std::mem::take(&mut self.scratch_done);
+        let ms_id = self.store.finish_batch(cid, self.now, &mut batch_jobs);
         self.recorder.container_executed(cid, batch_jobs.len() as u64);
 
         // Kick off the next batch immediately: the container must be Busy
@@ -635,7 +660,7 @@ impl<D: Driver> EngineCore<D> {
         }
 
         // finalize stage records and advance every job of the batch
-        for job_id in batch_jobs {
+        for &job_id in &batch_jobs {
             let advance = {
                 let j = &mut self.jobs[job_id as usize];
                 j.stages.push(StageRecord {
@@ -667,6 +692,7 @@ impl<D: Driver> EngineCore<D> {
                 Some(jid) => self.enqueue_stage(jid, self.now),
             }
         }
+        self.scratch_done = batch_jobs;
 
         // refill from the global queue (cid itself may have been evicted
         // by a capacity-pressure spawn during job advancement — fine, the
@@ -746,8 +772,8 @@ impl<D: Driver> EngineCore<D> {
     }
 
     fn settle_energy(&mut self, t: Micros) {
-        let loads = self.store.node_loads();
-        for (i, (busy, alloc)) in loads.into_iter().enumerate() {
+        for i in 0..self.energy.nodes.len() {
+            let (busy, alloc) = self.store.node_load(i);
             self.energy.nodes[i].update(t, busy, alloc, &self.cfg.cluster);
         }
     }
@@ -833,7 +859,7 @@ impl<D: Driver> EngineCore<D> {
 
     /// Total requests conserved: every arrival is queued, in-flight, or done.
     pub fn check_conservation(&self) -> Result<(), String> {
-        let queued: usize = self.queues.values().map(|q| q.len()).sum();
+        let queued: usize = self.queues.iter().map(|q| q.len()).sum();
         let in_flight: usize = self.store.iter().map(|c| c.local.len()).sum();
         let done = self.jobs.iter().filter(|j| j.done).count();
         // jobs between stages are accounted at enqueue, so:

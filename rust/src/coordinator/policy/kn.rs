@@ -24,9 +24,7 @@
 //! spawns — so Kn also exercises the conformance requirement that a
 //! policy with no per-request spawning still drains via monitor scaling.
 
-use std::collections::{HashMap, VecDeque};
-
-use crate::model::MsId;
+use std::collections::VecDeque;
 
 use super::{PolicyView, ScalingPlan, SchedulerPolicy};
 
@@ -40,7 +38,8 @@ pub struct Kn {
     stable_ticks: usize,
     panic_threshold: f64,
     /// Per-stage trailing observed-concurrency samples, one per tick.
-    history: HashMap<MsId, VecDeque<f64>>,
+    /// Dense table indexed by `MsId`, matching the engine's stage tables.
+    history: Vec<VecDeque<f64>>,
 }
 
 impl Kn {
@@ -48,7 +47,7 @@ impl Kn {
         Kn {
             stable_ticks: STABLE_TICKS,
             panic_threshold: PANIC_THRESHOLD,
-            history: HashMap::new(),
+            history: Vec::new(),
         }
     }
 }
@@ -76,7 +75,10 @@ impl SchedulerPolicy for Kn {
             let target = view.batch(ms_id).max(1) as f64;
             let observed = (view.pending(ms_id) + view.in_flight_slots(ms_id)) as f64;
 
-            let h = self.history.entry(ms_id).or_default();
+            if self.history.len() <= ms_id {
+                self.history.resize_with(ms_id + 1, VecDeque::new);
+            }
+            let h = &mut self.history[ms_id];
             h.push_back(observed);
             if h.len() > self.stable_ticks {
                 h.pop_front();

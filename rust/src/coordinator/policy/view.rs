@@ -1,7 +1,5 @@
 //! Read-only coordinator snapshot handed to every policy hook.
 
-use std::collections::HashMap;
-
 use crate::coldstart::ColdStartModel;
 use crate::config::SystemConfig;
 use crate::coordinator::queue::StageQueue;
@@ -24,7 +22,9 @@ pub struct PolicyView<'a> {
     /// Stages of the mix, in first-seen chain order (the engine's
     /// canonical iteration order — iterate this for determinism).
     pub stages: &'a [MsId],
-    pub queues: &'a HashMap<MsId, StageQueue>,
+    /// Dense per-stage queue table indexed by `MsId` (stages outside the
+    /// workload mix hold empty queues).
+    pub queues: &'a [StageQueue],
     pub store: &'a StateStore,
     pub cold: &'a ColdStartModel,
     /// Engine time: virtual µs in the simulator, monotonic µs live.
@@ -42,7 +42,7 @@ pub struct PolicyView<'a> {
 impl PolicyView<'_> {
     /// Requests waiting in the stage's global queue.
     pub fn pending(&self, ms_id: MsId) -> usize {
-        self.queues.get(&ms_id).map(|q| q.len()).unwrap_or(0)
+        self.queues.get(ms_id).map(|q| q.len()).unwrap_or(0)
     }
 
     /// Live containers of the stage (warm + starting).
@@ -92,8 +92,9 @@ impl PolicyView<'_> {
     }
 
     /// Idle containers of the stage unused since before `cutoff`,
-    /// oldest first.
-    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> Vec<u64> {
+    /// oldest first. Lazily yielded — `extend` a reclaim list with it,
+    /// or `collect` when a Vec is genuinely needed.
+    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> impl Iterator<Item = u64> + '_ {
         self.store.idle_since(ms_id, cutoff)
     }
 

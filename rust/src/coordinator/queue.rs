@@ -67,6 +67,7 @@ impl StageQueue {
         }
     }
 
+    #[inline]
     pub fn push(&mut self, e: QueueEntry) {
         self.pushed += 1;
         match self.order {
@@ -85,6 +86,7 @@ impl StageQueue {
         }
     }
 
+    #[inline]
     pub fn pop(&mut self) -> Option<QueueEntry> {
         let e = match self.order {
             Ordering::Fifo => self.fifo.pop_front(),
@@ -109,6 +111,7 @@ impl StageQueue {
         e
     }
 
+    #[inline]
     pub fn len(&self) -> usize {
         match self.order {
             Ordering::Fifo => self.fifo.len(),
@@ -116,6 +119,7 @@ impl StageQueue {
         }
     }
 
+    #[inline]
     pub fn is_empty(&self) -> bool {
         match self.order {
             Ordering::Fifo => self.fifo.is_empty(),
@@ -133,6 +137,7 @@ impl StageQueue {
     }
 
     /// Conservation counters: (pushed, popped). pushed - popped == len.
+    #[inline]
     pub fn counters(&self) -> (u64, u64) {
         (self.pushed, self.popped)
     }
@@ -218,6 +223,67 @@ mod tests {
             waiting.swap_remove(pos);
         }
         assert_eq!(q.oldest_enqueued(), None);
+    }
+
+    #[test]
+    fn fifo_interleaved_equal_keys_keeps_arrival_order() {
+        // FIFO ignores the LSF key entirely: pops under interleaved
+        // push/pop at one shared key must come out in push order, and the
+        // conservation counters must balance at every step
+        let mut q = StageQueue::new(Ordering::Fifo);
+        q.push(e(1, 100, 0));
+        q.push(e(2, 100, 1));
+        assert_eq!(q.pop().unwrap().job_id, 1);
+        q.push(e(3, 100, 2));
+        q.push(e(4, 100, 3));
+        assert_eq!(q.pop().unwrap().job_id, 2);
+        assert_eq!(q.pop().unwrap().job_id, 3);
+        q.push(e(5, 100, 4));
+        assert_eq!(q.pop().unwrap().job_id, 4);
+        assert_eq!(q.pop().unwrap().job_id, 5);
+        let (pushed, popped) = q.counters();
+        assert_eq!((pushed, popped), (5, 5));
+        assert_eq!(pushed - popped, q.len() as u64);
+        assert!(q.pop().is_none());
+        assert_eq!(q.counters(), (5, 5), "empty pop must not count");
+    }
+
+    #[test]
+    fn lsf_interleaved_equal_keys_tie_break_by_seq() {
+        // all entries share one lsf key; pops interleaved with pushes
+        // must always yield the lowest outstanding seq (heap stability is
+        // guaranteed by the (key, seq) tuple, not the heap itself)
+        let mut q = StageQueue::new(Ordering::LeastSlackFirst);
+        q.push(e(10, 100, 5));
+        q.push(e(11, 100, 2));
+        assert_eq!(q.pop().unwrap().job_id, 11); // seq 2 < 5
+        q.push(e(12, 100, 1));
+        q.push(e(13, 100, 9));
+        assert_eq!(q.pop().unwrap().job_id, 12); // seq 1
+        assert_eq!(q.pop().unwrap().job_id, 10); // seq 5
+        q.push(e(14, 100, 7));
+        assert_eq!(q.pop().unwrap().job_id, 14); // seq 7 < 9
+        assert_eq!(q.pop().unwrap().job_id, 13);
+        let (pushed, popped) = q.counters();
+        assert_eq!((pushed, popped), (5, 5));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn counters_balance_under_interleaving() {
+        // pushed - popped == len holds at every point of a mixed
+        // push/pop sequence, for both orderings
+        for order in [Ordering::Fifo, Ordering::LeastSlackFirst] {
+            let mut q = StageQueue::new(order);
+            for i in 0..30u64 {
+                q.push(e(i, 100, i)); // equal keys: worst case for LSF
+                if i % 3 == 0 {
+                    q.pop();
+                }
+                let (pushed, popped) = q.counters();
+                assert_eq!(pushed - popped, q.len() as u64, "{order:?} at {i}");
+            }
+        }
     }
 
     #[test]

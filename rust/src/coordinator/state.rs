@@ -103,14 +103,17 @@ pub struct Container {
 
 impl Container {
     /// Jobs currently owned by this container (executing + queued).
+    #[inline]
     pub fn in_flight(&self) -> usize {
         self.local.len()
     }
 
+    #[inline]
     pub fn free_slots(&self) -> usize {
         self.batch_size.saturating_sub(self.in_flight())
     }
 
+    #[inline]
     pub fn is_warm(&self) -> bool {
         matches!(self.state, CState::Idle | CState::Busy)
     }
@@ -128,16 +131,21 @@ pub struct Node {
 }
 
 impl Node {
+    #[inline]
     pub fn free_cores(&self) -> f64 {
         self.total_cores - self.alloc_cores
     }
 }
 
-/// Batch kickoff info returned by [`StateStore::begin_batch`].
-#[derive(Debug, Clone)]
+/// Batch kickoff info returned by [`StateStore::begin_batch`]. The
+/// captured job ids land in the caller-provided scratch buffer (the
+/// engine reuses one across every batch), so kicking off a batch
+/// performs no heap allocation.
+#[derive(Debug, Clone, Copy)]
 pub struct BatchStart {
-    /// Job ids captured into this batch (everything queued locally).
-    pub jobs: Vec<u64>,
+    /// Number of jobs captured into this batch (everything queued
+    /// locally at kickoff).
+    pub len: usize,
     pub ms_id: MsId,
     pub ready_at: Micros,
     pub spawn_latency: Micros,
@@ -396,7 +404,9 @@ impl StateStore {
                 ms_id,
                 node,
                 batch_size: batch_size.max(1),
-                local: VecDeque::new(),
+                // full local-queue capacity up front: dispatch into this
+                // container never reallocates
+                local: VecDeque::with_capacity(batch_size.max(1)),
                 state: if spawn_latency == 0 {
                     CState::Idle
                 } else {
@@ -464,6 +474,7 @@ impl StateStore {
     /// nodes idle out first and their nodes can power off — the
     /// consolidation that drives the paper's Fig. 13 energy savings.
     /// O(log n): first element of the stage's ready index.
+    #[inline]
     pub fn pick_container(&self, ms_id: MsId) -> Option<u64> {
         self.stages
             .get(ms_id)?
@@ -477,6 +488,7 @@ impl StateStore {
     /// the container was Idle (i.e. the caller should kick off a batch).
     /// The container must be warm with a free slot — dispatch targets come
     /// from [`StateStore::pick_container`].
+    #[inline]
     pub fn dispatch(&mut self, cid: u64, job_id: u64, now: Micros) -> bool {
         let slot = slot_of(cid);
         let was_idle = {
@@ -492,8 +504,10 @@ impl StateStore {
     }
 
     /// Begin executing everything queued locally as one batch (continuous
-    /// batching). Transitions Idle → Busy and captures the batch.
-    pub fn begin_batch(&mut self, cid: u64) -> BatchStart {
+    /// batching). Transitions Idle → Busy; the captured job ids replace
+    /// the contents of `jobs` (a caller-owned scratch buffer, so the hot
+    /// path reuses one allocation across every batch).
+    pub fn begin_batch(&mut self, cid: u64, jobs: &mut Vec<u64>) -> BatchStart {
         let slot = slot_of(cid);
         let start = {
             let s = self.slots[slot].as_mut().expect("begin_batch on dead container");
@@ -502,8 +516,10 @@ impl StateStore {
             debug_assert_eq!(s.c.cur_batch, 0);
             s.c.state = CState::Busy;
             s.c.cur_batch = s.c.local.len();
+            jobs.clear();
+            jobs.extend(s.c.local.iter().copied());
             BatchStart {
-                jobs: s.c.local.iter().copied().collect(),
+                len: jobs.len(),
                 ms_id: s.c.ms_id,
                 ready_at: s.c.ready_at,
                 spawn_latency: s.c.spawn_latency,
@@ -514,24 +530,27 @@ impl StateStore {
         start
     }
 
-    /// Complete the executing batch: drain its jobs, transition Busy →
-    /// Idle, mark used. Returns the stage and the drained job ids.
-    pub fn finish_batch(&mut self, cid: u64, now: Micros) -> (MsId, Vec<u64>) {
+    /// Complete the executing batch: drain its jobs into `jobs`
+    /// (replacing its contents — same scratch-buffer contract as
+    /// [`StateStore::begin_batch`]), transition Busy → Idle, mark used.
+    /// Returns the stage.
+    pub fn finish_batch(&mut self, cid: u64, now: Micros, jobs: &mut Vec<u64>) -> MsId {
         let slot = slot_of(cid);
-        let out = {
+        let ms_id = {
             let s = self.slots[slot].as_mut().expect("finish_batch on dead container");
             debug_assert_eq!(s.c.id, cid);
             debug_assert_eq!(s.c.state, CState::Busy);
             let n = s.c.cur_batch;
-            let jobs: Vec<u64> = s.c.local.drain(..n).collect();
+            jobs.clear();
+            jobs.extend(s.c.local.drain(..n));
             s.c.cur_batch = 0;
             s.c.jobs_executed += jobs.len() as u64;
             s.c.last_used = now;
             s.c.state = CState::Idle;
-            (s.c.ms_id, jobs)
+            s.c.ms_id
         };
         self.refresh(cid);
-        out
+        ms_id
     }
 
     /// Cold start finished: Starting → Idle. Returns the stage, or None
@@ -553,33 +572,33 @@ impl StateStore {
     }
 
     /// Total free slots across warm containers of a stage. O(1).
+    #[inline]
     pub fn warm_free_slots(&self, ms_id: MsId) -> usize {
         self.stages.get(ms_id).map(|s| s.warm_free).unwrap_or(0)
     }
 
     /// Slots that will come online from still-starting containers. O(1).
+    #[inline]
     pub fn starting_slots(&self, ms_id: MsId) -> usize {
         self.stages.get(ms_id).map(|s| s.starting).unwrap_or(0)
     }
 
     /// Live container count for a stage (warm + starting). O(1).
+    #[inline]
     pub fn stage_containers(&self, ms_id: MsId) -> usize {
         self.stages.get(ms_id).map(|s| s.live).unwrap_or(0)
     }
 
     /// Idle containers of a stage unused since before `cutoff`, oldest
-    /// first. O(log n + |result|): a prefix of the stage's idle-LRU set.
-    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> Vec<u64> {
-        self.stages
-            .get(ms_id)
-            .map(|s| {
-                s.idle
-                    .iter()
-                    .take_while(|&&(t, _)| t < cutoff)
-                    .map(|&(_, id)| id)
-                    .collect()
-            })
-            .unwrap_or_default()
+    /// first. O(log n + |result|): a prefix of the stage's idle-LRU set,
+    /// yielded lazily so callers decide whether to collect.
+    pub fn idle_since(&self, ms_id: MsId, cutoff: Micros) -> impl Iterator<Item = u64> + '_ {
+        self.stages.get(ms_id).into_iter().flat_map(move |s| {
+            s.idle
+                .iter()
+                .take_while(move |&&(t, _)| t < cutoff)
+                .map(|&(_, id)| id)
+        })
     }
 
     /// Globally least-recently-used idle container (any stage). Used for
@@ -592,6 +611,7 @@ impl StateStore {
 
     /// LRU idle container last used before `cutoff` (grace-period variant:
     /// only containers idle "long enough" are eviction victims). O(log n).
+    #[inline]
     pub fn lru_idle_since(&self, cutoff: Micros) -> Option<u64> {
         match self.idle_lru.iter().next() {
             Some(&(t, id)) if t < cutoff => Some(id),
@@ -599,27 +619,30 @@ impl StateStore {
         }
     }
 
-    /// (busy_cores, alloc_cores) per node — feeds the energy model.
-    /// O(nodes) from the per-node counters; no container scan.
+    /// (busy_cores, alloc_cores) of one node — feeds the energy model.
+    /// O(1) from the per-node counters; no container scan.
+    #[inline]
+    pub fn node_load(&self, node: usize) -> (f64, f64) {
+        (
+            self.node_busy[node] as f64 * self.cpu_per_container,
+            self.nodes[node].containers as f64 * self.cpu_per_container,
+        )
+    }
+
+    /// (busy_cores, alloc_cores) per node. O(nodes); allocates — the
+    /// settle loop uses [`StateStore::node_load`] per index instead.
     pub fn node_loads(&self) -> Vec<(f64, f64)> {
-        self.nodes
-            .iter()
-            .enumerate()
-            .map(|(i, n)| {
-                (
-                    self.node_busy[i] as f64 * self.cpu_per_container,
-                    n.containers as f64 * self.cpu_per_container,
-                )
-            })
-            .collect()
+        (0..self.nodes.len()).map(|i| self.node_load(i)).collect()
     }
 
     /// Total containers alive.
+    #[inline]
     pub fn total_containers(&self) -> usize {
         self.live_count
     }
 
     /// Look up a live container by id (None for removed/recycled ids).
+    #[inline]
     pub fn get(&self, cid: u64) -> Option<&Container> {
         self.slots
             .get(slot_of(cid))?
@@ -825,20 +848,22 @@ mod tests {
     #[test]
     fn idle_reclaim_candidates() {
         let mut s = store();
+        let mut jobs = Vec::new();
         let a = s.spawn(1, 2, 100, 0, false).unwrap();
         let b = s.spawn(1, 2, 900, 0, false).unwrap();
-        let idle = s.idle_since(1, 500);
+        let idle: Vec<u64> = s.idle_since(1, 500).collect();
         assert_eq!(idle, vec![a]);
         assert_eq!(s.lru_idle_since(500), Some(a));
         assert_eq!(s.lru_idle(), Some(a));
         // busy containers are never reclaimed
         s.dispatch(a, 7, 200);
-        s.begin_batch(a);
-        assert!(s.idle_since(1, 500).is_empty());
+        let start = s.begin_batch(a, &mut jobs);
+        assert_eq!((start.len, jobs.as_slice()), (1, &[7][..]));
+        assert_eq!(s.idle_since(1, 500).count(), 0);
         // ... and return to the LRU set once drained
-        let (ms, jobs) = s.finish_batch(a, 300);
-        assert_eq!((ms, jobs), (1, vec![7]));
-        assert_eq!(s.idle_since(1, 500), vec![a]);
+        let ms = s.finish_batch(a, 300, &mut jobs);
+        assert_eq!((ms, jobs.as_slice()), (1, &[7][..]));
+        assert_eq!(s.idle_since(1, 500).collect::<Vec<u64>>(), vec![a]);
         let _ = b;
         s.check_consistency().unwrap();
     }
@@ -849,10 +874,12 @@ mod tests {
         let a = s.spawn(1, 2, 0, 0, false).unwrap();
         let _b = s.spawn(1, 2, 0, 0, false).unwrap();
         s.dispatch(a, 1, 0);
-        s.begin_batch(a);
+        s.begin_batch(a, &mut Vec::new());
         let loads = s.node_loads();
         assert_eq!(loads[0], (0.5, 1.0));
         assert_eq!(loads[1], (0.0, 0.0));
+        assert_eq!(s.node_load(0), loads[0]);
+        assert_eq!(s.node_load(1), loads[1]);
         s.check_consistency().unwrap();
     }
 
@@ -893,7 +920,7 @@ mod tests {
         let mut s = store();
         let a = s.spawn(1, 3, 0, 0, false).unwrap();
         assert!(s.dispatch(a, 1, 10)); // was idle -> caller starts a batch
-        s.begin_batch(a);
+        s.begin_batch(a, &mut Vec::new());
         assert!(!s.dispatch(a, 2, 20)); // busy -> just queue
         s.check_consistency().unwrap();
     }

@@ -332,7 +332,7 @@ impl Driver for RealTimeDriver {
     }
 
     fn exec_batch(&mut self, cid: u64, b: &BatchStart, mut ctx: EffectCtx<'_>) -> Option<Micros> {
-        let rows = b.jobs.len();
+        let rows = b.len;
         let job = match self.backend {
             ExecBackend::Synthetic => {
                 // the shared exec model (and RNG stream) of the virtual

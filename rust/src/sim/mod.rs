@@ -106,9 +106,10 @@ impl EngineCore<VirtualDriver> {
     pub fn run_checked(mut self, check_every: u64) -> Result<Recorder, String> {
         let horizon = secs(self.driver.trace.duration_s() as f64);
         let end = horizon + secs(self.driver.drain_s);
-        // seed arrivals
+        // seed arrivals (heap + job table sized once, up front)
         let mut arr_rng = self.rng.fork(0xa221);
         let arrivals = self.driver.trace.arrivals(&mut arr_rng);
+        self.reserve_workload(arrivals.len());
         let nchains = self.chains.len();
         for (i, t) in arrivals.into_iter().enumerate() {
             let chain = self.chains[i % nchains.max(1)];

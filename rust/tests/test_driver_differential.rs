@@ -16,8 +16,9 @@
 use fifer::config::{ClusterConfig, Policy, SystemConfig};
 use fifer::model::Catalog;
 use fifer::server::{serve, ServeParams};
-use fifer::sim::{run_sim, SimParams};
+use fifer::sim::{run_sim, Engine, SimParams};
 use fifer::trace::Trace;
+use fifer::util::secs;
 
 /// Live container slots == sim cluster capacity (1 node x SLOTS).
 const SLOTS: usize = 16;
@@ -136,6 +137,62 @@ fn differential_kn() {
 #[test]
 fn differential_fifereq() {
     differential(Policy::FiferEq);
+}
+
+#[test]
+fn advance_to_fires_due_events_once_and_never_moves_time_backwards() {
+    // Drive the engine the way a real-time driver does — explicit
+    // advance_to / arrival_at calls — and pin the clock contract: an
+    // event due *exactly* at t fires, re-advancing to the same instant
+    // does not double-fire it, and a stale (past) injection timestamp
+    // clamps to the current engine time instead of rewinding it.
+    let cat = Catalog::paper();
+    let chains = cat.mix("Heavy").unwrap().chains.clone();
+    let mut eng = Engine::new(SimParams {
+        cfg: config(Policy::Bline), // per-request spawning: arrivals complete
+        chains: chains.clone(),
+        trace: Trace::poisson(RATE, DURATION_S), // unused: driven manually
+        drain_s: DRAIN_S,
+    });
+    eng.bootstrap(secs(60.0), secs(90.0));
+    assert_eq!(eng.recorder.energy_series.len(), 0, "no scan before t=1s");
+
+    // the first Scan is due exactly at t = monitor_interval = 1 s
+    eng.advance_to(secs(1.0));
+    assert_eq!(
+        eng.recorder.energy_series.len(),
+        1,
+        "scan due exactly at t must fire"
+    );
+    // re-advancing to the same instant must not re-fire it
+    eng.advance_to(secs(1.0));
+    assert_eq!(eng.recorder.energy_series.len(), 1, "scan double-fired");
+
+    // a stale arrival timestamp clamps to now (time never rewinds): the
+    // job's recorded arrival must be 1 s, not 0.5 s
+    eng.arrival_at(chains[0], secs(0.5));
+    assert_eq!(eng.jobs_arrived(), 1);
+
+    // each later scan fires exactly once while advancing across ticks
+    eng.advance_to(secs(4.5));
+    assert_eq!(
+        eng.recorder.energy_series.len(),
+        4,
+        "scans at 1,2,3,4 s fire once each"
+    );
+    for w in eng.recorder.energy_series.windows(2) {
+        assert!(w[0].0 < w[1].0, "scan timestamps must increase");
+    }
+
+    // let the clamped arrival complete (Bline spawns per request), then
+    // verify its recorded arrival saw the clamped clock
+    eng.advance_to(secs(30.0));
+    assert_eq!(eng.jobs_completed(), 1, "arrival did not complete");
+    assert_eq!(
+        eng.recorder.jobs[0].arrival,
+        secs(1.0),
+        "stale timestamp must clamp to engine time"
+    );
 }
 
 #[test]

@@ -225,9 +225,10 @@ fn prop_indexed_store_matches_scan_reference() {
                         let captured = m.queued;
                         m.state = CState::Busy;
                         m.cur_batch = captured;
-                        let b = store.begin_batch(cid);
+                        let mut jobs = Vec::new();
+                        let b = store.begin_batch(cid, &mut jobs);
                         assert_prop(
-                            b.jobs.len() == captured && b.ms_id == ms,
+                            b.len == captured && jobs.len() == captured && b.ms_id == ms,
                             "batch capture diverged",
                         )?;
                     }
@@ -242,7 +243,8 @@ fn prop_indexed_store_matches_scan_reference() {
                     .collect();
                 if !busy.is_empty() {
                     let id = busy[rng.below(busy.len())];
-                    let (ms, jobs) = store.finish_batch(id, now);
+                    let mut jobs = Vec::new();
+                    let ms = store.finish_batch(id, now, &mut jobs);
                     let m = mirror.find(id);
                     assert_prop(
                         ms == m.ms_id && jobs.len() == m.cur_batch,
@@ -294,7 +296,8 @@ fn prop_indexed_store_matches_scan_reference() {
                 )?;
                 let cutoff = now.saturating_sub(300_000);
                 assert_prop(
-                    store.idle_since(ms, cutoff) == mirror.idle_since(ms, cutoff),
+                    store.idle_since(ms, cutoff).collect::<Vec<u64>>()
+                        == mirror.idle_since(ms, cutoff),
                     "idle_since diverged",
                 )?;
             }
