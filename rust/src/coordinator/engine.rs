@@ -59,9 +59,10 @@ use crate::coordinator::{lsf_key, scaling, slack::SlackPlan};
 use crate::energy::ClusterEnergy;
 use crate::metrics::{JobRecord, Recorder, StageRecord};
 use crate::model::{Catalog, ChainId, MsId};
+use crate::obs::{Collector, Gauges, ObsConfig, ObsReport};
 use crate::predictor::Predictor;
 use crate::util::rng::Pcg;
-use crate::util::{ms, secs, Micros, MICROS_PER_S};
+use crate::util::{ms, secs, to_ms, Micros, MICROS_PER_S};
 
 /// Core events. Ord is required by the heap; ordering beyond the
 /// (time, seq) key is irrelevant.
@@ -243,6 +244,10 @@ pub struct EngineCore<D: Driver> {
     /// from `scratch_batch`: job advancement inside the completion loop
     /// can recursively kick off new batches.
     scratch_done: Vec<u64>,
+    /// Opt-in observability collector (`None` by default, so the
+    /// telemetry taps cost one branch each and cannot perturb the
+    /// zero-alloc pin or byte-identity of runs that don't ask for it).
+    obs: Option<Box<Collector>>,
     pub(crate) driver: D,
 }
 
@@ -313,8 +318,33 @@ impl<D: Driver> EngineCore<D> {
             decision_probe: 0,
             scratch_batch: Vec::with_capacity(16),
             scratch_done: Vec::with_capacity(16),
+            obs: None,
             driver,
         }
+    }
+
+    /// Attach an observability collector. The default `e2e_p95_ms`
+    /// contract target is the strictest end-to-end SLO among the active
+    /// chains (the same per-chain SLO the slack plan budgets against).
+    pub fn enable_obs(&mut self, cfg: ObsConfig) {
+        let slo_ms = self
+            .chains
+            .iter()
+            .map(|&c| self.cat.chains[c].slo_ms)
+            .fold(f64::INFINITY, f64::min);
+        let slo_ms = if slo_ms.is_finite() { slo_ms } else { 1000.0 };
+        self.obs = Some(Box::new(Collector::new(cfg, slo_ms)));
+    }
+
+    /// Snapshot the collector at the current engine time (`None` when
+    /// observability is off). Real-time drivers publish these to the
+    /// metrics endpoint.
+    pub fn obs_report(&mut self) -> Option<ObsReport> {
+        let now = self.now;
+        self.obs.as_deref_mut().map(|o| {
+            o.roll_to(now);
+            o.report(now)
+        })
     }
 
     /// Pre-size the event heap and job table for a known workload (the
@@ -511,7 +541,15 @@ impl<D: Driver> EngineCore<D> {
     /// Final settlement: retire whatever is still running (accounting
     /// only), settle energy, stamp the horizon. Returns the recorder and
     /// the driver (so real-time drivers can join their executors).
-    pub fn into_parts(mut self) -> (Recorder, D) {
+    pub fn into_parts(self) -> (Recorder, D) {
+        let (recorder, driver, _) = self.into_parts_obs();
+        (recorder, driver)
+    }
+
+    /// [`EngineCore::into_parts`] plus a final observability snapshot
+    /// (rolled to the settlement time; `None` when observability was
+    /// never enabled).
+    pub fn into_parts_obs(mut self) -> (Recorder, D, Option<ObsReport>) {
         let retire_t = self.now.min(self.end);
         for c in self.store.iter() {
             self.recorder.container_retired(c.id, retire_t);
@@ -519,7 +557,12 @@ impl<D: Driver> EngineCore<D> {
         self.settle_energy(self.end.min(self.now.max(self.horizon)));
         self.recorder.horizon = self.horizon;
         self.recorder.energy_wh = self.energy.total_wh();
-        (self.recorder, self.driver)
+        let now = self.now;
+        let obs = self.obs.take().map(|mut o| {
+            o.roll_to(now);
+            o.report(now)
+        });
+        (self.recorder, self.driver, obs)
     }
 
     // ------------------------------------------------------------------
@@ -545,6 +588,9 @@ impl<D: Driver> EngineCore<D> {
         let sec_in_window = ((self.now - self.window_start) / MICROS_PER_S) as usize;
         let bucket = sec_in_window.min(self.window_counts.len() - 1);
         self.window_counts[bucket] += 1;
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_arrival(self.now);
+        }
         self.enqueue_stage(job_id, self.now);
     }
 
@@ -592,6 +638,9 @@ impl<D: Driver> EngineCore<D> {
             };
             let entry = self.queues[ms_id].pop().unwrap();
             if self.store.dispatch(cid, entry.job_id, self.now) {
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.on_dispatch(self.now);
+                }
                 self.start_exec(cid);
             }
         }
@@ -645,6 +694,9 @@ impl<D: Driver> EngineCore<D> {
         let mut batch_jobs = std::mem::take(&mut self.scratch_done);
         let ms_id = self.store.finish_batch(cid, self.now, &mut batch_jobs);
         self.recorder.container_executed(cid, batch_jobs.len() as u64);
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_batch(self.now, batch_jobs.len() as u64);
+        }
 
         // Kick off the next batch immediately: the container must be Busy
         // again *before* job advancement below can trigger spawns (which
@@ -682,12 +734,17 @@ impl<D: Driver> EngineCore<D> {
                 None => {
                     self.jobs_done += 1;
                     let j = &mut self.jobs[job_id as usize];
-                    self.recorder.job(JobRecord {
+                    let rec = JobRecord {
                         chain: j.chain,
                         arrival: j.arrival,
                         completion: self.now,
                         stages: std::mem::take(&mut j.stages),
-                    });
+                    };
+                    if let Some(o) = self.obs.as_deref_mut() {
+                        let slo_ok = to_ms(rec.response()) <= self.cat.chains[rec.chain].slo_ms;
+                        o.on_job_complete(self.now, &rec, slo_ok);
+                    }
+                    self.recorder.job(rec);
                 }
                 Some(jid) => self.enqueue_stage(jid, self.now),
             }
@@ -762,6 +819,9 @@ impl<D: Driver> EngineCore<D> {
             if self.store.remove(cid).is_some() {
                 self.recorder.container_retired(cid, self.now);
                 self.recorder.reclaimed += 1;
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.on_retire(self.now);
+                }
                 self.driver.container_retired(cid);
             }
         }
@@ -769,6 +829,42 @@ impl<D: Driver> EngineCore<D> {
         self.recorder
             .energy_series
             .push((self.now, self.energy.total_wh()));
+        self.sample_gauges();
+    }
+
+    /// One observability gauge sample per scan tick: summed node load,
+    /// warm/starting slots across the workload's stages, and global
+    /// queue depth. A no-op when observability is off.
+    fn sample_gauges(&mut self) {
+        if self.obs.is_none() {
+            return;
+        }
+        let mut busy = 0.0;
+        let mut alloc = 0.0;
+        for i in 0..self.energy.nodes.len() {
+            let (b, a) = self.store.node_load(i);
+            busy += b;
+            alloc += a;
+        }
+        let mut warm_free = 0usize;
+        let mut starting = 0usize;
+        for &ms_id in &self.stages {
+            warm_free += self.store.warm_free_slots(ms_id);
+            starting += self.store.starting_slots(ms_id);
+        }
+        let queued: usize = self.queues.iter().map(|q| q.len()).sum();
+        let g = Gauges {
+            containers: self.store.total_containers() as u64,
+            warm_free_slots: warm_free as u64,
+            starting_slots: starting as u64,
+            queue_depth: queued as u64,
+            busy_cores: busy,
+            alloc_cores: alloc,
+        };
+        let now = self.now;
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_tick(now, g);
+        }
     }
 
     fn settle_energy(&mut self, t: Micros) {
@@ -827,11 +923,17 @@ impl<D: Driver> EngineCore<D> {
                 self.store.remove(victim);
                 self.recorder.container_retired(victim, self.now);
                 self.recorder.reclaimed += 1;
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.on_retire(self.now);
+                }
                 self.driver.container_retired(victim);
                 self.store.spawn(ms_id, batch, self.now, latency, cold)?
             }
         };
         self.recorder.container_spawned(cid, ms_id, self.now, cold);
+        if let Some(o) = self.obs.as_deref_mut() {
+            o.on_spawn(self.now, cold);
+        }
         self.driver.container_spawned(
             cid,
             ms_id,

@@ -58,6 +58,7 @@
 //! | mechanics | [`coordinator`] (store/queues/slack/scaling), [`coldstart`], [`energy`] |
 //! | prediction | [`predictor`] (EWMA/ARIMA/LSTM zoo) |
 //! | evaluation | [`experiments`], [`metrics`], [`bench`] |
+//! | observability | [`obs`] (SLO contract, timeline ring, `/metrics` endpoint — one schema for both drivers) |
 //! | support | [`cli`], [`util`] (vendored rng/json/stats) |
 //!
 //! See the top-level `README.md` for the quickstart, `docs/DESIGN.md`
@@ -73,6 +74,7 @@ pub mod energy;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod predictor;
 pub mod runtime;
 pub mod scenario;

@@ -81,6 +81,10 @@ fn run() -> Result<()> {
                         ("--drain <s>", "serve: drain window after the generator stops"),
                         ("--monitor <s>", "serve: monitor-tick interval override"),
                         ("--json <file>", "serve: write the metrics summary as JSON"),
+                        (
+                            "--metrics-addr <ip:port>",
+                            "serve: expose live /metrics endpoints (docs/OBSERVABILITY.md)",
+                        ),
                     ],
                 )
             );
@@ -91,6 +95,7 @@ fn run() -> Result<()> {
 
 const SCENARIO_USAGE: &str = "usage:
   fifer scenario run <file|builtin> [--threads N] [--json out.json] [--csv out.csv]
+                     [--slo-timeline out.json]
   fifer scenario list              list built-in scenarios
   fifer scenario show <builtin>    print a built-in scenario file";
 
@@ -117,7 +122,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 spec.seeds.len(),
                 threads.clamp(1, cells.len().max(1)),
             );
-            let results = scenario::run_scenario(&spec, threads)?;
+            // timeline collection is opt-in: the plain sweep stays
+            // collector-free, --slo-timeline turns it on everywhere
+            let timeline_out = args.get("slo-timeline");
+            let obs = timeline_out.map(|_| fifer::obs::ObsConfig::default());
+            let results = scenario::run_scenario_obs(&spec, threads, obs)?;
             let mut t = Table::new(&[
                 "trace", "mix", "policy", "seed", "jobs", "viol%", "median ms", "p99 ms",
                 "avg cont", "cold", "energy Wh",
@@ -144,6 +153,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
             if let Some(p) = args.get("csv") {
                 std::fs::write(p, scenario::results_csv(&results))?;
+                println!("wrote {p}");
+            }
+            if let Some(p) = timeline_out {
+                std::fs::write(p, scenario::results_obs_json(&spec, &results).to_string())?;
                 println!("wrote {p}");
             }
             Ok(())
@@ -209,6 +222,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     p.cfg.rm = RmConfig::paper(policy);
     p.cfg.rm.monitor_interval_s = args.f64_or("monitor", p.cfg.rm.monitor_interval_s)?;
     p.cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
+    p.metrics_addr = args.get("metrics-addr").map(|s| s.to_string());
+    // Ctrl-C drains in-flight jobs and still emits the final report
+    // (a second Ctrl-C aborts immediately)
+    p.interrupt = Some(fifer::server::sigint_flag());
+    if let Some(addr) = &p.metrics_addr {
+        println!("metrics: http://{addr}/metrics (also /metrics/summary, /metrics/history)");
+    }
     println!(
         "live serve: rate={} req/s, {}s (+{}s drain), policy={} (batching={}), \
          up to {} containers, {} backend",
@@ -221,6 +241,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if p.synthetic { "synthetic" } else { "PJRT" }
     );
     let r = serve(p)?;
+    if r.interrupted {
+        println!("interrupted: generator stopped early, in-flight jobs drained");
+    }
     let s = &r.summary;
     println!(
         "jobs={} throughput={:.1} req/s median={:.1}ms p99={:.1}ms \

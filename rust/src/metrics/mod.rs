@@ -206,6 +206,7 @@ impl Recorder {
         let mut responses: Vec<f64> = Vec::with_capacity(self.jobs.len());
         let mut violations = 0u64;
         let mut queue_waits: Vec<f64> = Vec::new();
+        let mut cold_jobs = 0u64;
         let (mut exec_sum, mut cold_sum, mut batch_sum) = (0.0f64, 0.0f64, 0.0f64);
         let jobs: Vec<&JobRecord> = self.jobs.iter().filter(|j| j.arrival >= warmup).collect();
         for j in &jobs {
@@ -213,6 +214,9 @@ impl Recorder {
             responses.push(resp);
             if resp > cat.chains[j.chain].slo_ms {
                 violations += 1;
+            }
+            if j.cold_total() > 0 {
+                cold_jobs += 1;
             }
             exec_sum += to_ms(j.exec_total());
             cold_sum += to_ms(j.cold_total());
@@ -274,6 +278,8 @@ impl Recorder {
         Summary {
             jobs: jobs.len() as u64,
             slo_violation_pct: 100.0 * violations as f64 / n,
+            slo_attainment: 1.0 - violations as f64 / n,
+            cold_start_ratio: cold_jobs as f64 / n,
             median_ms: stats::percentile_sorted(&responses, 50.0),
             p95_ms: stats::percentile_sorted(&responses, 95.0),
             p99_ms: p99,
@@ -353,6 +359,13 @@ impl StageStats {
 pub struct Summary {
     pub jobs: u64,
     pub slo_violation_pct: f64,
+    /// Fraction of jobs meeting their chain SLO (`1 − violations/jobs`)
+    /// — the same quantity the obs plane's `request_success_rate` SLO
+    /// tracks, here over the summarized (post-warm-up) window.
+    pub slo_attainment: f64,
+    /// Fraction of jobs that absorbed any cold-start wait — the obs
+    /// plane's `cold_start_ratio`, over the summarized window.
+    pub cold_start_ratio: f64,
     pub median_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -370,9 +383,11 @@ pub struct Summary {
 
 impl Summary {
     /// Column names of one CSV row, matching [`Summary::csv_row`].
-    pub const CSV_FIELDS: [&'static str; 12] = [
+    pub const CSV_FIELDS: [&'static str; 14] = [
         "jobs",
         "slo_violation_pct",
+        "slo_attainment",
+        "cold_start_ratio",
         "mean_ms",
         "median_ms",
         "p95_ms",
@@ -390,9 +405,11 @@ impl Summary {
     /// which is deterministic — sweep outputs are byte-reproducible.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.jobs,
             self.slo_violation_pct,
+            self.slo_attainment,
+            self.cold_start_ratio,
             self.mean_ms,
             self.median_ms,
             self.p95_ms,
@@ -429,6 +446,8 @@ impl Summary {
         Json::obj(vec![
             ("jobs", Json::Num(self.jobs as f64)),
             ("slo_violation_pct", Json::Num(self.slo_violation_pct)),
+            ("slo_attainment", Json::Num(self.slo_attainment)),
+            ("cold_start_ratio", Json::Num(self.cold_start_ratio)),
             ("mean_ms", Json::Num(self.mean_ms)),
             ("median_ms", Json::Num(self.median_ms)),
             ("p95_ms", Json::Num(self.p95_ms)),
@@ -489,7 +508,20 @@ mod tests {
         r.job(job(0, 0.0, 900.0, vec![]));
         let s = r.summarize(&cat);
         assert!((s.slo_violation_pct - 33.333).abs() < 0.01);
+        assert!((s.slo_attainment - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.cold_start_ratio, 0.0); // no stages -> no cold waits
         assert_eq!(s.jobs, 3);
+    }
+
+    #[test]
+    fn cold_start_ratio_counts_jobs_with_cold_wait() {
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        r.job(job(0, 0.0, 500.0, vec![stage(0, 0.0, 100.0, 200.0, 80.0)]));
+        r.job(job(0, 0.0, 500.0, vec![stage(0, 0.0, 10.0, 110.0, 0.0)]));
+        let s = r.summarize(&cat);
+        assert!((s.cold_start_ratio - 0.5).abs() < 1e-9);
     }
 
     #[test]

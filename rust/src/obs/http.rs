@@ -1,0 +1,204 @@
+//! Dependency-free HTTP/1.1 responder for the metrics endpoints.
+//!
+//! A single accept-loop thread over `std::net::TcpListener` (the build
+//! is vendored-only — no hyper/axum) serving read-only JSON:
+//!
+//! | endpoint | payload |
+//! |----------|---------|
+//! | `GET /metrics` | current snapshot: totals + current bucket row |
+//! | `GET /metrics/summary` | the SLO contract block |
+//! | `GET /metrics/history?minutes=N` | last N minutes of timeline rows (default 60) |
+//!
+//! The responder never touches the engine: the serve loop publishes
+//! [`ObsReport`] snapshots into a [`SharedSnapshot`] slot (at most once
+//! per engine second) and the responder renders whatever snapshot is
+//! current. Before the first publish every endpoint answers
+//! `503 {"error":"no snapshot yet"}`. Requests are handled serially —
+//! this is a scrape target, not a serving path.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::ObsReport;
+
+/// The publish slot shared between the serve loop (writer) and the
+/// responder thread (reader).
+pub type SharedSnapshot = Arc<Mutex<Option<ObsReport>>>;
+
+/// Handle to a running metrics responder thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`; port 0 picks a free port)
+    /// and start the responder thread serving from `shared`.
+    pub fn start(addr: &str, shared: SharedSnapshot) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow!("metrics bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fifer-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // per-connection errors (timeouts, resets, bad
+                        // requests) must not take the responder down
+                        let _ = handle_conn(stream, &shared);
+                    }
+                }
+            })?;
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the responder to exit and join it. The accept loop blocks
+    /// in `accept()`, so a self-connection wakes it after the stop flag
+    /// is set.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        let Some(handle) = self.handle.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        let _ = handle.join();
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &SharedSnapshot) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read until the end of the request line; headers and body are
+    // irrelevant for GET-only routes (the response closes the
+    // connection, so unread bytes are simply discarded).
+    let mut buf = [0u8; 2048];
+    let mut n = 0;
+    loop {
+        let r = stream.read(&mut buf[n..])?;
+        if r == 0 {
+            break;
+        }
+        n += r;
+        if buf[..n].windows(2).any(|w| w == b"\r\n") || n == buf.len() {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => return respond(&mut stream, 400, "Bad Request", "{\"error\":\"bad request\"}"),
+    };
+    if method != "GET" {
+        return respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "{\"error\":\"GET only\"}",
+        );
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+
+    let minutes = match path {
+        "/metrics/history" => match parse_minutes(query) {
+            Ok(m) => m,
+            Err(()) => {
+                return respond(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    "{\"error\":\"minutes must be a non-negative integer\"}",
+                )
+            }
+        },
+        _ => None,
+    };
+
+    let snapshot = shared.lock().expect("metrics snapshot lock").clone();
+    let Some(report) = snapshot else {
+        return respond(
+            &mut stream,
+            503,
+            "Service Unavailable",
+            "{\"error\":\"no snapshot yet\"}",
+        );
+    };
+    let body = match path {
+        "/metrics" => report.metrics_json(),
+        "/metrics/summary" => report.summary_json(),
+        // default window: the last hour of rows
+        "/metrics/history" => report.history_json(Some(minutes.unwrap_or(60))),
+        _ => return respond(&mut stream, 404, "Not Found", "{\"error\":\"not found\"}"),
+    };
+    respond(&mut stream, 200, "OK", &body.to_string())
+}
+
+/// Parse `minutes=N` from a query string. `Ok(None)` when absent,
+/// `Err(())` on a malformed value or unknown parameter shape.
+fn parse_minutes(query: &str) -> Result<Option<u64>, ()> {
+    if query.is_empty() {
+        return Ok(None);
+    }
+    let mut minutes = None;
+    for pair in query.split('&') {
+        match pair.split_once('=') {
+            Some(("minutes", v)) => {
+                minutes = Some(v.parse::<u64>().map_err(|_| ())?);
+            }
+            // unknown params are ignored (scrapers add cache-busters)
+            Some(_) => {}
+            None => return Err(()),
+        }
+    }
+    Ok(minutes)
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

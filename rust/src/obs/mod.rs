@@ -1,0 +1,541 @@
+//! Observability plane: one telemetry contract, two drivers.
+//!
+//! This module is the production observability layer for the Fifer
+//! coordinator. A [`Collector`] hangs off `EngineCore` decision points
+//! (arrivals, dispatches, spawns with their cold/warm tag, completions
+//! with per-stage latency decomposition, retirements, monitor-tick
+//! gauges) and aggregates them into minute-bucketed
+//! [`timeline::BucketRow`]s kept in a bounded in-memory ring
+//! ([`ObsConfig::retention_buckets`], default 24 h of one-minute
+//! buckets). On top of the rows sits an explicit SLO contract
+//! ([`slo`]): four objectives with targets, burn-alert thresholds, and
+//! fast/slow burn rates.
+//!
+//! The same collector serves **both drivers**:
+//!
+//! * the live server exposes it over a dependency-free HTTP responder
+//!   ([`http::MetricsServer`]; `fifer serve --metrics-addr ...`) at
+//!   `GET /metrics`, `GET /metrics/summary`, and
+//!   `GET /metrics/history?minutes=N`;
+//! * the simulator emits the *identical* timeline/contract schema from
+//!   virtual time (`fifer scenario run ... --slo-timeline out.json`),
+//!   byte-deterministic from the seed.
+//!
+//! One contract, two drivers: a live dashboard and a sim sweep are
+//! directly diffable. The collector is fed engine time only (virtual or
+//! monotonic µs), never reads a clock or RNG, and is disabled
+//! (`Option::None` on the engine) unless a caller opts in — so it can
+//! neither perturb scheduling decisions nor the byte-identity pins.
+
+pub mod http;
+pub mod slo;
+pub mod timeline;
+
+use std::collections::VecDeque;
+
+use crate::metrics::JobRecord;
+use crate::util::json::Json;
+use crate::util::{to_ms, Micros, MICROS_PER_S};
+
+pub use http::{MetricsServer, SharedSnapshot};
+pub use slo::{SloEval, SloTargets, WindowStats, FAST_WINDOW_S, SLOW_WINDOW_S};
+pub use timeline::BucketRow;
+
+/// Collector configuration: bucket width, ring retention, and the SLO
+/// contract thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct ObsConfig {
+    /// Timeline bucket width in engine seconds (min 1).
+    pub bucket_s: u64,
+    /// Buckets retained in the ring (min 1). The default pairs with
+    /// `bucket_s = 60` for 24 h of history.
+    pub retention_buckets: usize,
+    pub targets: SloTargets,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            bucket_s: 60,
+            retention_buckets: 1440,
+            targets: SloTargets::default(),
+        }
+    }
+}
+
+/// One monitor-tick gauge sample, taken at `on_scan` cadence.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Gauges {
+    pub containers: u64,
+    pub warm_free_slots: u64,
+    pub starting_slots: u64,
+    pub queue_depth: u64,
+    pub busy_cores: f64,
+    pub alloc_cores: f64,
+}
+
+/// Cumulative counters since collector start (never evicted, unlike the
+/// ring rows).
+#[derive(Debug, Clone, Default)]
+pub struct Totals {
+    pub arrivals: u64,
+    pub dispatches: u64,
+    pub completions: u64,
+    pub slo_ok: u64,
+    pub slo_violations: u64,
+    pub cold_hit_jobs: u64,
+    pub spawns_cold: u64,
+    pub spawns_warm: u64,
+    pub retirements: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+}
+
+impl Totals {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("dispatches", Json::Num(self.dispatches as f64)),
+            ("completions", Json::Num(self.completions as f64)),
+            ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            ("cold_hit_jobs", Json::Num(self.cold_hit_jobs as f64)),
+            ("spawns_cold", Json::Num(self.spawns_cold as f64)),
+            ("spawns_warm", Json::Num(self.spawns_warm as f64)),
+            ("retirements", Json::Num(self.retirements as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batched_jobs", Json::Num(self.batched_jobs as f64)),
+        ])
+    }
+}
+
+/// Driver-agnostic telemetry collector fed from `EngineCore` taps.
+///
+/// All methods take the engine clock (`now`, µs); the collector holds
+/// no clock of its own. Bucket rollover is lazy — the row for `now`'s
+/// bucket materializes on the first tap that touches it, with empty
+/// rows filling any gap so the timeline stays contiguous.
+#[derive(Debug)]
+pub struct Collector {
+    cfg: ObsConfig,
+    /// Strictest end-to-end SLO (ms) across the active chains — the
+    /// default `e2e_p95_ms` contract target.
+    chain_slo_ms: f64,
+    ring: VecDeque<BucketRow>,
+    /// Rows evicted by retention (history endpoints report this so a
+    /// truncated timeline is never mistaken for a complete one).
+    dropped: u64,
+    totals: Totals,
+}
+
+impl Collector {
+    pub fn new(cfg: ObsConfig, chain_slo_ms: f64) -> Collector {
+        let mut cfg = cfg;
+        cfg.bucket_s = cfg.bucket_s.max(1);
+        cfg.retention_buckets = cfg.retention_buckets.max(1);
+        Collector {
+            cfg,
+            chain_slo_ms,
+            ring: VecDeque::with_capacity(32),
+            dropped: 0,
+            totals: Totals::default(),
+        }
+    }
+
+    fn width(&self) -> Micros {
+        self.cfg.bucket_s * MICROS_PER_S
+    }
+
+    /// Advance the ring so its back row covers `now`, filling gaps with
+    /// empty rows and evicting past retention. A jump farther than the
+    /// whole retention window drops the ring outright instead of
+    /// looping through it.
+    pub fn roll_to(&mut self, now: Micros) {
+        let width = self.width();
+        let start = now / width * width;
+        let back_start = match self.ring.back() {
+            Some(b) => b.start,
+            None => {
+                self.ring.push_back(BucketRow::new(start));
+                return;
+            }
+        };
+        if start <= back_start {
+            return;
+        }
+        let gap = ((start - back_start) / width) as usize;
+        if gap > self.cfg.retention_buckets {
+            self.dropped += self.ring.len() as u64;
+            self.ring.clear();
+            self.ring.push_back(BucketRow::new(start));
+            return;
+        }
+        let mut t = back_start;
+        while t < start {
+            t += width;
+            if self.ring.len() >= self.cfg.retention_buckets {
+                self.ring.pop_front();
+                self.dropped += 1;
+            }
+            self.ring.push_back(BucketRow::new(t));
+        }
+    }
+
+    fn cur(&mut self, now: Micros) -> &mut BucketRow {
+        self.roll_to(now);
+        self.ring.back_mut().expect("ring non-empty after roll")
+    }
+
+    pub fn on_arrival(&mut self, now: Micros) {
+        self.totals.arrivals += 1;
+        self.cur(now).arrivals += 1;
+    }
+
+    pub fn on_dispatch(&mut self, now: Micros) {
+        self.totals.dispatches += 1;
+        self.cur(now).dispatches += 1;
+    }
+
+    pub fn on_spawn(&mut self, now: Micros, cold: bool) {
+        if cold {
+            self.totals.spawns_cold += 1;
+            self.cur(now).spawns_cold += 1;
+        } else {
+            self.totals.spawns_warm += 1;
+            self.cur(now).spawns_warm += 1;
+        }
+    }
+
+    pub fn on_retire(&mut self, now: Micros) {
+        self.totals.retirements += 1;
+        self.cur(now).retirements += 1;
+    }
+
+    /// One batched execution pass finished, carrying `jobs` requests.
+    pub fn on_batch(&mut self, now: Micros, jobs: u64) {
+        self.totals.batches += 1;
+        self.totals.batched_jobs += jobs;
+        let row = self.cur(now);
+        row.batches += 1;
+        row.batched_jobs += jobs;
+    }
+
+    /// A request completed its whole chain. `slo_ok` is the engine's
+    /// verdict against the job's own chain SLO; the per-stage latency
+    /// decomposition comes straight from the job record.
+    pub fn on_job_complete(&mut self, now: Micros, rec: &JobRecord, slo_ok: bool) {
+        let resp_ms = to_ms(rec.response());
+        let cold_hit = rec.cold_total() > 0;
+        self.totals.completions += 1;
+        if slo_ok {
+            self.totals.slo_ok += 1;
+        } else {
+            self.totals.slo_violations += 1;
+        }
+        if cold_hit {
+            self.totals.cold_hit_jobs += 1;
+        }
+        let exec_ms = to_ms(rec.exec_total());
+        let cold_ms = to_ms(rec.cold_total());
+        let batch_ms = to_ms(rec.batch_total());
+        let row = self.cur(now);
+        row.completions += 1;
+        if slo_ok {
+            row.slo_ok += 1;
+        } else {
+            row.slo_violations += 1;
+        }
+        if cold_hit {
+            row.cold_hit_jobs += 1;
+        }
+        row.hist.observe(resp_ms);
+        row.lat_sum_ms += resp_ms;
+        row.lat_max_ms = row.lat_max_ms.max(resp_ms);
+        row.exec_sum_ms += exec_ms;
+        row.cold_sum_ms += cold_ms;
+        row.batch_wait_sum_ms += batch_ms;
+    }
+
+    /// Monitor-tick gauge sample (warm/starting slots, queue depth,
+    /// node load); averaged per bucket over its tick count.
+    pub fn on_tick(&mut self, now: Micros, g: Gauges) {
+        let row = self.cur(now);
+        row.ticks += 1;
+        row.containers_sum += g.containers;
+        row.warm_free_slots_sum += g.warm_free_slots;
+        row.starting_slots_sum += g.starting_slots;
+        row.queue_depth_sum += g.queue_depth;
+        row.busy_cores_sum += g.busy_cores;
+        row.alloc_cores_sum += g.alloc_cores;
+    }
+
+    /// Immutable snapshot for rendering/serving. Call [`roll_to`]
+    /// (or any tap) first so the rows cover `now`.
+    ///
+    /// [`roll_to`]: Collector::roll_to
+    pub fn report(&self, now: Micros) -> ObsReport {
+        ObsReport {
+            now,
+            bucket_s: self.cfg.bucket_s,
+            retention_buckets: self.cfg.retention_buckets,
+            dropped_buckets: self.dropped,
+            chain_slo_ms: self.chain_slo_ms,
+            targets: self.cfg.targets,
+            totals: self.totals.clone(),
+            rows: self.ring.iter().cloned().collect(),
+        }
+    }
+}
+
+/// A point-in-time snapshot of the collector: the retained timeline
+/// plus everything needed to evaluate the SLO contract. This is the
+/// unit the HTTP responder serves, the live `ServeReport` embeds, and
+/// `--slo-timeline` writes — all through the same render methods, so
+/// the schema cannot drift between surfaces.
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    /// Engine time of the snapshot (µs).
+    pub now: Micros,
+    pub bucket_s: u64,
+    pub retention_buckets: usize,
+    pub dropped_buckets: u64,
+    pub chain_slo_ms: f64,
+    pub targets: SloTargets,
+    pub totals: Totals,
+    pub rows: Vec<BucketRow>,
+}
+
+impl ObsReport {
+    /// Fold the last `seconds` of retained rows into one window.
+    fn tail_window(&self, seconds: u64) -> WindowStats {
+        let n = (seconds.div_ceil(self.bucket_s).max(1)) as usize;
+        let skip = self.rows.len().saturating_sub(n);
+        WindowStats::from_rows(&self.rows[skip..])
+    }
+
+    /// Evaluate the four-SLO contract: values over the full retained
+    /// window, burn rates over the fast/slow tails.
+    pub fn contract(&self) -> Vec<SloEval> {
+        let full = WindowStats::from_rows(&self.rows);
+        let fast = self.tail_window(FAST_WINDOW_S);
+        let slow = self.tail_window(SLOW_WINDOW_S);
+        slo::evaluate(&self.targets, self.chain_slo_ms, &full, &fast, &slow)
+    }
+
+    fn now_s(&self) -> Json {
+        Json::Num(self.now as f64 / MICROS_PER_S as f64)
+    }
+
+    /// `GET /metrics` — cumulative totals plus the current bucket row.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("now_s", self.now_s()),
+            ("bucket_s", Json::Num(self.bucket_s as f64)),
+            ("buckets", Json::Num(self.rows.len() as f64)),
+            (
+                "retention_buckets",
+                Json::Num(self.retention_buckets as f64),
+            ),
+            ("dropped_buckets", Json::Num(self.dropped_buckets as f64)),
+            ("totals", self.totals.to_json()),
+            (
+                "current",
+                self.rows.last().map_or(Json::Null, |r| r.to_json()),
+            ),
+        ])
+    }
+
+    /// `GET /metrics/summary` — the SLO contract block.
+    pub fn summary_json(&self) -> Json {
+        let evals = self.contract();
+        let mut slo_obj = Vec::with_capacity(evals.len());
+        let mut alerts = Vec::new();
+        for e in &evals {
+            slo_obj.push((e.name, e.to_json()));
+            if e.alerting() {
+                alerts.push(Json::Str(e.name.to_string()));
+            }
+        }
+        Json::obj(vec![
+            ("now_s", self.now_s()),
+            ("bucket_s", Json::Num(self.bucket_s as f64)),
+            ("buckets", Json::Num(self.rows.len() as f64)),
+            ("dropped_buckets", Json::Num(self.dropped_buckets as f64)),
+            ("chain_slo_ms", Json::Num(self.chain_slo_ms)),
+            (
+                "windows",
+                Json::obj(vec![
+                    ("full_buckets", Json::Num(self.rows.len() as f64)),
+                    ("fast_s", Json::Num(FAST_WINDOW_S as f64)),
+                    ("slow_s", Json::Num(SLOW_WINDOW_S as f64)),
+                ]),
+            ),
+            ("slo", Json::obj(slo_obj)),
+            ("alerts", Json::Arr(alerts)),
+        ])
+    }
+
+    /// `GET /metrics/history?minutes=N` — the last N minutes of rows
+    /// (`None` = the whole retained window).
+    pub fn history_json(&self, minutes: Option<u64>) -> Json {
+        let rows = match minutes {
+            None => &self.rows[..],
+            Some(m) => {
+                let n = ((m * 60).div_ceil(self.bucket_s).max(1)) as usize;
+                &self.rows[self.rows.len().saturating_sub(n)..]
+            }
+        };
+        Json::obj(vec![
+            ("bucket_s", Json::Num(self.bucket_s as f64)),
+            ("dropped_buckets", Json::Num(self.dropped_buckets as f64)),
+            (
+                "rows",
+                Json::Arr(rows.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// The `--slo-timeline` cell payload: full history + contract in
+    /// one object. Byte-deterministic under the sim driver.
+    pub fn timeline_json(&self) -> Json {
+        Json::obj(vec![
+            ("history", self.history_json(None)),
+            ("summary", self.summary_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::secs;
+
+    fn rec(arrival: Micros, completion: Micros) -> JobRecord {
+        JobRecord {
+            chain: 0,
+            arrival,
+            completion,
+            stages: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn buckets_roll_and_fill_gaps() {
+        let mut c = Collector::new(ObsConfig::default(), 1000.0);
+        c.on_arrival(secs(5.0));
+        c.on_arrival(secs(59.0));
+        // jump 3 buckets forward — the gap rows must exist and be empty
+        c.on_arrival(secs(185.0));
+        let r = c.report(secs(185.0));
+        assert_eq!(r.rows.len(), 4);
+        assert_eq!(r.rows[0].arrivals, 2);
+        assert_eq!(r.rows[1].arrivals, 0);
+        assert_eq!(r.rows[2].arrivals, 0);
+        assert_eq!(r.rows[3].arrivals, 1);
+        assert_eq!(r.totals.arrivals, 3);
+        for (i, row) in r.rows.iter().enumerate() {
+            assert_eq!(row.start, secs(60.0) * i as u64);
+        }
+    }
+
+    #[test]
+    fn retention_evicts_and_counts_dropped() {
+        let cfg = ObsConfig {
+            bucket_s: 1,
+            retention_buckets: 3,
+            ..ObsConfig::default()
+        };
+        let mut c = Collector::new(cfg, 1000.0);
+        for s in 0..10 {
+            c.on_arrival(secs(s as f64));
+        }
+        let r = c.report(secs(9.0));
+        assert_eq!(r.rows.len(), 3);
+        assert_eq!(r.dropped_buckets, 7);
+        assert_eq!(r.rows[0].start, secs(7.0));
+        // totals survive eviction
+        assert_eq!(r.totals.arrivals, 10);
+    }
+
+    #[test]
+    fn far_jump_resets_instead_of_looping() {
+        let cfg = ObsConfig {
+            bucket_s: 1,
+            retention_buckets: 5,
+            ..ObsConfig::default()
+        };
+        let mut c = Collector::new(cfg, 1000.0);
+        c.on_arrival(0);
+        c.on_arrival(secs(1_000_000.0)); // ~11 days past a 5s ring
+        let r = c.report(secs(1_000_000.0));
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].start, secs(1_000_000.0));
+        assert_eq!(r.dropped_buckets, 1);
+    }
+
+    #[test]
+    fn completions_classify_and_decompose() {
+        let mut c = Collector::new(ObsConfig::default(), 1000.0);
+        c.on_job_complete(secs(1.0), &rec(0, secs(0.5)), true);
+        c.on_job_complete(secs(2.0), &rec(0, secs(2.0)), false);
+        c.on_batch(secs(2.0), 2);
+        c.on_spawn(secs(2.0), true);
+        c.on_spawn(secs(2.0), false);
+        c.on_dispatch(secs(2.0));
+        c.on_retire(secs(3.0));
+        let r = c.report(secs(3.0));
+        assert_eq!(r.totals.completions, 2);
+        assert_eq!(r.totals.slo_ok, 1);
+        assert_eq!(r.totals.slo_violations, 1);
+        assert_eq!(r.totals.spawns_cold, 1);
+        assert_eq!(r.totals.spawns_warm, 1);
+        assert_eq!(r.totals.batches, 1);
+        assert_eq!(r.totals.batched_jobs, 2);
+        assert_eq!(r.totals.retirements, 1);
+        let row = &r.rows[0];
+        assert_eq!(row.completions, 2);
+        assert!(row.lat_max_ms >= 2000.0 - 1e-9);
+    }
+
+    #[test]
+    fn report_json_has_contract_shape_and_is_deterministic() {
+        let mut c = Collector::new(ObsConfig::default(), 1000.0);
+        for i in 0..20 {
+            c.on_arrival(secs(i as f64));
+            c.on_job_complete(secs(i as f64 + 0.4), &rec(secs(i as f64), secs(i as f64 + 0.4)), true);
+        }
+        c.on_tick(
+            secs(19.0),
+            Gauges {
+                containers: 4,
+                warm_free_slots: 2,
+                starting_slots: 1,
+                queue_depth: 0,
+                busy_cores: 2.0,
+                alloc_cores: 4.0,
+            },
+        );
+        let r = c.report(secs(20.0));
+        let s = r.summary_json().to_string();
+        for name in [
+            "request_success_rate",
+            "e2e_p95_ms",
+            "container_utilization",
+            "cold_start_ratio",
+        ] {
+            assert!(s.contains(&format!("\"{name}\":")), "missing {name} in {s}");
+        }
+        for field in ["\"value\":", "\"target\":", "\"burn_alert\":"] {
+            assert!(s.contains(field));
+        }
+        // re-render is byte-identical
+        assert_eq!(s, r.summary_json().to_string());
+        assert_eq!(
+            r.timeline_json().to_string(),
+            r.timeline_json().to_string()
+        );
+        // history slicing: 0 minutes still returns at least one row
+        let h = r.history_json(Some(0)).to_string();
+        assert!(h.contains("\"rows\":["));
+    }
+}

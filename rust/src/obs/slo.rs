@@ -1,0 +1,341 @@
+//! The explicit SLO contract: targets, burn-alert thresholds, and
+//! fast/slow burn-rate evaluation over retained timeline windows.
+//!
+//! Four service-level objectives make up the contract (modeled on the
+//! SLO block of SNIPPETS.md §2, grounded in the paper's evaluation
+//! axes):
+//!
+//! * `request_success_rate` — fraction of completed requests inside
+//!   their chain's end-to-end SLO (higher is better).
+//! * `e2e_p95_ms` — end-to-end p95 latency vs the per-chain SLO from
+//!   the slack plan (`coordinator::slack`); the strictest active chain
+//!   sets the default target (lower is better).
+//! * `container_utilization` — busy-core fraction of allocated
+//!   container capacity, the paper's headline underutilization metric
+//!   (higher is better).
+//! * `cold_start_ratio` — fraction of completed requests that absorbed
+//!   any cold-start wait (lower is better).
+//!
+//! Each SLO carries a `target` (the contract) and a `burn_alert`
+//! threshold (the level at which error budget is burning unacceptably
+//! fast). The **burn rate** is the normalized distance past target
+//! toward the alert threshold: `0` at/inside target, `1.0` exactly at
+//! `burn_alert`, `>1` beyond it. Following multi-window burn-rate
+//! practice, an SLO is *alerting* only when both the fast window (last
+//! [`FAST_WINDOW_S`]) and the slow window (last [`SLOW_WINDOW_S`]) burn
+//! at ≥ 1 — a transient spike trips neither, a sustained regression
+//! trips both.
+
+use crate::obs::timeline::{BucketRow, LatencyHist};
+use crate::util::json::Json;
+
+/// Fast burn-rate window (seconds of retained timeline).
+pub const FAST_WINDOW_S: u64 = 300;
+/// Slow burn-rate window (seconds of retained timeline).
+pub const SLOW_WINDOW_S: u64 = 3600;
+
+/// Contract targets and burn-alert thresholds for the four SLOs.
+#[derive(Debug, Clone, Copy)]
+pub struct SloTargets {
+    pub success_rate_target: f64,
+    pub success_rate_burn: f64,
+    /// `None` derives the target from the strictest active chain SLO.
+    pub p95_target_ms: Option<f64>,
+    /// `None` derives the alert threshold as 2x the p95 target.
+    pub p95_burn_ms: Option<f64>,
+    pub utilization_target: f64,
+    pub utilization_burn: f64,
+    pub cold_ratio_target: f64,
+    pub cold_ratio_burn: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> SloTargets {
+        SloTargets {
+            success_rate_target: 0.95,
+            success_rate_burn: 0.90,
+            p95_target_ms: None,
+            p95_burn_ms: None,
+            utilization_target: 0.50,
+            utilization_burn: 0.30,
+            cold_ratio_target: 0.10,
+            cold_ratio_burn: 0.25,
+        }
+    }
+}
+
+/// Which way "good" points for an SLO value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+}
+
+impl Direction {
+    fn as_str(self) -> &'static str {
+        match self {
+            Direction::HigherIsBetter => "higher_is_better",
+            Direction::LowerIsBetter => "lower_is_better",
+        }
+    }
+}
+
+/// Normalized burn rate: 0 at/inside target, 1 exactly at `burn_alert`,
+/// proportionally beyond. Never negative, never NaN.
+pub fn burn_rate(value: f64, target: f64, burn_alert: f64, dir: Direction) -> f64 {
+    let (num, denom) = match dir {
+        Direction::HigherIsBetter => (target - value, target - burn_alert),
+        Direction::LowerIsBetter => (value - target, burn_alert - target),
+    };
+    if !num.is_finite() {
+        return 0.0;
+    }
+    (num / denom.max(1e-12)).max(0.0)
+}
+
+/// One evaluated SLO: full-window value plus fast/slow burn rates.
+#[derive(Debug, Clone)]
+pub struct SloEval {
+    pub name: &'static str,
+    pub value: f64,
+    pub target: f64,
+    pub burn_alert: f64,
+    pub direction: Direction,
+    /// Samples behind `value` (completions, or gauge ticks for
+    /// utilization) — 0 means the value is a vacuous default.
+    pub samples: u64,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+}
+
+impl SloEval {
+    /// Full-window value meets the contract target.
+    pub fn ok(&self) -> bool {
+        match self.direction {
+            Direction::HigherIsBetter => self.value >= self.target,
+            Direction::LowerIsBetter => self.value <= self.target,
+        }
+    }
+
+    /// Multi-window burn alert: both fast and slow windows burning at
+    /// ≥ 1 (i.e. past `burn_alert`).
+    pub fn alerting(&self) -> bool {
+        self.burn_fast >= 1.0 && self.burn_slow >= 1.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("value", Json::Num(self.value)),
+            ("target", Json::Num(self.target)),
+            ("burn_alert", Json::Num(self.burn_alert)),
+            ("ok", Json::Bool(self.ok())),
+            ("alerting", Json::Bool(self.alerting())),
+            ("burn_rate_fast", Json::Num(self.burn_fast)),
+            ("burn_rate_slow", Json::Num(self.burn_slow)),
+            ("direction", Json::Str(self.direction.as_str().to_string())),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
+    }
+}
+
+/// Timeline rows folded into one evaluation window.
+#[derive(Debug, Clone, Default)]
+pub struct WindowStats {
+    pub completions: u64,
+    pub slo_ok: u64,
+    pub cold_hit_jobs: u64,
+    pub hist: LatencyHist,
+    pub lat_max_ms: f64,
+    pub busy_sum: f64,
+    pub alloc_sum: f64,
+    pub ticks: u64,
+}
+
+impl WindowStats {
+    pub fn from_rows(rows: &[BucketRow]) -> WindowStats {
+        let mut w = WindowStats::default();
+        for r in rows {
+            w.completions += r.completions;
+            w.slo_ok += r.slo_ok;
+            w.cold_hit_jobs += r.cold_hit_jobs;
+            w.hist.merge(&r.hist);
+            w.lat_max_ms = w.lat_max_ms.max(r.lat_max_ms);
+            w.busy_sum += r.busy_cores_sum;
+            w.alloc_sum += r.alloc_cores_sum;
+            w.ticks += r.ticks;
+        }
+        w
+    }
+
+    /// Vacuously 1.0 with no completions — an idle window has burned no
+    /// error budget.
+    pub fn success_rate(&self) -> f64 {
+        if self.completions == 0 {
+            1.0
+        } else {
+            self.slo_ok as f64 / self.completions as f64
+        }
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.hist.percentile(95.0, self.lat_max_ms)
+    }
+
+    /// Busy/allocated core fraction; `neutral` (the target) when no
+    /// capacity was allocated — an empty cluster is vacuously attaining,
+    /// not 0%-utilized.
+    pub fn utilization(&self, neutral: f64) -> f64 {
+        if self.alloc_sum <= 0.0 {
+            neutral
+        } else {
+            (self.busy_sum / self.alloc_sum).clamp(0.0, 1.0)
+        }
+    }
+
+    pub fn cold_ratio(&self) -> f64 {
+        if self.completions == 0 {
+            0.0
+        } else {
+            self.cold_hit_jobs as f64 / self.completions as f64
+        }
+    }
+}
+
+/// Evaluate the four-SLO contract: values over the full retained
+/// window, burn rates over the fast/slow tail windows.
+pub fn evaluate(
+    t: &SloTargets,
+    chain_slo_ms: f64,
+    full: &WindowStats,
+    fast: &WindowStats,
+    slow: &WindowStats,
+) -> Vec<SloEval> {
+    let p95_target = t.p95_target_ms.unwrap_or(chain_slo_ms);
+    let p95_burn = t.p95_burn_ms.unwrap_or(2.0 * p95_target);
+    let eval = |name, target, burn, dir, vf: f64, vfast: f64, vslow: f64, samples| SloEval {
+        name,
+        value: vf,
+        target,
+        burn_alert: burn,
+        direction: dir,
+        samples,
+        burn_fast: burn_rate(vfast, target, burn, dir),
+        burn_slow: burn_rate(vslow, target, burn, dir),
+    };
+    vec![
+        eval(
+            "request_success_rate",
+            t.success_rate_target,
+            t.success_rate_burn,
+            Direction::HigherIsBetter,
+            full.success_rate(),
+            fast.success_rate(),
+            slow.success_rate(),
+            full.completions,
+        ),
+        eval(
+            "e2e_p95_ms",
+            p95_target,
+            p95_burn,
+            Direction::LowerIsBetter,
+            full.p95_ms(),
+            fast.p95_ms(),
+            slow.p95_ms(),
+            full.completions,
+        ),
+        eval(
+            "container_utilization",
+            t.utilization_target,
+            t.utilization_burn,
+            Direction::HigherIsBetter,
+            full.utilization(t.utilization_target),
+            fast.utilization(t.utilization_target),
+            slow.utilization(t.utilization_target),
+            full.ticks,
+        ),
+        eval(
+            "cold_start_ratio",
+            t.cold_ratio_target,
+            t.cold_ratio_burn,
+            Direction::LowerIsBetter,
+            full.cold_ratio(),
+            fast.cold_ratio(),
+            slow.cold_ratio(),
+            full.completions,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burn_rate_anchors() {
+        // higher-is-better: 0 at target, 1 at burn_alert, linear between
+        let d = Direction::HigherIsBetter;
+        assert_eq!(burn_rate(0.95, 0.95, 0.90, d), 0.0);
+        assert!((burn_rate(0.90, 0.95, 0.90, d) - 1.0).abs() < 1e-9);
+        assert!((burn_rate(0.925, 0.95, 0.90, d) - 0.5).abs() < 1e-9);
+        assert!(burn_rate(0.80, 0.95, 0.90, d) > 1.0);
+        assert_eq!(burn_rate(1.0, 0.95, 0.90, d), 0.0); // over-attaining
+
+        // lower-is-better mirrors
+        let d = Direction::LowerIsBetter;
+        assert_eq!(burn_rate(0.10, 0.10, 0.25, d), 0.0);
+        assert!((burn_rate(0.25, 0.10, 0.25, d) - 1.0).abs() < 1e-9);
+        assert!(burn_rate(0.40, 0.10, 0.25, d) > 1.0);
+    }
+
+    #[test]
+    fn burn_rate_degenerate_thresholds_stay_finite() {
+        let b = burn_rate(0.5, 0.9, 0.9, Direction::HigherIsBetter);
+        assert!(b.is_finite() && b >= 0.0);
+        assert_eq!(burn_rate(f64::NAN, 0.9, 0.8, Direction::HigherIsBetter), 0.0);
+    }
+
+    #[test]
+    fn empty_window_is_vacuously_attaining() {
+        let w = WindowStats::default();
+        let evals = evaluate(&SloTargets::default(), 1000.0, &w, &w, &w);
+        assert_eq!(evals.len(), 4);
+        for e in &evals {
+            assert!(e.ok(), "{} not ok on empty window", e.name);
+            assert!(!e.alerting(), "{} alerting on empty window", e.name);
+            assert_eq!(e.samples, 0);
+        }
+    }
+
+    #[test]
+    fn contract_names_and_derived_p95_target() {
+        let w = WindowStats::default();
+        let evals = evaluate(&SloTargets::default(), 750.0, &w, &w, &w);
+        let names: Vec<&str> = evals.iter().map(|e| e.name).collect();
+        assert_eq!(
+            names,
+            [
+                "request_success_rate",
+                "e2e_p95_ms",
+                "container_utilization",
+                "cold_start_ratio"
+            ]
+        );
+        let p95 = &evals[1];
+        assert_eq!(p95.target, 750.0);
+        assert_eq!(p95.burn_alert, 1500.0);
+    }
+
+    #[test]
+    fn sustained_violation_alerts_on_both_windows() {
+        let mut row = BucketRow::new(0);
+        row.completions = 100;
+        row.slo_ok = 50; // 50% success, far past the 90% burn threshold
+        row.slo_violations = 50;
+        let w = WindowStats::from_rows(&[row]);
+        let evals = evaluate(&SloTargets::default(), 1000.0, &w, &w, &w);
+        let sr = &evals[0];
+        assert!(!sr.ok());
+        assert!(sr.burn_fast > 1.0 && sr.burn_slow > 1.0);
+        assert!(sr.alerting());
+    }
+}

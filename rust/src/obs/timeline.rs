@@ -1,0 +1,316 @@
+//! Minute-bucketed timeline rows and the fixed-shape latency histogram
+//! they embed.
+//!
+//! A [`BucketRow`] is one retained time bucket of telemetry: pure
+//! counters (arrivals, dispatches, spawns, retirements), completion
+//! outcomes (SLO ok/violated, cold-hit), a latency histogram for
+//! percentile estimation, and gauge *sums* sampled on monitor ticks
+//! (divide by `ticks` to get the bucket average). Rows are fixed-size —
+//! the only heap payload is the histogram's inline array — so the
+//! retention ring holds `retention_buckets` of them with a bounded,
+//! predictable footprint.
+//!
+//! Everything here is driven by **engine time** (virtual or monotonic
+//! µs) and is free of wall clocks, host randomness, and hash iteration,
+//! so a simulator-fed timeline is byte-deterministic from the seed.
+
+use crate::util::json::Json;
+use crate::util::{Micros, MICROS_PER_S};
+
+/// Number of geometric latency buckets. Bucket 0 holds `< 1 ms`;
+/// bucket `i` holds `[RATIO^(i-1), RATIO^i)` ms; the last bucket is
+/// open-ended.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Geometric growth ratio between adjacent latency buckets (~26%
+/// worst-case relative error on a percentile estimate, which is plenty
+/// for burn-rate alerting; exact max/mean are tracked beside the
+/// histogram).
+pub const HIST_RATIO: f64 = 1.3;
+
+/// Fixed-shape geometric latency histogram (milliseconds).
+///
+/// Mergeable across rows (bucket-wise sum), so SLO windows of any width
+/// are evaluated by folding row histograms together — no raw samples
+/// are retained.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist {
+            counts: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl LatencyHist {
+    /// Record one latency sample (ms). Non-finite samples count into
+    /// bucket 0 rather than poisoning percentiles with NaN.
+    pub fn observe(&mut self, ms: f64) {
+        let v = if ms.is_finite() { ms.max(0.0) } else { 0.0 };
+        let mut bound = 1.0;
+        let mut i = 0;
+        while i < HIST_BUCKETS - 1 && v >= bound {
+            bound *= HIST_RATIO;
+            i += 1;
+        }
+        self.counts[i] += 1;
+    }
+
+    /// Bucket-wise sum — used to fold rows into an evaluation window.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Estimate the `q`-th percentile (0..=100) as the upper bound of
+    /// the bucket where the cumulative count crosses the rank, capped at
+    /// the exactly-tracked window maximum. Returns 0 for an empty
+    /// histogram.
+    pub fn percentile(&self, q: f64, max_ms: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        let mut bound = 1.0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return if i == HIST_BUCKETS - 1 {
+                    max_ms
+                } else {
+                    bound.min(max_ms)
+                };
+            }
+            bound *= HIST_RATIO;
+        }
+        max_ms
+    }
+}
+
+/// One retained time bucket (`bucket_s` of engine time).
+///
+/// Counter fields are incremented by the collector taps; `*_sum` gauge
+/// fields accumulate one sample per monitor tick and are averaged over
+/// `ticks` when rendered.
+#[derive(Debug, Clone)]
+pub struct BucketRow {
+    /// Bucket start (engine µs, aligned to the bucket width).
+    pub start: Micros,
+    pub arrivals: u64,
+    pub dispatches: u64,
+    pub completions: u64,
+    /// Completions within their chain's end-to-end SLO.
+    pub slo_ok: u64,
+    pub slo_violations: u64,
+    /// Completions whose latency includes any cold-start wait.
+    pub cold_hit_jobs: u64,
+    pub spawns_cold: u64,
+    pub spawns_warm: u64,
+    pub retirements: u64,
+    /// Batched execution passes completed.
+    pub batches: u64,
+    /// Requests those passes carried (avg batch = batched_jobs/batches).
+    pub batched_jobs: u64,
+    /// End-to-end latency histogram over this bucket's completions.
+    pub hist: LatencyHist,
+    pub lat_sum_ms: f64,
+    pub lat_max_ms: f64,
+    /// Per-stage latency decomposition, summed over completions: pure
+    /// execution, cold-start wait, and batching/queuing delay.
+    pub exec_sum_ms: f64,
+    pub cold_sum_ms: f64,
+    pub batch_wait_sum_ms: f64,
+    /// Monitor-tick gauge samples accumulated into this bucket.
+    pub ticks: u64,
+    pub busy_cores_sum: f64,
+    pub alloc_cores_sum: f64,
+    pub containers_sum: u64,
+    pub warm_free_slots_sum: u64,
+    pub starting_slots_sum: u64,
+    pub queue_depth_sum: u64,
+}
+
+impl BucketRow {
+    pub fn new(start: Micros) -> BucketRow {
+        BucketRow {
+            start,
+            arrivals: 0,
+            dispatches: 0,
+            completions: 0,
+            slo_ok: 0,
+            slo_violations: 0,
+            cold_hit_jobs: 0,
+            spawns_cold: 0,
+            spawns_warm: 0,
+            retirements: 0,
+            batches: 0,
+            batched_jobs: 0,
+            hist: LatencyHist::default(),
+            lat_sum_ms: 0.0,
+            lat_max_ms: 0.0,
+            exec_sum_ms: 0.0,
+            cold_sum_ms: 0.0,
+            batch_wait_sum_ms: 0.0,
+            ticks: 0,
+            busy_cores_sum: 0.0,
+            alloc_cores_sum: 0.0,
+            containers_sum: 0,
+            warm_free_slots_sum: 0,
+            starting_slots_sum: 0,
+            queue_depth_sum: 0,
+        }
+    }
+
+    /// Busy-core fraction of allocated container capacity over the
+    /// bucket (0 when nothing was allocated).
+    pub fn utilization(&self) -> f64 {
+        if self.alloc_cores_sum <= 0.0 {
+            0.0
+        } else {
+            (self.busy_cores_sum / self.alloc_cores_sum).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Render one timeline row. Keys are identical for the sim and live
+    /// drivers — this is the row half of the shared observability
+    /// contract — and the writer is BTreeMap-backed, so the rendering is
+    /// byte-deterministic.
+    pub fn to_json(&self) -> Json {
+        let per = |sum: f64, n: u64| if n == 0 { 0.0 } else { sum / n as f64 };
+        Json::obj(vec![
+            (
+                "t_s",
+                Json::Num(self.start as f64 / MICROS_PER_S as f64),
+            ),
+            ("arrivals", Json::Num(self.arrivals as f64)),
+            ("dispatches", Json::Num(self.dispatches as f64)),
+            ("completions", Json::Num(self.completions as f64)),
+            ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            ("cold_hit_jobs", Json::Num(self.cold_hit_jobs as f64)),
+            ("spawns_cold", Json::Num(self.spawns_cold as f64)),
+            ("spawns_warm", Json::Num(self.spawns_warm as f64)),
+            ("retirements", Json::Num(self.retirements as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batched_jobs", Json::Num(self.batched_jobs as f64)),
+            (
+                "e2e_mean_ms",
+                Json::Num(per(self.lat_sum_ms, self.completions)),
+            ),
+            (
+                "e2e_p50_ms",
+                Json::Num(self.hist.percentile(50.0, self.lat_max_ms)),
+            ),
+            (
+                "e2e_p95_ms",
+                Json::Num(self.hist.percentile(95.0, self.lat_max_ms)),
+            ),
+            (
+                "e2e_p99_ms",
+                Json::Num(self.hist.percentile(99.0, self.lat_max_ms)),
+            ),
+            ("e2e_max_ms", Json::Num(self.lat_max_ms)),
+            (
+                "stage_exec_mean_ms",
+                Json::Num(per(self.exec_sum_ms, self.completions)),
+            ),
+            (
+                "stage_cold_mean_ms",
+                Json::Num(per(self.cold_sum_ms, self.completions)),
+            ),
+            (
+                "stage_batch_wait_mean_ms",
+                Json::Num(per(self.batch_wait_sum_ms, self.completions)),
+            ),
+            ("utilization", Json::Num(self.utilization())),
+            (
+                "containers",
+                Json::Num(per(self.containers_sum as f64, self.ticks)),
+            ),
+            (
+                "warm_free_slots",
+                Json::Num(per(self.warm_free_slots_sum as f64, self.ticks)),
+            ),
+            (
+                "starting_slots",
+                Json::Num(per(self.starting_slots_sum as f64, self.ticks)),
+            ),
+            (
+                "queue_depth",
+                Json::Num(per(self.queue_depth_sum as f64, self.ticks)),
+            ),
+            ("ticks", Json::Num(self.ticks as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_percentiles_bracket_samples() {
+        let mut h = LatencyHist::default();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.total(), 100);
+        let p50 = h.percentile(50.0, 100.0);
+        let p99 = h.percentile(99.0, 100.0);
+        // geometric buckets: estimates are upper bounds within one RATIO
+        assert!(p50 >= 50.0 && p50 <= 50.0 * HIST_RATIO, "p50 = {p50}");
+        assert!(p99 >= 99.0 && p99 <= 100.0, "p99 = {p99}");
+        assert!(p50 <= p99, "percentiles must be monotone");
+    }
+
+    #[test]
+    fn hist_empty_and_extremes() {
+        let mut h = LatencyHist::default();
+        assert_eq!(h.percentile(95.0, 0.0), 0.0);
+        h.observe(0.0); // sub-ms
+        h.observe(f64::NAN); // counted, not poisoning
+        h.observe(1e12); // open-ended last bucket, capped at max
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.percentile(100.0, 1e12), 1e12);
+    }
+
+    #[test]
+    fn hist_merge_equals_combined_observe() {
+        let (mut a, mut b, mut c) = (
+            LatencyHist::default(),
+            LatencyHist::default(),
+            LatencyHist::default(),
+        );
+        for i in 0..50 {
+            a.observe(i as f64 * 3.0);
+            c.observe(i as f64 * 3.0);
+        }
+        for i in 0..50 {
+            b.observe(1000.0 + i as f64);
+            c.observe(1000.0 + i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), c.total());
+        assert_eq!(a.percentile(95.0, 1049.0), c.percentile(95.0, 1049.0));
+    }
+
+    #[test]
+    fn row_json_guards_empty_denominators() {
+        let r = BucketRow::new(0);
+        let js = r.to_json().to_string();
+        assert!(js.contains("\"e2e_mean_ms\":0"));
+        assert!(js.contains("\"utilization\":0"));
+        assert!(!js.contains("NaN"));
+    }
+}

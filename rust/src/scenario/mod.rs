@@ -74,7 +74,7 @@
 pub mod expr;
 mod runner;
 
-pub use runner::run_scenario;
+pub use runner::{run_scenario, run_scenario_obs};
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -86,6 +86,7 @@ use crate::config::{ClusterConfig, Policy, RmConfig, TomlSection};
 use crate::experiments::TraceKind;
 use crate::metrics::Summary;
 use crate::model::Catalog;
+use crate::obs::ObsReport;
 use crate::trace::Trace;
 use crate::util::json::Json;
 use crate::util::{secs, Micros, MICROS_PER_S};
@@ -139,6 +140,10 @@ pub struct Cell {
 pub struct CellResult {
     pub cell: Cell,
     pub summary: Summary,
+    /// Virtual-time SLO timeline, populated only by
+    /// [`run_scenario_obs`] (the `--slo-timeline` path) — `None` keeps
+    /// the plain sweep free of collector overhead.
+    pub obs: Option<ObsReport>,
 }
 
 /// A parsed, validated scenario file. All fields are public so callers
@@ -522,6 +527,34 @@ pub fn results_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
         ("scenario", Json::Str(spec.name.clone())),
         ("duration_s", Json::Num(spec.duration_s as f64)),
         ("warmup_s", Json::Num(spec.warmup() as f64 / MICROS_PER_S as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Render an observability sweep (from [`run_scenario_obs`]) as one
+/// JSON document: per cell, the same `{history, summary}` timeline
+/// payload the live `/metrics` endpoints serve, keyed by the cell
+/// coordinates. Byte-deterministic for a fixed spec regardless of
+/// `--threads`, which `rust/tests/test_obs.rs` pins.
+pub fn results_obs_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
+    let cells = results
+        .iter()
+        .map(|r| {
+            let timeline = match &r.obs {
+                Some(report) => report.timeline_json(),
+                None => Json::Null,
+            };
+            Json::obj(vec![
+                ("trace", Json::Str(r.cell.trace.clone())),
+                ("mix", Json::Str(r.cell.mix.clone())),
+                ("policy", Json::Str(r.cell.policy.name().to_string())),
+                ("seed", Json::Num(r.cell.seed as f64)),
+                ("timeline", timeline),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::Str(spec.name.clone())),
         ("cells", Json::Arr(cells)),
     ])
 }

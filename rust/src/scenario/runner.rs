@@ -17,13 +17,19 @@ use anyhow::Result;
 use super::{Cell, CellResult, ScenarioSpec};
 use crate::config::{RmConfig, SystemConfig};
 use crate::model::Catalog;
-use crate::sim::{run_summarized, SimParams};
+use crate::obs::ObsConfig;
+use crate::sim::{run_summarized_obs, SimParams};
 use crate::trace::Trace;
 
 /// Run one cell of the matrix. Identical to `experiments::run_policy`
 /// modulo the spec's cluster/RM/warm-up knobs (the built-in grid
 /// scenarios pin that equivalence in `rust/tests/test_scenario.rs`).
-fn run_cell(spec: &ScenarioSpec, traces: &BTreeMap<String, Trace>, cell: &Cell) -> CellResult {
+fn run_cell(
+    spec: &ScenarioSpec,
+    traces: &BTreeMap<String, Trace>,
+    cell: &Cell,
+    obs: Option<ObsConfig>,
+) -> CellResult {
     let cat = Catalog::paper();
     let mut rm = RmConfig::paper(cell.policy);
     rm.apply_doc(&spec.rm_overrides)
@@ -47,10 +53,11 @@ fn run_cell(spec: &ScenarioSpec, traces: &BTreeMap<String, Trace>, cell: &Cell) 
         trace,
         drain_s: spec.drain_s,
     };
-    let (_, summary) = run_summarized(params, warmup);
+    let (_, summary, report) = run_summarized_obs(params, warmup, obs);
     CellResult {
         cell: cell.clone(),
         summary,
+        obs: report,
     }
 }
 
@@ -58,6 +65,19 @@ fn run_cell(spec: &ScenarioSpec, traces: &BTreeMap<String, Trace>, cell: &Cell) 
 /// (clamped to [1, #cells]; 1 = serial). Results come back in matrix
 /// order and are byte-identical for any thread count.
 pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> Result<Vec<CellResult>> {
+    run_scenario_obs(spec, threads, None)
+}
+
+/// [`run_scenario`] with an optional per-cell observability collector —
+/// the plumbing behind `fifer scenario run --slo-timeline`. Each cell's
+/// [`crate::obs::ObsReport`] is a pure function of its seed (virtual
+/// time, no clocks), so the sweep stays byte-identical across thread
+/// counts even with collection on.
+pub fn run_scenario_obs(
+    spec: &ScenarioSpec,
+    threads: usize,
+    obs: Option<ObsConfig>,
+) -> Result<Vec<CellResult>> {
     let traces = spec.build_traces()?;
     let cells = spec.cells();
     if cells.is_empty() {
@@ -65,7 +85,10 @@ pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> Result<Vec<CellResul
     }
     let threads = threads.clamp(1, cells.len());
     if threads == 1 {
-        return Ok(cells.iter().map(|c| run_cell(spec, &traces, c)).collect());
+        return Ok(cells
+            .iter()
+            .map(|c| run_cell(spec, &traces, c, obs))
+            .collect());
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<CellResult>>> = cells.iter().map(|_| Mutex::new(None)).collect();
@@ -76,7 +99,7 @@ pub fn run_scenario(spec: &ScenarioSpec, threads: usize) -> Result<Vec<CellResul
                 if i >= cells.len() {
                     break;
                 }
-                let r = run_cell(spec, &traces, &cells[i]);
+                let r = run_cell(spec, &traces, &cells[i], obs);
                 *slots[i].lock().unwrap() = Some(r);
             });
         }

@@ -47,7 +47,9 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -58,9 +60,10 @@ use crate::coordinator::policy::SchedulerPolicy;
 use crate::coordinator::state::BatchStart;
 use crate::metrics::{Recorder, Summary};
 use crate::model::{Catalog, ChainId, MsId};
+use crate::obs::{MetricsServer, ObsConfig, ObsReport, SharedSnapshot};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg;
-use crate::util::{secs, Micros};
+use crate::util::{secs, Micros, MICROS_PER_S};
 
 /// Executor implementation behind each live container.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -116,6 +119,15 @@ pub struct ServeParams {
     pub drain_s: f64,
     /// Run the synthetic executor backend (no artifacts/PJRT needed).
     pub synthetic: bool,
+    /// Bind address for the live `/metrics` endpoints (`None` = no
+    /// responder). See `docs/OBSERVABILITY.md`.
+    pub metrics_addr: Option<String>,
+    /// Graceful-shutdown flag, polled once per coordinator-loop
+    /// iteration: when it flips true the generator is cut off, in-flight
+    /// work drains (bounded by `drain_s`), and the final [`ServeReport`]
+    /// + last metrics snapshot are still emitted. `fifer serve` wires
+    /// this to SIGINT via [`sigint_flag`]; tests flip a leaked flag.
+    pub interrupt: Option<&'static AtomicBool>,
 }
 
 impl ServeParams {
@@ -128,8 +140,46 @@ impl ServeParams {
             executors: 12,
             drain_s: 15.0,
             synthetic: false,
+            metrics_addr: None,
+            interrupt: None,
         }
     }
+}
+
+/// Install a process-wide SIGINT handler (first Ctrl-C requests a
+/// graceful drain; the second aborts immediately) and return the flag it
+/// sets — pass it as [`ServeParams::interrupt`]. On non-Unix targets the
+/// flag exists but no handler is installed. Idempotent.
+#[cfg(unix)]
+pub fn sigint_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+    extern "C" fn on_sigint(_sig: i32) {
+        // async-signal-safe: atomics only; a second SIGINT hard-aborts
+        // for operators who really mean it
+        if HITS.fetch_add(1, Ordering::SeqCst) >= 1 {
+            std::process::abort();
+        }
+        FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        // libc's signal(2); std already links libc on unix, so this
+        // needs no external crate in the vendored-only build
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint);
+    }
+    &FLAG
+}
+
+/// Non-Unix fallback: a flag nothing sets (graceful shutdown via the
+/// flag still works when flipped programmatically).
+#[cfg(not(unix))]
+pub fn sigint_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    &FLAG
 }
 
 /// Results of a live serving run: the engine's [`Summary`] (and full
@@ -153,6 +203,12 @@ pub struct ServeReport {
     pub cold_compiles: u64,
     /// mean per-batch executor wall time by stage name
     pub stage_exec_ms: HashMap<&'static str, f64>,
+    /// Final observability snapshot (timeline + SLO contract) — the same
+    /// schema the `/metrics` endpoints serve and `--slo-timeline` emits.
+    pub obs: Option<ObsReport>,
+    /// The run was cut short by [`ServeParams::interrupt`] and drained
+    /// instead of running its full duration.
+    pub interrupted: bool,
 }
 
 /// Input dim per microservice — matches python/compile/model.MICROSERVICES.
@@ -410,7 +466,23 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
     let horizon = secs(p.duration_s);
     let end = horizon + secs(p.drain_s.max(0.0));
     let mut core = EngineCore::build(cfg, p.chains.clone(), p.rate, pol, driver);
+    // live runs always collect telemetry (one branch per decision point;
+    // the default ring is 24 h of minute buckets) — the /metrics
+    // responder is what's optional. Enabled before bootstrap so the
+    // initial provisioning spawns are counted, as in the sim driver.
+    core.enable_obs(ObsConfig::default());
     core.bootstrap(horizon, end);
+    let metrics: Option<(MetricsServer, SharedSnapshot)> = match &p.metrics_addr {
+        Some(addr) => {
+            let shared: SharedSnapshot = Arc::new(Mutex::new(None));
+            let server = MetricsServer::start(addr, shared.clone())?;
+            // publish a first (empty-timeline) snapshot so the endpoints
+            // answer 200 from the moment serve() is up
+            *shared.lock().expect("metrics snapshot lock") = core.obs_report();
+            Some((server, shared))
+        }
+        None => None,
+    };
 
     // --- load generator -------------------------------------------------
     {
@@ -455,11 +527,23 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
     let mut batched_jobs = 0u64;
     let mut cold_compiles = 0u64;
     let mut stage_exec: HashMap<&'static str, (f64, u64)> = HashMap::new();
+    let mut interrupted = false;
+    // hard stop for the whole run; an interrupt pulls it in to "now +
+    // drain window" so in-flight work gets a bounded chance to finish
+    let mut stop_at = end;
+    let mut last_pub: Micros = 0;
 
     while let Ok(msg) = rx.recv() {
         let t = start.elapsed().as_micros() as Micros;
+        if !interrupted && p.interrupt.is_some_and(|f| f.load(Ordering::SeqCst)) {
+            interrupted = true;
+            gen_done = true; // stop waiting on the generator
+            stop_at = (t + secs(p.drain_s.max(0.0))).min(end);
+        }
         match msg {
-            Msg::Arrival { chain } => core.arrival_at(chain, t),
+            // an interrupted run sheds arrivals still in the channel
+            Msg::Arrival { chain } if !interrupted => core.arrival_at(chain, t),
+            Msg::Arrival { .. } => {}
             Msg::SpawnReady { cid } => core.spawn_completed(cid, t),
             Msg::ExecDone {
                 cid,
@@ -486,8 +570,15 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
                 break;
             }
         }
+        // publish a fresh snapshot at most once per second of engine time
+        if let Some((_, shared)) = &metrics {
+            if t.saturating_sub(last_pub) >= MICROS_PER_S {
+                last_pub = t;
+                *shared.lock().expect("metrics snapshot lock") = core.obs_report();
+            }
+        }
         let in_flight = core.jobs_arrived() - core.jobs_completed();
-        if (gen_done && in_flight == 0) || t > end {
+        if (gen_done && in_flight == 0) || t > stop_at {
             break;
         }
     }
@@ -497,10 +588,16 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
     // — unless it is bailing out, where firing more scaling plans would
     // only spawn doomed executors and delay the error
     if fail.is_none() {
-        core.advance_to(end);
+        core.advance_to(stop_at);
     }
-    let (recorder, driver) = core.into_parts();
+    let (recorder, driver, obs) = core.into_parts_obs();
     driver.shutdown();
+    // emit the last snapshot (covering the drain) before the responder
+    // goes down, then stop it
+    if let Some((server, shared)) = metrics {
+        *shared.lock().expect("metrics snapshot lock") = obs.clone();
+        server.stop();
+    }
     if let Some(err) = fail {
         anyhow::bail!("live executor failed: {err}");
     }
@@ -527,6 +624,8 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
         duration_s,
         summary,
         recorder,
+        obs,
+        interrupted,
     })
 }
 
@@ -567,6 +666,36 @@ mod tests {
             r.summary.jobs,
             "recorder/summary consistency"
         );
+    }
+
+    #[test]
+    fn interrupt_flag_drains_and_still_reports() {
+        // graceful shutdown: flip the interrupt flag mid-run (tests use a
+        // leaked flag; `fifer serve` wires the same field to SIGINT) and
+        // the run must cut off arrivals, drain, and still emit the full
+        // report + final observability snapshot
+        let flag: &'static AtomicBool = Box::leak(Box::new(AtomicBool::new(false)));
+        let mut p = ServeParams::quick(20.0, 30.0); // nominally 30 s...
+        p.cfg.rm = crate::config::RmConfig::paper(Policy::Bline);
+        p.synthetic = true;
+        p.drain_s = 10.0;
+        p.cfg.rm.monitor_interval_s = 1.0;
+        p.cfg.rm.sample_window_s = 1.0;
+        p.interrupt = Some(flag);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_secs(2)); // ...interrupted at ~2 s
+            flag.store(true, Ordering::SeqCst);
+        });
+        let r = serve(p).unwrap();
+        assert!(r.interrupted, "interrupt flag must be reported");
+        assert!(
+            r.duration_s < 25.0,
+            "interrupted run must stop early, ran {} s",
+            r.duration_s
+        );
+        let obs = r.obs.expect("live runs always collect telemetry");
+        assert!(!obs.rows.is_empty(), "final snapshot has timeline rows");
+        assert_eq!(obs.contract().len(), 4, "full SLO contract present");
     }
 
     // End-to-end PJRT serve() tests require artifacts and live in

@@ -31,6 +31,7 @@ use crate::coordinator::policy::SchedulerPolicy;
 use crate::coordinator::state::BatchStart;
 use crate::metrics::Recorder;
 use crate::model::{Catalog, ChainId, MsId};
+use crate::obs::{ObsConfig, ObsReport};
 use crate::trace::Trace;
 use crate::util::{secs, Micros};
 
@@ -103,7 +104,23 @@ impl EngineCore<VirtualDriver> {
     /// Run the full simulation, verifying conservation and store
     /// invariants every `check_every` events (0 = never). Used by the
     /// policy-conformance suite to certify arbitrary policies.
-    pub fn run_checked(mut self, check_every: u64) -> Result<Recorder, String> {
+    pub fn run_checked(self, check_every: u64) -> Result<Recorder, String> {
+        self.run_collecting(check_every, None).map(|(rec, _)| rec)
+    }
+
+    /// [`run_checked`](Self::run_checked) with an optional observability
+    /// collector: when `obs` is `Some`, the returned [`ObsReport`]
+    /// carries the virtual-time SLO timeline in the exact schema the
+    /// live `/metrics` endpoints serve — one contract, two drivers —
+    /// and, like everything else here, is a pure function of the seed.
+    pub fn run_collecting(
+        mut self,
+        check_every: u64,
+        obs: Option<ObsConfig>,
+    ) -> Result<(Recorder, Option<ObsReport>), String> {
+        if let Some(cfg) = obs {
+            self.enable_obs(cfg);
+        }
         let horizon = secs(self.driver.trace.duration_s() as f64);
         let end = horizon + secs(self.driver.drain_s);
         // seed arrivals (heap + job table sized once, up front)
@@ -118,8 +135,8 @@ impl EngineCore<VirtualDriver> {
         // initial provisioning + periodic events, then drain the heap
         self.bootstrap(horizon, end);
         self.run_events(check_every)?;
-        let (recorder, _driver) = self.into_parts();
-        Ok(recorder)
+        let (recorder, _driver, report) = self.into_parts_obs();
+        Ok((recorder, report))
     }
 }
 
@@ -134,10 +151,23 @@ pub fn run_sim(p: SimParams) -> (Recorder, crate::metrics::Summary) {
 /// scenario sweep runner, so the steady-state cutoff is applied the same
 /// way everywhere.
 pub fn run_summarized(p: SimParams, warmup: Micros) -> (Recorder, crate::metrics::Summary) {
-    let cat = Catalog::paper();
-    let rec = Engine::new(p).run();
-    let sum = rec.summarize_after(&cat, warmup);
+    let (rec, sum, _) = run_summarized_obs(p, warmup, None);
     (rec, sum)
+}
+
+/// [`run_summarized`] plus an optional virtual-time observability
+/// timeline — the plumbing behind `fifer scenario run --slo-timeline`.
+pub fn run_summarized_obs(
+    p: SimParams,
+    warmup: Micros,
+    obs: Option<ObsConfig>,
+) -> (Recorder, crate::metrics::Summary, Option<ObsReport>) {
+    let cat = Catalog::paper();
+    let (rec, report) = Engine::new(p)
+        .run_collecting(0, obs)
+        .expect("run without invariant checks cannot fail");
+    let sum = rec.summarize_after(&cat, warmup);
+    (rec, sum, report)
 }
 
 /// Run one simulation under an arbitrary [`SchedulerPolicy`] — the

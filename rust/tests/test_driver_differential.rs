@@ -15,9 +15,11 @@
 
 use fifer::config::{ClusterConfig, Policy, SystemConfig};
 use fifer::model::Catalog;
+use fifer::obs::ObsConfig;
 use fifer::server::{serve, ServeParams};
 use fifer::sim::{run_sim, Engine, SimParams};
 use fifer::trace::Trace;
+use fifer::util::json::Json;
 use fifer::util::secs;
 
 /// Live container slots == sim cluster capacity (1 node x SLOTS).
@@ -192,6 +194,93 @@ fn advance_to_fires_due_events_once_and_never_moves_time_backwards() {
         eng.recorder.jobs[0].arrival,
         secs(1.0),
         "stale timestamp must clamp to engine time"
+    );
+}
+
+#[test]
+fn obs_timeline_schema_is_driver_agnostic() {
+    // The observability plane's core claim: both drivers emit the SAME
+    // timeline/contract schema — keys, SLO names, window structure —
+    // with only the counted quantities subject to timing tolerance.
+    fn keys(j: &Json) -> Vec<String> {
+        match j {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            other => panic!("expected a JSON object, got {other:?}"),
+        }
+    }
+    fn field<'a>(j: &'a Json, name: &str) -> &'a Json {
+        match j {
+            Json::Obj(m) => m.get(name).unwrap_or_else(|| panic!("missing {name:?}")),
+            other => panic!("expected a JSON object, got {other:?}"),
+        }
+    }
+
+    let cat = Catalog::paper();
+    let chains = cat.mix("Heavy").unwrap().chains.clone();
+
+    let (_, report) = Engine::new(SimParams {
+        cfg: config(Policy::Fifer),
+        chains: chains.clone(),
+        trace: Trace::poisson(RATE, DURATION_S),
+        drain_s: DRAIN_S,
+    })
+    .run_collecting(0, Some(ObsConfig::default()))
+    .expect("sim run");
+    let sim = report.expect("collector was enabled");
+
+    let mut p = ServeParams::quick(RATE, DURATION_S as f64);
+    p.cfg = config(Policy::Fifer);
+    p.chains = chains;
+    p.executors = SLOTS;
+    p.drain_s = DRAIN_S;
+    p.synthetic = true;
+    let live = serve(p)
+        .expect("synthetic live run")
+        .obs
+        .expect("serve always collects");
+
+    assert!(!sim.rows.is_empty(), "sim produced no timeline rows");
+    assert!(!live.rows.is_empty(), "live produced no timeline rows");
+
+    // identical row schema and summary schema (BTreeMap-sorted key sets)
+    assert_eq!(keys(&sim.rows[0].to_json()), keys(&live.rows[0].to_json()));
+    let (ss, ls) = (sim.summary_json(), live.summary_json());
+    assert_eq!(keys(&ss), keys(&ls));
+    assert_eq!(keys(field(&ss, "slo")), keys(field(&ls, "slo")));
+    assert_eq!(
+        keys(field(&ss, "slo")),
+        vec![
+            "cold_start_ratio",
+            "container_utilization",
+            "e2e_p95_ms",
+            "request_success_rate",
+        ]
+    );
+
+    // same contract objectives in the same order
+    let names: Vec<&str> = sim.contract().iter().map(|e| e.name).collect();
+    let live_names: Vec<&str> = live.contract().iter().map(|e| e.name).collect();
+    assert_eq!(names, live_names);
+
+    // the counted quantities track the same workload within the live
+    // path's timing band
+    assert!(
+        close(sim.totals.completions, live.totals.completions, 8),
+        "completions diverge (sim {}, live {})",
+        sim.totals.completions,
+        live.totals.completions
+    );
+    assert!(
+        close(
+            sim.totals.spawns_cold + sim.totals.spawns_warm,
+            live.totals.spawns_cold + live.totals.spawns_warm,
+            8
+        ),
+        "spawns diverge (sim {}/{}, live {}/{})",
+        sim.totals.spawns_cold,
+        sim.totals.spawns_warm,
+        live.totals.spawns_cold,
+        live.totals.spawns_warm
     );
 }
 

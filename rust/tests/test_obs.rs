@@ -1,0 +1,161 @@
+//! Observability-plane integration: byte-deterministic `--slo-timeline`
+//! output from the sim driver, the SLO contract shape, and the
+//! dependency-free `/metrics` HTTP responder end to end.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use fifer::config::{Policy, SystemConfig};
+use fifer::model::Catalog;
+use fifer::obs::{MetricsServer, ObsConfig, ObsReport, SharedSnapshot};
+use fifer::scenario::{self, ScenarioSpec};
+use fifer::sim::{run_summarized_obs, SimParams};
+use fifer::trace::Trace;
+
+/// A small pure-generator sweep (no artifact files involved, so the
+/// traces are a function of the spec alone): 2 policies x 2 seeds.
+const SPEC: &str = r#"
+[scenario]
+name = "obs-pin"
+duration_s = 60
+drain_s = 10
+seeds = [7, 42]
+traces = ["t"]
+mixes = ["Heavy"]
+policies = ["Bline", "Fifer"]
+
+[trace.t]
+expr = "poisson(rate=20)"
+"#;
+
+fn sim_report() -> ObsReport {
+    let cat = Catalog::paper();
+    let (_, _, report) = run_summarized_obs(
+        SimParams {
+            cfg: SystemConfig::prototype(Policy::Fifer),
+            chains: cat.mix("Heavy").unwrap().chains.clone(),
+            trace: Trace::poisson(20.0, 30),
+            drain_s: 10.0,
+        },
+        0,
+        Some(ObsConfig::default()),
+    );
+    report.expect("collector was enabled")
+}
+
+#[test]
+fn slo_timeline_is_byte_identical_across_runs_and_thread_counts() {
+    let spec = ScenarioSpec::parse(SPEC).unwrap();
+    let obs = Some(ObsConfig::default());
+    let render = |threads| {
+        let results = scenario::run_scenario_obs(&spec, threads, obs).unwrap();
+        assert!(results.iter().all(|r| r.obs.is_some()));
+        scenario::results_obs_json(&spec, &results).to_string()
+    };
+    let serial = render(1);
+    assert_eq!(serial, render(1), "run-to-run divergence");
+    assert_eq!(serial, render(4), "thread-count divergence");
+    assert!(serial.contains("\"request_success_rate\""));
+    assert!(serial.contains("\"e2e_p95_ms\""));
+}
+
+#[test]
+fn plain_sweep_carries_no_timeline() {
+    let spec = ScenarioSpec::parse(SPEC).unwrap();
+    let results = scenario::run_scenario(&spec, 2).unwrap();
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| r.obs.is_none()));
+}
+
+#[test]
+fn sim_contract_has_all_four_slos() {
+    let report = sim_report();
+    let evals = report.contract();
+    let names: Vec<&str> = evals.iter().map(|e| e.name).collect();
+    assert_eq!(
+        names,
+        vec![
+            "request_success_rate",
+            "e2e_p95_ms",
+            "container_utilization",
+            "cold_start_ratio",
+        ]
+    );
+    for e in &evals {
+        assert!(e.value.is_finite(), "{}: non-finite value", e.name);
+        assert!(e.target.is_finite(), "{}: non-finite target", e.name);
+        assert!(e.burn_fast >= 0.0 && e.burn_slow >= 0.0, "{}", e.name);
+    }
+    // a 20 req/s Poisson run under Fifer completes work and stays
+    // overwhelmingly within SLO
+    assert!(report.totals.completions > 100);
+    assert!(evals[0].value > 0.5, "success rate {}", evals[0].value);
+}
+
+// ---------------------------------------------------------------------
+// HTTP responder
+// ---------------------------------------------------------------------
+
+/// Minimal HTTP/1.1 GET over a raw socket (the responder closes the
+/// connection after each response, so read-to-end terminates).
+fn get(addr: SocketAddr, target: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect metrics responder");
+    write!(s, "GET {target} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("status code");
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (code, body)
+}
+
+#[test]
+fn metrics_endpoints_end_to_end() {
+    let shared: SharedSnapshot = Arc::new(Mutex::new(None));
+    let srv = MetricsServer::start("127.0.0.1:0", shared.clone()).expect("bind");
+    let addr = srv.local_addr();
+
+    // before the first publish every route answers 503
+    let (code, body) = get(addr, "/metrics");
+    assert_eq!(code, 503, "body {body}");
+    assert!(body.contains("no snapshot yet"));
+
+    let report = sim_report();
+    *shared.lock().unwrap() = Some(report.clone());
+
+    // each route serves exactly the corresponding render — same bytes
+    let (code, body) = get(addr, "/metrics");
+    assert_eq!(code, 200);
+    assert_eq!(body, report.metrics_json().to_string());
+
+    let (code, body) = get(addr, "/metrics/summary");
+    assert_eq!(code, 200);
+    assert_eq!(body, report.summary_json().to_string());
+    assert!(body.contains("\"slo\""));
+
+    let (code, body) = get(addr, "/metrics/history?minutes=5");
+    assert_eq!(code, 200);
+    assert_eq!(body, report.history_json(Some(5)).to_string());
+
+    // error paths: unknown route, malformed minutes, non-GET
+    let (code, _) = get(addr, "/nope");
+    assert_eq!(code, 404);
+    let (code, _) = get(addr, "/metrics/history?minutes=abc");
+    assert_eq!(code, 400);
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+
+    srv.stop();
+}
