@@ -59,7 +59,7 @@ use crate::coordinator::{lsf_key, scaling, slack::SlackPlan};
 use crate::energy::ClusterEnergy;
 use crate::metrics::{JobRecord, Recorder, StageRecord};
 use crate::model::{Catalog, ChainId, MsId};
-use crate::obs::{Collector, Gauges, ObsConfig, ObsReport};
+use crate::obs::{Collector, Gauges, ObsConfig, ObsReport, StageSpan};
 use crate::predictor::Predictor;
 use crate::util::rng::Pcg;
 use crate::util::{ms, secs, to_ms, Micros, MICROS_PER_S};
@@ -333,7 +333,12 @@ impl<D: Driver> EngineCore<D> {
             .map(|&c| self.cat.chains[c].slo_ms)
             .fold(f64::INFINITY, f64::min);
         let slo_ms = if slo_ms.is_finite() { slo_ms } else { 1000.0 };
-        self.obs = Some(Box::new(Collector::new(cfg, slo_ms)));
+        // the trace sampler hashes the engine seed so sampled job sets —
+        // and therefore --trace-out bytes — are reproducible; the policy
+        // name is stamped on every span
+        let seed = self.cfg.seed;
+        let policy = self.policy.as_ref().map_or("?", |p| p.name());
+        self.obs = Some(Box::new(Collector::new(cfg, slo_ms, seed, policy)));
     }
 
     /// Snapshot the collector at the current engine time (`None` when
@@ -588,8 +593,11 @@ impl<D: Driver> EngineCore<D> {
         let sec_in_window = ((self.now - self.window_start) / MICROS_PER_S) as usize;
         let bucket = sec_in_window.min(self.window_counts.len() - 1);
         self.window_counts[bucket] += 1;
+        let chain_name = self.cat.chains[chain].name;
         if let Some(o) = self.obs.as_deref_mut() {
             o.on_arrival(self.now);
+            // head-based sampling decision happens here, once per job
+            o.on_trace_start(job_id, self.now, chain_name);
         }
         self.enqueue_stage(job_id, self.now);
     }
@@ -646,7 +654,13 @@ impl<D: Driver> EngineCore<D> {
         }
         self.decision_probe += 1;
         if let Some(t0) = t0 {
-            self.recorder.decision_ns.push(t0.elapsed().as_nanos() as u64);
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.recorder.decision_ns.push(ns);
+            // same sample feeds the collector's decision-latency
+            // histogram (p50/p95/p99 in /metrics/summary)
+            if let Some(o) = self.obs.as_deref_mut() {
+                o.on_decision_latency(ns);
+            }
         }
     }
 
@@ -697,6 +711,18 @@ impl<D: Driver> EngineCore<D> {
         if let Some(o) = self.obs.as_deref_mut() {
             o.on_batch(self.now, batch_jobs.len() as u64);
         }
+        // span tags shared by every job of the finished batch: the
+        // container's placement and cold/warm identity (captured now,
+        // while the container is certainly still alive) plus the stage
+        // name. `None` keeps the whole per-job emission branch-free
+        // when tracing is off.
+        let span_src = match self.obs.as_deref() {
+            Some(o) if o.tracing() => self
+                .store
+                .get(cid)
+                .map(|c| (c.node, c.started_cold, self.cat.microservices[ms_id].name)),
+            _ => None,
+        };
 
         // Kick off the next batch immediately: the container must be Busy
         // again *before* job advancement below can trigger spawns (which
@@ -713,6 +739,28 @@ impl<D: Driver> EngineCore<D> {
 
         // finalize stage records and advance every job of the batch
         for &job_id in &batch_jobs {
+            if let Some((node, cold, stage)) = span_src {
+                let (enqueued, exec_start, cold_wait) = {
+                    let j = &self.jobs[job_id as usize];
+                    (j.cur_enqueued, j.cur_exec_start, j.cur_cold_wait)
+                };
+                if let Some(o) = self.obs.as_deref_mut() {
+                    o.on_stage_span(
+                        job_id,
+                        StageSpan {
+                            stage,
+                            enqueued,
+                            exec_start,
+                            exec_end: self.now,
+                            cold_wait,
+                            container: cid,
+                            node,
+                            batch: batch_jobs.len(),
+                            cold,
+                        },
+                    );
+                }
+            }
             let advance = {
                 let j = &mut self.jobs[job_id as usize];
                 j.stages.push(StageRecord {
@@ -742,7 +790,7 @@ impl<D: Driver> EngineCore<D> {
                     };
                     if let Some(o) = self.obs.as_deref_mut() {
                         let slo_ok = to_ms(rec.response()) <= self.cat.chains[rec.chain].slo_ms;
-                        o.on_job_complete(self.now, &rec, slo_ok);
+                        o.on_job_complete(self.now, job_id, &rec, slo_ok);
                     }
                     self.recorder.job(rec);
                 }
@@ -804,11 +852,19 @@ impl<D: Driver> EngineCore<D> {
     }
 
     fn run_monitor(&mut self) {
+        // host-time the scaling decision only when the probe is armed,
+        // so deterministic runs record deterministic zero durations
+        let t0 = self.probe_decisions.then(std::time::Instant::now);
         let forecast = self.clamped_forecast();
         let mut pol = self.policy.take().expect("policy present");
         let plan = pol.on_monitor(&self.view(forecast));
         self.policy = Some(pol);
+        let spawns_planned = plan.total() as u64;
         self.execute_plan(plan);
+        if let Some(o) = self.obs.as_deref_mut() {
+            let dur_ns = t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+            o.on_monitor_decision(self.now, spawns_planned, dur_ns);
+        }
     }
 
     fn run_scan(&mut self) {

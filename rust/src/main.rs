@@ -85,6 +85,14 @@ fn run() -> Result<()> {
                             "--metrics-addr <ip:port>",
                             "serve: expose live /metrics endpoints (docs/OBSERVABILITY.md)",
                         ),
+                        (
+                            "--trace-sample <1-in-N>",
+                            "serve/scenario: per-request span sampling rate (default 1-in-1)",
+                        ),
+                        (
+                            "--trace-out <file>",
+                            "scenario run: export sampled span trees as Chrome trace JSON",
+                        ),
                     ],
                 )
             );
@@ -96,8 +104,22 @@ fn run() -> Result<()> {
 const SCENARIO_USAGE: &str = "usage:
   fifer scenario run <file|builtin> [--threads N] [--json out.json] [--csv out.csv]
                      [--slo-timeline out.json]
+                     [--trace-out spans.json] [--trace-sample 1-in-N]
   fifer scenario list              list built-in scenarios
   fifer scenario show <builtin>    print a built-in scenario file";
+
+/// Parse `--trace-sample` as `N` or `1-in-N` (N >= 1).
+fn parse_trace_sample(s: &str) -> Result<u64> {
+    let n: u64 = s
+        .strip_prefix("1-in-")
+        .unwrap_or(s)
+        .parse()
+        .map_err(|_| anyhow!("--trace-sample wants N or 1-in-N, got {s:?}"))?;
+    if n == 0 {
+        return Err(anyhow!("--trace-sample must be at least 1"));
+    }
+    Ok(n)
+}
 
 fn cmd_scenario(args: &Args) -> Result<()> {
     match args.pos(0).unwrap_or("help") {
@@ -122,10 +144,25 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 spec.seeds.len(),
                 threads.clamp(1, cells.len().max(1)),
             );
-            // timeline collection is opt-in: the plain sweep stays
-            // collector-free, --slo-timeline turns it on everywhere
+            // observability collection is opt-in: the plain sweep stays
+            // collector-free; --slo-timeline and/or --trace-out turn the
+            // collector on everywhere, with span recording only when a
+            // trace export was requested (default: every request —
+            // sweeps are short; thin with --trace-sample 1-in-N)
             let timeline_out = args.get("slo-timeline");
-            let obs = timeline_out.map(|_| fifer::obs::ObsConfig::default());
+            let trace_out = args.get("trace-out");
+            let trace_sample = match args.get("trace-sample") {
+                Some(s) => parse_trace_sample(s)?,
+                None => 1,
+            };
+            let obs = (timeline_out.is_some() || trace_out.is_some()).then(|| {
+                fifer::obs::ObsConfig {
+                    trace_sample: if trace_out.is_some() { trace_sample } else { 0 },
+                    // exports want the full run, not a live ring
+                    trace_keep: usize::MAX,
+                    ..fifer::obs::ObsConfig::default()
+                }
+            });
             let results = scenario::run_scenario_obs(&spec, threads, obs)?;
             let mut t = Table::new(&[
                 "trace", "mix", "policy", "seed", "jobs", "viol%", "median ms", "p99 ms",
@@ -158,6 +195,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if let Some(p) = timeline_out {
                 std::fs::write(p, scenario::results_obs_json(&spec, &results).to_string())?;
                 println!("wrote {p}");
+            }
+            if let Some(p) = trace_out {
+                std::fs::write(p, scenario::results_trace_json(&spec, &results).to_string())?;
+                println!("wrote {p} (load in chrome://tracing or Perfetto)");
             }
             Ok(())
         }
@@ -223,11 +264,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     p.cfg.rm.monitor_interval_s = args.f64_or("monitor", p.cfg.rm.monitor_interval_s)?;
     p.cfg.artifacts_dir = args.str_or("artifacts", "artifacts");
     p.metrics_addr = args.get("metrics-addr").map(|s| s.to_string());
+    // span recording is on by default live (sample 1-in-1 into a
+    // bounded ring); --trace-sample 1-in-N thins it, 0 is rejected
+    if let Some(s) = args.get("trace-sample") {
+        p.trace_sample = parse_trace_sample(s)?;
+    }
     // Ctrl-C drains in-flight jobs and still emits the final report
     // (a second Ctrl-C aborts immediately)
     p.interrupt = Some(fifer::server::sigint_flag());
     if let Some(addr) = &p.metrics_addr {
-        println!("metrics: http://{addr}/metrics (also /metrics/summary, /metrics/history)");
+        println!(
+            "metrics: http://{addr}/metrics (also /metrics/summary, \
+             /metrics/history, /metrics/prom, /traces)"
+        );
     }
     println!(
         "live serve: rate={} req/s, {}s (+{}s drain), policy={} (batching={}), \

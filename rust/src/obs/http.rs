@@ -1,22 +1,27 @@
 //! Dependency-free HTTP/1.1 responder for the metrics endpoints.
 //!
 //! A single accept-loop thread over `std::net::TcpListener` (the build
-//! is vendored-only — no hyper/axum) serving read-only JSON:
+//! is vendored-only — no hyper/axum) serving read-only snapshots:
 //!
 //! | endpoint | payload |
 //! |----------|---------|
 //! | `GET /metrics` | current snapshot: totals + current bucket row |
 //! | `GET /metrics/summary` | the SLO contract block |
 //! | `GET /metrics/history?minutes=N` | last N minutes of timeline rows (default 60) |
+//! | `GET /metrics/prom` | the same snapshot in Prometheus text exposition |
+//! | `GET /traces?last=N` | last N sampled request span trees as Chrome trace-event JSON (default 100) |
 //!
 //! The responder never touches the engine: the serve loop publishes
 //! [`ObsReport`] snapshots into a [`SharedSnapshot`] slot (at most once
 //! per engine second) and the responder renders whatever snapshot is
 //! current. Before the first publish every endpoint answers
 //! `503 {"error":"no snapshot yet"}`. Requests are handled serially —
-//! this is a scrape target, not a serving path.
+//! this is a scrape target, not a serving path — so misbehaving
+//! clients are cut off early: a connection that sends no complete
+//! request line within the 2 s read timeout gets `408`, and a request
+//! line that overflows the 2 KiB head buffer gets `431`.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -25,11 +30,16 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::obs::ObsReport;
+use crate::obs::{prom, ObsReport};
 
 /// The publish slot shared between the serve loop (writer) and the
 /// responder thread (reader).
 pub type SharedSnapshot = Arc<Mutex<Option<ObsReport>>>;
+
+/// Default `last=N` for `GET /traces`.
+const DEFAULT_TRACES_LAST: usize = 100;
+
+const JSON: &str = "application/json";
 
 /// Handle to a running metrics responder thread.
 pub struct MetricsServer {
@@ -101,17 +111,39 @@ fn handle_conn(mut stream: TcpStream, shared: &SharedSnapshot) -> std::io::Resul
     stream.set_write_timeout(Some(Duration::from_secs(2)))?;
     // Read until the end of the request line; headers and body are
     // irrelevant for GET-only routes (the response closes the
-    // connection, so unread bytes are simply discarded).
+    // connection, so unread bytes are simply discarded). Slow and
+    // oversized clients are answered — not just dropped — so a curl
+    // stuck in a middlebox sees *why* it was cut off.
     let mut buf = [0u8; 2048];
     let mut n = 0;
     loop {
-        let r = stream.read(&mut buf[n..])?;
-        if r == 0 {
-            break;
-        }
-        n += r;
-        if buf[..n].windows(2).any(|w| w == b"\r\n") || n == buf.len() {
-            break;
+        match stream.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(r) => {
+                n += r;
+                if buf[..n].windows(2).any(|w| w == b"\r\n") {
+                    break;
+                }
+                if n == buf.len() {
+                    return respond(
+                        &mut stream,
+                        431,
+                        "Request Header Fields Too Large",
+                        JSON,
+                        "{\"error\":\"request line too long\"}",
+                    );
+                }
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return respond(
+                    &mut stream,
+                    408,
+                    "Request Timeout",
+                    JSON,
+                    "{\"error\":\"request timeout\"}",
+                );
+            }
+            Err(e) => return Err(e),
         }
     }
     let head = String::from_utf8_lossy(&buf[..n]);
@@ -119,13 +151,22 @@ fn handle_conn(mut stream: TcpStream, shared: &SharedSnapshot) -> std::io::Resul
     let mut parts = line.split_whitespace();
     let (method, target) = match (parts.next(), parts.next()) {
         (Some(m), Some(t)) => (m, t),
-        _ => return respond(&mut stream, 400, "Bad Request", "{\"error\":\"bad request\"}"),
+        _ => {
+            return respond(
+                &mut stream,
+                400,
+                "Bad Request",
+                JSON,
+                "{\"error\":\"bad request\"}",
+            )
+        }
     };
     if method != "GET" {
         return respond(
             &mut stream,
             405,
             "Method Not Allowed",
+            JSON,
             "{\"error\":\"GET only\"}",
         );
     }
@@ -134,15 +175,33 @@ fn handle_conn(mut stream: TcpStream, shared: &SharedSnapshot) -> std::io::Resul
         None => (target, ""),
     };
 
+    // validate query parameters before the snapshot check so malformed
+    // requests get 400 even pre-publish
     let minutes = match path {
-        "/metrics/history" => match parse_minutes(query) {
+        "/metrics/history" => match parse_count(query, "minutes") {
             Ok(m) => m,
             Err(()) => {
                 return respond(
                     &mut stream,
                     400,
                     "Bad Request",
-                    "{\"error\":\"minutes must be a non-negative integer\"}",
+                    JSON,
+                    "{\"error\":\"minutes must be a positive integer\"}",
+                )
+            }
+        },
+        _ => None,
+    };
+    let last = match path {
+        "/traces" => match parse_count(query, "last") {
+            Ok(l) => l,
+            Err(()) => {
+                return respond(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    JSON,
+                    "{\"error\":\"last must be a positive integer\"}",
                 )
             }
         },
@@ -155,50 +214,95 @@ fn handle_conn(mut stream: TcpStream, shared: &SharedSnapshot) -> std::io::Resul
             &mut stream,
             503,
             "Service Unavailable",
+            JSON,
             "{\"error\":\"no snapshot yet\"}",
         );
     };
     let body = match path {
-        "/metrics" => report.metrics_json(),
-        "/metrics/summary" => report.summary_json(),
+        "/metrics" => report.metrics_json().to_string(),
+        "/metrics/summary" => report.summary_json().to_string(),
         // default window: the last hour of rows
-        "/metrics/history" => report.history_json(Some(minutes.unwrap_or(60))),
-        _ => return respond(&mut stream, 404, "Not Found", "{\"error\":\"not found\"}"),
+        "/metrics/history" => report.history_json(Some(minutes.unwrap_or(60))).to_string(),
+        "/metrics/prom" => {
+            return respond(&mut stream, 200, "OK", prom::CONTENT_TYPE, &prom::render(&report))
+        }
+        "/traces" => {
+            let last = last.map_or(DEFAULT_TRACES_LAST, |l| l as usize);
+            report.trace_json(Some(last)).to_string()
+        }
+        _ => {
+            return respond(
+                &mut stream,
+                404,
+                "Not Found",
+                JSON,
+                "{\"error\":\"not found\"}",
+            )
+        }
     };
-    respond(&mut stream, 200, "OK", &body.to_string())
+    respond(&mut stream, 200, "OK", JSON, &body)
 }
 
-/// Parse `minutes=N` from a query string. `Ok(None)` when absent,
-/// `Err(())` on a malformed value or unknown parameter shape.
-fn parse_minutes(query: &str) -> Result<Option<u64>, ()> {
+/// Parse `key=N` (N a *positive* integer) from a query string.
+/// `Ok(None)` when absent, `Err(())` on a malformed value (non-numeric,
+/// zero, overflow) or an unparseable parameter shape. Unknown `k=v`
+/// params are ignored (scrapers add cache-busters).
+fn parse_count(query: &str, key: &str) -> Result<Option<u64>, ()> {
     if query.is_empty() {
         return Ok(None);
     }
-    let mut minutes = None;
+    let mut found = None;
     for pair in query.split('&') {
         match pair.split_once('=') {
-            Some(("minutes", v)) => {
-                minutes = Some(v.parse::<u64>().map_err(|_| ())?);
+            Some((k, v)) if k == key => {
+                let n = v.parse::<u64>().map_err(|_| ())?;
+                if n == 0 {
+                    return Err(());
+                }
+                found = Some(n);
             }
-            // unknown params are ignored (scrapers add cache-busters)
             Some(_) => {}
             None => return Err(()),
         }
     }
-    Ok(minutes)
+    Ok(found)
 }
 
 fn respond(
     stream: &mut TcpStream,
     code: u16,
     reason: &str,
+    content_type: &str,
     body: &str,
 ) -> std::io::Result<()> {
     let head = format!(
-        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_params_validate_strictly() {
+        assert_eq!(parse_count("", "minutes"), Ok(None));
+        assert_eq!(parse_count("minutes=5", "minutes"), Ok(Some(5)));
+        assert_eq!(parse_count("cache=1&minutes=7", "minutes"), Ok(Some(7)));
+        // other keys are ignored, including the other endpoint's param
+        assert_eq!(parse_count("last=3", "minutes"), Ok(None));
+        // zero, negatives, junk, empty values, bare tokens: all 400
+        assert_eq!(parse_count("minutes=0", "minutes"), Err(()));
+        assert_eq!(parse_count("minutes=-1", "minutes"), Err(()));
+        assert_eq!(parse_count("minutes=abc", "minutes"), Err(()));
+        assert_eq!(parse_count("minutes=", "minutes"), Err(()));
+        assert_eq!(parse_count("minutes", "minutes"), Err(()));
+        assert_eq!(parse_count("minutes=99999999999999999999", "minutes"), Err(()));
+        assert_eq!(parse_count("last=0", "last"), Err(()));
+        assert_eq!(parse_count("last=12", "last"), Ok(Some(12)));
+    }
 }

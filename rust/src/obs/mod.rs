@@ -15,11 +15,13 @@
 //!
 //! * the live server exposes it over a dependency-free HTTP responder
 //!   ([`http::MetricsServer`]; `fifer serve --metrics-addr ...`) at
-//!   `GET /metrics`, `GET /metrics/summary`, and
-//!   `GET /metrics/history?minutes=N`;
+//!   `GET /metrics`, `GET /metrics/summary`,
+//!   `GET /metrics/history?minutes=N`, `GET /metrics/prom`
+//!   (Prometheus text exposition, [`prom`]) and `GET /traces?last=N`
+//!   (sampled request span trees, [`trace`]);
 //! * the simulator emits the *identical* timeline/contract schema from
-//!   virtual time (`fifer scenario run ... --slo-timeline out.json`),
-//!   byte-deterministic from the seed.
+//!   virtual time (`fifer scenario run ... --slo-timeline out.json
+//!   --trace-out spans.json`), byte-deterministic from the seed.
 //!
 //! One contract, two drivers: a live dashboard and a sim sweep are
 //! directly diffable. The collector is fed engine time only (virtual or
@@ -28,8 +30,10 @@
 //! neither perturb scheduling decisions nor the byte-identity pins.
 
 pub mod http;
+pub mod prom;
 pub mod slo;
 pub mod timeline;
+pub mod trace;
 
 use std::collections::VecDeque;
 
@@ -39,10 +43,11 @@ use crate::util::{to_ms, Micros, MICROS_PER_S};
 
 pub use http::{MetricsServer, SharedSnapshot};
 pub use slo::{SloEval, SloTargets, WindowStats, FAST_WINDOW_S, SLOW_WINDOW_S};
-pub use timeline::BucketRow;
+pub use timeline::{BucketRow, LatencyHist};
+pub use trace::{MonitorSpan, RequestTrace, StageSpan, TraceRecorder};
 
-/// Collector configuration: bucket width, ring retention, and the SLO
-/// contract thresholds.
+/// Collector configuration: bucket width, ring retention, the SLO
+/// contract thresholds, and per-request trace sampling.
 #[derive(Debug, Clone, Copy)]
 pub struct ObsConfig {
     /// Timeline bucket width in engine seconds (min 1).
@@ -51,6 +56,15 @@ pub struct ObsConfig {
     /// `bucket_s = 60` for 24 h of history.
     pub retention_buckets: usize,
     pub targets: SloTargets,
+    /// Head-based trace sampling: keep 1 in `trace_sample` requests
+    /// (seeded, deterministic under the sim driver). 0 disables the
+    /// span recorder entirely — the default, so timelines stay exactly
+    /// as cheap as before tracing existed.
+    pub trace_sample: u64,
+    /// Finished request traces retained (ring; oldest evicted and
+    /// counted in `dropped_traces`). Also bounds in-flight traces and
+    /// monitor spans.
+    pub trace_keep: usize,
 }
 
 impl Default for ObsConfig {
@@ -59,6 +73,8 @@ impl Default for ObsConfig {
             bucket_s: 60,
             retention_buckets: 1440,
             targets: SloTargets::default(),
+            trace_sample: 0,
+            trace_keep: 512,
         }
     }
 }
@@ -109,6 +125,45 @@ impl Totals {
     }
 }
 
+/// Host-time decision-latency distribution (the §6.1.5 probe folded
+/// into the collector): microsecond samples from `try_dispatch` rounds
+/// when `FIFER_DECISION_PROBE` is armed. Empty — and rendered as
+/// deterministic zeros — in unprobed runs, so it never perturbs the
+/// sim byte-identity pins.
+#[derive(Debug, Clone, Default)]
+pub struct DecisionStats {
+    pub hist: LatencyHist,
+    pub sum_us: f64,
+    pub max_us: f64,
+    pub count: u64,
+}
+
+impl DecisionStats {
+    pub fn observe_ns(&mut self, ns: u64) {
+        let us = ns as f64 / 1000.0;
+        self.hist.observe(us);
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+        self.count += 1;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mean = if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        };
+        Json::obj(vec![
+            ("p50_us", Json::Num(self.hist.percentile(50.0, self.max_us))),
+            ("p95_us", Json::Num(self.hist.percentile(95.0, self.max_us))),
+            ("p99_us", Json::Num(self.hist.percentile(99.0, self.max_us))),
+            ("max_us", Json::Num(self.max_us)),
+            ("mean_us", Json::Num(mean)),
+            ("samples", Json::Num(self.count as f64)),
+        ])
+    }
+}
+
 /// Driver-agnostic telemetry collector fed from `EngineCore` taps.
 ///
 /// All methods take the engine clock (`now`, µs); the collector holds
@@ -121,25 +176,68 @@ pub struct Collector {
     /// Strictest end-to-end SLO (ms) across the active chains — the
     /// default `e2e_p95_ms` contract target.
     chain_slo_ms: f64,
+    /// Active policy short name, stamped on spans and the exposition.
+    policy: &'static str,
     ring: VecDeque<BucketRow>,
     /// Rows evicted by retention (history endpoints report this so a
     /// truncated timeline is never mistaken for a complete one).
     dropped: u64,
     totals: Totals,
+    /// Per-request span recorder; `None` unless `trace_sample > 0`, so
+    /// the untraced tap cost is a single branch.
+    trace: Option<TraceRecorder>,
+    decision: DecisionStats,
 }
 
 impl Collector {
-    pub fn new(cfg: ObsConfig, chain_slo_ms: f64) -> Collector {
+    pub fn new(cfg: ObsConfig, chain_slo_ms: f64, seed: u64, policy: &'static str) -> Collector {
         let mut cfg = cfg;
         cfg.bucket_s = cfg.bucket_s.max(1);
         cfg.retention_buckets = cfg.retention_buckets.max(1);
+        let trace = (cfg.trace_sample > 0)
+            .then(|| TraceRecorder::new(cfg.trace_sample, cfg.trace_keep, seed));
         Collector {
             cfg,
             chain_slo_ms,
+            policy,
             ring: VecDeque::with_capacity(32),
             dropped: 0,
             totals: Totals::default(),
+            trace,
+            decision: DecisionStats::default(),
         }
+    }
+
+    /// Whether the span recorder is armed (i.e. `trace_sample > 0`).
+    pub fn tracing(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// A job entered the system — open a trace if it is sampled.
+    /// Unsampled jobs cost one hash; no allocation.
+    pub fn on_trace_start(&mut self, job_id: u64, now: Micros, chain: &'static str) {
+        if let Some(t) = self.trace.as_mut() {
+            t.start(job_id, now, chain);
+        }
+    }
+
+    /// A stage of `job_id` finished executing (batch retired).
+    pub fn on_stage_span(&mut self, job_id: u64, span: StageSpan) {
+        if let Some(t) = self.trace.as_mut() {
+            t.stage(job_id, span);
+        }
+    }
+
+    /// A monitor tick ran the policy's scaling decision.
+    pub fn on_monitor_decision(&mut self, now: Micros, spawns_planned: u64, dur_ns: u64) {
+        if let Some(t) = self.trace.as_mut() {
+            t.monitor(now, spawns_planned, dur_ns);
+        }
+    }
+
+    /// One probed `try_dispatch` round's host-time latency.
+    pub fn on_decision_latency(&mut self, ns: u64) {
+        self.decision.observe_ns(ns);
     }
 
     fn width(&self) -> Micros {
@@ -222,8 +320,12 @@ impl Collector {
 
     /// A request completed its whole chain. `slo_ok` is the engine's
     /// verdict against the job's own chain SLO; the per-stage latency
-    /// decomposition comes straight from the job record.
-    pub fn on_job_complete(&mut self, now: Micros, rec: &JobRecord, slo_ok: bool) {
+    /// decomposition comes straight from the job record. Also closes
+    /// the job's span tree if it was sampled.
+    pub fn on_job_complete(&mut self, now: Micros, job_id: u64, rec: &JobRecord, slo_ok: bool) {
+        if let Some(t) = self.trace.as_mut() {
+            t.finish(job_id, now, slo_ok);
+        }
         let resp_ms = to_ms(rec.response());
         let cold_hit = rec.cold_total() > 0;
         self.totals.completions += 1;
@@ -283,6 +385,18 @@ impl Collector {
             targets: self.cfg.targets,
             totals: self.totals.clone(),
             rows: self.ring.iter().cloned().collect(),
+            policy: self.policy,
+            trace_sample: self.cfg.trace_sample,
+            dropped_traces: self.trace.as_ref().map_or(0, |t| t.dropped()),
+            traces: self
+                .trace
+                .as_ref()
+                .map_or_else(Vec::new, |t| t.done().iter().cloned().collect()),
+            monitor_spans: self
+                .trace
+                .as_ref()
+                .map_or_else(Vec::new, |t| t.monitors().iter().copied().collect()),
+            decision: self.decision.clone(),
         }
     }
 }
@@ -303,6 +417,18 @@ pub struct ObsReport {
     pub targets: SloTargets,
     pub totals: Totals,
     pub rows: Vec<BucketRow>,
+    /// Active policy short name (stamped on spans and the exposition).
+    pub policy: &'static str,
+    /// 1-in-N trace sampling rate (0 = tracing off).
+    pub trace_sample: u64,
+    /// Traces/spans evicted by the recorder's bounds.
+    pub dropped_traces: u64,
+    /// Finished sampled request traces, completion order.
+    pub traces: Vec<RequestTrace>,
+    /// Monitor-tick scaling-decision spans, tick order.
+    pub monitor_spans: Vec<MonitorSpan>,
+    /// Probed dispatch decision latency (zeros unless the probe is on).
+    pub decision: DecisionStats,
 }
 
 impl ObsReport {
@@ -362,6 +488,7 @@ impl ObsReport {
             ("buckets", Json::Num(self.rows.len() as f64)),
             ("dropped_buckets", Json::Num(self.dropped_buckets as f64)),
             ("chain_slo_ms", Json::Num(self.chain_slo_ms)),
+            ("policy", Json::Str(self.policy.to_string())),
             (
                 "windows",
                 Json::obj(vec![
@@ -372,6 +499,7 @@ impl ObsReport {
             ),
             ("slo", Json::obj(slo_obj)),
             ("alerts", Json::Arr(alerts)),
+            ("decision_latency_us", self.decision.to_json()),
         ])
     }
 
@@ -403,6 +531,35 @@ impl ObsReport {
             ("summary", self.summary_json()),
         ])
     }
+
+    /// Append this snapshot's spans as Chrome trace events under
+    /// process `pid`: the scheduler-track metadata, the last `last`
+    /// monitor spans, and the last `last` request span trees (`None` =
+    /// all retained). Ordering is ring order, so output is
+    /// deterministic whenever the engine is.
+    pub fn trace_events(&self, pid: u64, last: Option<usize>, out: &mut Vec<Json>) {
+        out.push(trace::scheduler_thread_meta(pid));
+        let skip = |len: usize| last.map_or(0, |n| len.saturating_sub(n));
+        for m in &self.monitor_spans[skip(self.monitor_spans.len())..] {
+            out.push(m.event(pid, self.policy));
+        }
+        for t in &self.traces[skip(self.traces.len())..] {
+            t.events(pid, self.policy, out);
+        }
+    }
+
+    /// `GET /traces?last=N` and single-run `--trace-out`: a complete
+    /// Chrome trace-event document (Perfetto / `chrome://tracing`).
+    pub fn trace_json(&self, last: Option<usize>) -> Json {
+        let mut events = Vec::new();
+        self.trace_events(1, last, &mut events);
+        Json::obj(vec![
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            ("traceSample", Json::Num(self.trace_sample as f64)),
+            ("droppedTraces", Json::Num(self.dropped_traces as f64)),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -421,7 +578,7 @@ mod tests {
 
     #[test]
     fn buckets_roll_and_fill_gaps() {
-        let mut c = Collector::new(ObsConfig::default(), 1000.0);
+        let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Test");
         c.on_arrival(secs(5.0));
         c.on_arrival(secs(59.0));
         // jump 3 buckets forward — the gap rows must exist and be empty
@@ -445,7 +602,7 @@ mod tests {
             retention_buckets: 3,
             ..ObsConfig::default()
         };
-        let mut c = Collector::new(cfg, 1000.0);
+        let mut c = Collector::new(cfg, 1000.0, 0, "Test");
         for s in 0..10 {
             c.on_arrival(secs(s as f64));
         }
@@ -464,7 +621,7 @@ mod tests {
             retention_buckets: 5,
             ..ObsConfig::default()
         };
-        let mut c = Collector::new(cfg, 1000.0);
+        let mut c = Collector::new(cfg, 1000.0, 0, "Test");
         c.on_arrival(0);
         c.on_arrival(secs(1_000_000.0)); // ~11 days past a 5s ring
         let r = c.report(secs(1_000_000.0));
@@ -475,9 +632,9 @@ mod tests {
 
     #[test]
     fn completions_classify_and_decompose() {
-        let mut c = Collector::new(ObsConfig::default(), 1000.0);
-        c.on_job_complete(secs(1.0), &rec(0, secs(0.5)), true);
-        c.on_job_complete(secs(2.0), &rec(0, secs(2.0)), false);
+        let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Test");
+        c.on_job_complete(secs(1.0), 0, &rec(0, secs(0.5)), true);
+        c.on_job_complete(secs(2.0), 1, &rec(0, secs(2.0)), false);
         c.on_batch(secs(2.0), 2);
         c.on_spawn(secs(2.0), true);
         c.on_spawn(secs(2.0), false);
@@ -499,10 +656,11 @@ mod tests {
 
     #[test]
     fn report_json_has_contract_shape_and_is_deterministic() {
-        let mut c = Collector::new(ObsConfig::default(), 1000.0);
+        let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Test");
         for i in 0..20 {
             c.on_arrival(secs(i as f64));
-            c.on_job_complete(secs(i as f64 + 0.4), &rec(secs(i as f64), secs(i as f64 + 0.4)), true);
+            let done = secs(i as f64 + 0.4);
+            c.on_job_complete(done, i, &rec(secs(i as f64), done), true);
         }
         c.on_tick(
             secs(19.0),

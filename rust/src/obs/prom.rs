@@ -1,0 +1,295 @@
+//! Prometheus text-exposition renderer over [`ObsReport`]
+//! (`GET /metrics/prom`).
+//!
+//! Same snapshot, standard format: cumulative counters from
+//! [`Totals`], bucket-averaged gauges from the current timeline row,
+//! the end-to-end latency histogram re-emitted as cumulative
+//! `_bucket`/`_sum`/`_count` series (text exposition format 0.0.4),
+//! and the SLO contract as `fifer_slo_attained` / `fifer_slo_value` /
+//! `fifer_slo_target` / `fifer_slo_burn_rate{window=...}` gauges. The
+//! renderer is a pure function of the report — no clock, no state —
+//! so a sim-driven exposition is as deterministic as the report it
+//! reads.
+//!
+//! Format invariants the CI smoke asserts: every sample line's metric
+//! has a `# TYPE` declaration, no series (name + label set) repeats,
+//! histogram buckets are cumulative (monotone non-decreasing) and end
+//! in `+Inf`, and no value is NaN.
+
+use std::fmt::Write as _;
+
+use super::timeline::LatencyHist;
+use super::{ObsReport, Totals, WindowStats};
+use crate::util::MICROS_PER_S;
+
+/// Content-Type for the text exposition.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Render a value the exposition will accept: Prometheus has no NaN
+/// use here, and our sources guard infinities already — but belt and
+/// braces, non-finite renders as 0.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {}", num(v));
+}
+
+/// Emit one histogram family: cumulative `_bucket` series over the
+/// geometric bounds, then `_sum` and `_count`.
+fn histogram(out: &mut String, name: &str, help: &str, hist: &LatencyHist, sum: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in hist.counts().iter().enumerate() {
+        cum += c;
+        match LatencyHist::bucket_bound(i) {
+            Some(b) => {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", num(b));
+            }
+            None => {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", num(sum));
+    let _ = writeln!(out, "{name}_count {}", hist.total());
+}
+
+/// Render the full exposition document for one snapshot.
+pub fn render(r: &ObsReport) -> String {
+    let mut out = String::with_capacity(8192);
+
+    gauge(
+        &mut out,
+        "fifer_engine_now_seconds",
+        "Engine clock at snapshot time (virtual or monotonic seconds).",
+        r.now as f64 / MICROS_PER_S as f64,
+    );
+    let _ = writeln!(
+        &mut out,
+        "# HELP fifer_info Static run labels (value is always 1)."
+    );
+    let _ = writeln!(&mut out, "# TYPE fifer_info gauge");
+    let _ = writeln!(&mut out, "fifer_info{{policy=\"{}\"}} 1", r.policy);
+
+    // -- cumulative counters (collector totals + ring bookkeeping) -----
+    let Totals {
+        arrivals,
+        dispatches,
+        completions,
+        slo_ok,
+        slo_violations,
+        cold_hit_jobs,
+        spawns_cold,
+        spawns_warm,
+        retirements,
+        batches,
+        batched_jobs,
+    } = r.totals.clone();
+    counter(&mut out, "fifer_arrivals_total", "Requests entering the system.", arrivals);
+    counter(&mut out, "fifer_dispatches_total", "Stage dispatches onto containers.", dispatches);
+    counter(&mut out, "fifer_completions_total", "Completed chain requests.", completions);
+    counter(&mut out, "fifer_slo_ok_total", "Completions within their chain SLO.", slo_ok);
+    counter(&mut out, "fifer_slo_violations_total", "Completions past their SLO.", slo_violations);
+    counter(&mut out, "fifer_cold_hit_jobs_total", "Jobs hit by cold-start wait.", cold_hit_jobs);
+    counter(&mut out, "fifer_spawns_cold_total", "Cold container spawns.", spawns_cold);
+    counter(&mut out, "fifer_spawns_warm_total", "Warm-pool container reuses.", spawns_warm);
+    counter(&mut out, "fifer_retirements_total", "Containers retired.", retirements);
+    counter(&mut out, "fifer_batches_total", "Batched execution passes.", batches);
+    counter(&mut out, "fifer_batched_jobs_total", "Jobs carried by batched passes.", batched_jobs);
+    counter(&mut out, "fifer_dropped_buckets_total", "Timeline rows evicted.", r.dropped_buckets);
+    counter(&mut out, "fifer_dropped_traces_total", "Request traces evicted.", r.dropped_traces);
+
+    // -- gauges: the current bucket's tick-averaged cluster state ------
+    let (containers, warm_free, starting, queue_depth, util) = match r.rows.last() {
+        Some(row) if row.ticks > 0 => {
+            let t = row.ticks as f64;
+            (
+                row.containers_sum as f64 / t,
+                row.warm_free_slots_sum as f64 / t,
+                row.starting_slots_sum as f64 / t,
+                row.queue_depth_sum as f64 / t,
+                row.utilization(),
+            )
+        }
+        _ => (0.0, 0.0, 0.0, 0.0, 0.0),
+    };
+    gauge(&mut out, "fifer_containers", "Containers alive (bucket average).", containers);
+    gauge(&mut out, "fifer_warm_free_slots", "Idle warm slots (bucket average).", warm_free);
+    gauge(&mut out, "fifer_starting_slots", "Cold-starting slots (bucket average).", starting);
+    gauge(&mut out, "fifer_queue_depth", "Queued jobs (bucket average).", queue_depth);
+    gauge(&mut out, "fifer_utilization", "Busy cores / allocated cores (bucket average).", util);
+
+    // -- latency distributions -----------------------------------------
+    let full = WindowStats::from_rows(&r.rows);
+    let lat_sum: f64 = r.rows.iter().map(|row| row.lat_sum_ms).sum();
+    histogram(
+        &mut out,
+        "fifer_e2e_latency_ms",
+        "End-to-end request latency (ms) over the retained window.",
+        &full.hist,
+        lat_sum,
+    );
+    histogram(
+        &mut out,
+        "fifer_decision_latency_us",
+        "Host-time dispatch decision latency (us); empty unless FIFER_DECISION_PROBE is armed.",
+        &r.decision.hist,
+        r.decision.sum_us,
+    );
+
+    // -- the SLO contract as labeled gauges ----------------------------
+    let evals = r.contract();
+    let slo_family = |out: &mut String, name: &str, help: &str| {
+        let _ = writeln!(out, "# HELP fifer_slo_{name} {help}");
+        let _ = writeln!(out, "# TYPE fifer_slo_{name} gauge");
+    };
+    slo_family(&mut out, "attained", "1 when the objective meets its target (full window).");
+    for e in &evals {
+        let _ = writeln!(
+            &mut out,
+            "fifer_slo_attained{{slo=\"{}\"}} {}",
+            e.name,
+            u8::from(e.ok())
+        );
+    }
+    slo_family(&mut out, "value", "Observed objective value over the full window.");
+    for e in &evals {
+        let _ = writeln!(&mut out, "fifer_slo_value{{slo=\"{}\"}} {}", e.name, num(e.value));
+    }
+    slo_family(&mut out, "target", "Configured objective target.");
+    for e in &evals {
+        let _ = writeln!(&mut out, "fifer_slo_target{{slo=\"{}\"}} {}", e.name, num(e.target));
+    }
+    slo_family(
+        &mut out,
+        "burn_rate",
+        "Normalized error-budget burn (>= 1 past the burn-alert line) per window.",
+    );
+    for e in &evals {
+        let _ = writeln!(
+            &mut out,
+            "fifer_slo_burn_rate{{slo=\"{}\",window=\"fast\"}} {}",
+            e.name,
+            num(e.burn_fast)
+        );
+        let _ = writeln!(
+            &mut out,
+            "fifer_slo_burn_rate{{slo=\"{}\",window=\"slow\"}} {}",
+            e.name,
+            num(e.burn_slow)
+        );
+    }
+    slo_family(&mut out, "alerting", "1 when both burn windows are past 1 (page condition).");
+    for e in &evals {
+        let _ = writeln!(
+            &mut out,
+            "fifer_slo_alerting{{slo=\"{}\"}} {}",
+            e.name,
+            u8::from(e.alerting())
+        );
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Collector, Gauges, ObsConfig};
+    use crate::util::secs;
+
+    fn report() -> ObsReport {
+        let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Fifer");
+        for i in 0..50u64 {
+            c.on_arrival(secs(i as f64));
+            let rec = crate::metrics::JobRecord {
+                chain: 0,
+                arrival: secs(i as f64),
+                completion: secs(i as f64 + 0.1 * (i % 7) as f64),
+                stages: Vec::new(),
+            };
+            c.on_job_complete(rec.completion, i, &rec, i % 10 != 0);
+        }
+        c.on_tick(
+            secs(49.0),
+            Gauges {
+                containers: 4,
+                warm_free_slots: 2,
+                starting_slots: 1,
+                queue_depth: 3,
+                busy_cores: 2.0,
+                alloc_cores: 4.0,
+            },
+        );
+        c.on_decision_latency(12_300);
+        c.report(secs(50.0))
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let text = render(&report());
+        assert!(text.ends_with('\n'));
+        let mut types = std::collections::BTreeSet::new();
+        let mut series = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split(' ').next().unwrap().to_string();
+                assert!(types.insert(name.clone()), "duplicate TYPE {name}");
+            } else if !line.starts_with('#') {
+                let (key, value) = line.rsplit_once(' ').unwrap();
+                assert!(value.parse::<f64>().unwrap().is_finite(), "{line}");
+                assert!(series.insert(key.to_string()), "duplicate series {key}");
+                let base = key.split('{').next().unwrap();
+                let base = base
+                    .trim_end_matches("_bucket")
+                    .trim_end_matches("_sum")
+                    .trim_end_matches("_count");
+                assert!(types.contains(base), "sample {key} has no TYPE");
+            }
+        }
+        assert!(text.contains("fifer_slo_attained{slo=\"request_success_rate\"}"));
+        assert!(text.contains("fifer_slo_burn_rate{slo=\"e2e_p95_ms\",window=\"fast\"}"));
+        // deterministic re-render
+        assert_eq!(text, render(&report()));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_close_at_inf() {
+        let text = render(&report());
+        let mut prev = 0.0;
+        let mut last = 0.0;
+        let mut saw_inf = false;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("fifer_e2e_latency_ms_bucket") {
+                let v: f64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= prev, "non-monotone bucket: {line}");
+                prev = v;
+                last = v;
+                saw_inf = rest.contains("le=\"+Inf\"");
+            }
+        }
+        assert!(saw_inf, "+Inf bucket must be last");
+        let count_line = text
+            .lines()
+            .find(|l| l.starts_with("fifer_e2e_latency_ms_count"))
+            .unwrap();
+        let count: f64 = count_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert_eq!(count, last, "+Inf bucket must equal _count");
+        assert_eq!(count, 50.0);
+    }
+}

@@ -96,6 +96,26 @@ impl LatencyHist {
         }
         max_ms
     }
+
+    /// Raw per-bucket counts, in bound order — the Prometheus renderer
+    /// re-emits these as cumulative `_bucket` series.
+    pub fn counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.counts
+    }
+
+    /// Upper bound of bucket `i` (ms): bucket 0 is `< 1`, bucket `i` is
+    /// `< RATIO^i`; the final bucket is open-ended (`+Inf` in the
+    /// exposition) and has no finite bound.
+    pub fn bucket_bound(i: usize) -> Option<f64> {
+        if i >= HIST_BUCKETS - 1 {
+            return None;
+        }
+        let mut bound = 1.0;
+        for _ in 0..i {
+            bound *= HIST_RATIO;
+        }
+        Some(bound)
+    }
 }
 
 /// One retained time bucket (`bucket_s` of engine time).

@@ -1,0 +1,428 @@
+//! Per-request span recorder: the causal "why" behind the timeline's
+//! aggregate "what".
+//!
+//! Every *sampled* job gets a span tree assembled entirely in engine
+//! time: a root request span (arrival → chain completion) with, for
+//! each stage, a stage span decomposed into queue-wait / cold-start /
+//! batch-wait / exec children, each tagged with the container id, node
+//! id, batch size, policy name and cold/warm identity. The recorder is
+//! fed from `EngineCore`'s existing decision points through
+//! [`super::Collector`], so the sim and live drivers produce the same
+//! schema — under the virtual-time driver the whole trace is a pure
+//! function of the seed.
+//!
+//! Sampling is head-based and deterministic: job `j` is kept iff
+//! `splitmix64(seed ^ j) % N == 0` (`--trace-sample 1-in-N`). The
+//! decision depends only on the seed and the job id — both
+//! reproducible across runs and `--threads` — so `--trace-out` files
+//! are byte-identical. The unsampled path is one hash + one map probe
+//! and allocates nothing, keeping the zero-alloc dispatch pin intact
+//! when tracing is enabled but a job is not sampled.
+//!
+//! Export is Chrome trace-event JSON (`ph:"X"` complete events, `ts`/
+//! `dur` in microseconds — the engine's native resolution), loadable
+//! in `chrome://tracing` or Perfetto.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::util::json::Json;
+use crate::util::Micros;
+
+/// One executed stage of a sampled request, captured when its batch
+/// retires. All timestamps are engine time (µs).
+#[derive(Debug, Clone)]
+pub struct StageSpan {
+    /// Microservice short name (catalog-static).
+    pub stage: &'static str,
+    /// When the job entered this stage's queue.
+    pub enqueued: Micros,
+    /// When the batch holding the job started executing.
+    pub exec_start: Micros,
+    /// When the batch retired.
+    pub exec_end: Micros,
+    /// Portion of the queue wait attributable to a cold container spawn.
+    pub cold_wait: Micros,
+    /// Container that executed the batch.
+    pub container: u64,
+    /// Node hosting that container.
+    pub node: usize,
+    /// Jobs in the batch this stage rode in.
+    pub batch: usize,
+    /// Whether the container was cold-started (vs. warm-pool reuse).
+    pub cold: bool,
+}
+
+/// The span tree of one sampled request.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub job_id: u64,
+    /// Chain short name (catalog-static).
+    pub chain: &'static str,
+    pub arrival: Micros,
+    /// Chain completion time; equals `arrival` while still open.
+    pub completion: Micros,
+    pub slo_ok: bool,
+    pub stages: Vec<StageSpan>,
+}
+
+/// One monitor-tick scaling decision (the §6.1.5 probe as a span).
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorSpan {
+    /// Engine time of the tick.
+    pub t: Micros,
+    /// Containers the policy's plan asked to spawn this tick.
+    pub spawns_planned: u64,
+    /// Host-measured decision latency (ns); 0 unless the decision
+    /// probe (`FIFER_DECISION_PROBE`) is armed, so deterministic runs
+    /// render deterministic zeros.
+    pub dur_ns: u64,
+}
+
+/// Deterministic head-based sampling decision for `job_id`.
+pub fn sampled(seed: u64, sample_n: u64, job_id: u64) -> bool {
+    sample_n != 0 && splitmix64(seed ^ job_id) % sample_n == 0
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Bounded recorder of sampled request traces and monitor spans.
+///
+/// `open` holds in-flight sampled requests; `done` is a ring of
+/// finished traces. Both are bounded by `keep` — evictions are counted
+/// in `dropped` so a truncated trace is never mistaken for complete.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    sample_n: u64,
+    seed: u64,
+    keep: usize,
+    open: BTreeMap<u64, RequestTrace>,
+    done: VecDeque<RequestTrace>,
+    monitors: VecDeque<MonitorSpan>,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    pub fn new(sample_n: u64, keep: usize, seed: u64) -> TraceRecorder {
+        TraceRecorder {
+            sample_n,
+            seed,
+            keep: keep.max(1),
+            open: BTreeMap::new(),
+            done: VecDeque::new(),
+            monitors: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.sample_n
+    }
+
+    /// Head-based sampling gate: opens a trace only for sampled jobs.
+    /// The unsampled path is hash + early return — no allocation.
+    pub fn start(&mut self, job_id: u64, arrival: Micros, chain: &'static str) {
+        if !sampled(self.seed, self.sample_n, job_id) {
+            return;
+        }
+        while self.open.len() >= self.keep {
+            let oldest = *self.open.keys().next().expect("non-empty open map");
+            self.open.remove(&oldest);
+            self.dropped += 1;
+        }
+        self.open.insert(
+            job_id,
+            RequestTrace {
+                job_id,
+                chain,
+                arrival,
+                completion: arrival,
+                slo_ok: false,
+                stages: Vec::new(),
+            },
+        );
+    }
+
+    /// Records a finished stage for `job_id` if it is being traced
+    /// (one map probe and a return otherwise).
+    pub fn stage(&mut self, job_id: u64, span: StageSpan) {
+        if let Some(t) = self.open.get_mut(&job_id) {
+            t.stages.push(span);
+        }
+    }
+
+    /// Closes the trace at chain completion and moves it to the ring.
+    pub fn finish(&mut self, job_id: u64, completion: Micros, slo_ok: bool) {
+        if let Some(mut t) = self.open.remove(&job_id) {
+            t.completion = completion;
+            t.slo_ok = slo_ok;
+            self.done.push_back(t);
+            while self.done.len() > self.keep {
+                self.done.pop_front();
+                self.dropped += 1;
+            }
+        }
+    }
+
+    pub fn monitor(&mut self, t: Micros, spawns_planned: u64, dur_ns: u64) {
+        self.monitors.push_back(MonitorSpan {
+            t,
+            spawns_planned,
+            dur_ns,
+        });
+        while self.monitors.len() > self.keep {
+            self.monitors.pop_front();
+            self.dropped += 1;
+        }
+    }
+
+    pub fn done(&self) -> &VecDeque<RequestTrace> {
+        &self.done
+    }
+
+    pub fn monitors(&self) -> &VecDeque<MonitorSpan> {
+        &self.monitors
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event rendering
+// ---------------------------------------------------------------------
+
+/// A `ph:"X"` complete event. `ts`/`dur` are µs, matching `Micros`.
+fn complete(
+    name: &str,
+    cat: &str,
+    pid: u64,
+    tid: u64,
+    ts: Micros,
+    dur: Micros,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("X".to_string())),
+        ("name", Json::Str(name.to_string())),
+        ("cat", Json::Str(cat.to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts as f64)),
+        ("dur", Json::Num(dur as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// `process_name` metadata event (one per scenario cell on merge).
+pub fn process_meta(pid: u64, label: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("M".to_string())),
+        ("name", Json::Str("process_name".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("args", Json::obj(vec![("name", Json::Str(label.to_string()))])),
+    ])
+}
+
+/// `thread_name` metadata for tid 0, the scheduler/monitor track.
+pub fn scheduler_thread_meta(pid: u64) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("M".to_string())),
+        ("name", Json::Str("thread_name".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::Str("scheduler".to_string()))]),
+        ),
+    ])
+}
+
+impl MonitorSpan {
+    pub fn event(&self, pid: u64, policy: &str) -> Json {
+        complete(
+            "monitor",
+            "scheduler",
+            pid,
+            0,
+            self.t,
+            self.dur_ns / 1000,
+            vec![
+                ("policy", Json::Str(policy.to_string())),
+                ("spawns_planned", Json::Num(self.spawns_planned as f64)),
+            ],
+        )
+    }
+}
+
+impl RequestTrace {
+    /// Appends this request's span tree to `out`. Each request gets its
+    /// own track (`tid = job_id + 1`; tid 0 is the scheduler); nesting
+    /// is by containment, the trace-event convention for `X` events.
+    pub fn events(&self, pid: u64, policy: &str, out: &mut Vec<Json>) {
+        let tid = self.job_id + 1;
+        out.push(complete(
+            self.chain,
+            "request",
+            pid,
+            tid,
+            self.arrival,
+            self.completion.saturating_sub(self.arrival),
+            vec![
+                ("job", Json::Num(self.job_id as f64)),
+                ("policy", Json::Str(policy.to_string())),
+                ("slo_ok", Json::Bool(self.slo_ok)),
+            ],
+        ));
+        for s in &self.stages {
+            let args = vec![
+                ("batch", Json::Num(s.batch as f64)),
+                ("cold", Json::Bool(s.cold)),
+                ("container", Json::Num(s.container as f64)),
+                ("node", Json::Num(s.node as f64)),
+                ("policy", Json::Str(policy.to_string())),
+            ];
+            out.push(complete(
+                s.stage,
+                "stage",
+                pid,
+                tid,
+                s.enqueued,
+                s.exec_end.saturating_sub(s.enqueued),
+                args.clone(),
+            ));
+            let queue_wait = s.exec_start.saturating_sub(s.enqueued);
+            if queue_wait > 0 {
+                out.push(complete(
+                    "queue-wait",
+                    "wait",
+                    pid,
+                    tid,
+                    s.enqueued,
+                    queue_wait,
+                    args.clone(),
+                ));
+            }
+            if s.cold_wait > 0 {
+                out.push(complete(
+                    "cold-start",
+                    "wait",
+                    pid,
+                    tid,
+                    s.enqueued,
+                    s.cold_wait,
+                    args.clone(),
+                ));
+            }
+            let batch_wait = queue_wait.saturating_sub(s.cold_wait);
+            if batch_wait > 0 {
+                out.push(complete(
+                    "batch-wait",
+                    "wait",
+                    pid,
+                    tid,
+                    s.enqueued + s.cold_wait,
+                    batch_wait,
+                    args.clone(),
+                ));
+            }
+            out.push(complete(
+                "exec",
+                "exec",
+                pid,
+                tid,
+                s.exec_start,
+                s.exec_end.saturating_sub(s.exec_start),
+                args,
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_one_in_n() {
+        let hits: Vec<u64> = (0..1000).filter(|&j| sampled(42, 4, j)).collect();
+        let again: Vec<u64> = (0..1000).filter(|&j| sampled(42, 4, j)).collect();
+        assert_eq!(hits, again);
+        assert!(hits.len() > 100 && hits.len() < 500, "{}", hits.len());
+        // N = 1 keeps everything, N = 0 disables
+        assert!((0..100).all(|j| sampled(7, 1, j)));
+        assert!((0..100).all(|j| !sampled(7, 0, j)));
+        // seed changes the sample set
+        let other: Vec<u64> = (0..1000).filter(|&j| sampled(43, 4, j)).collect();
+        assert_ne!(hits, other);
+    }
+
+    #[test]
+    fn recorder_bounds_open_and_done_and_counts_drops() {
+        let mut r = TraceRecorder::new(1, 2, 0);
+        for j in 0..4 {
+            r.start(j, j * 10, "c");
+        }
+        // keep = 2: jobs 0 and 1 were evicted from the open map
+        assert_eq!(r.open.len(), 2);
+        assert_eq!(r.dropped(), 2);
+        r.finish(2, 100, true);
+        r.finish(3, 110, false);
+        assert_eq!(r.done().len(), 2);
+        // finishing an untracked job is a no-op
+        r.finish(0, 120, true);
+        assert_eq!(r.done().len(), 2);
+        assert_eq!(r.done()[0].job_id, 2);
+        assert!(r.done()[0].slo_ok);
+    }
+
+    #[test]
+    fn span_tree_renders_nested_complete_events() {
+        let mut r = TraceRecorder::new(1, 16, 0);
+        r.start(5, 1_000, "ipa");
+        r.stage(
+            5,
+            StageSpan {
+                stage: "nlp",
+                enqueued: 1_000,
+                exec_start: 4_000,
+                exec_end: 9_000,
+                cold_wait: 2_000,
+                container: 3,
+                node: 1,
+                batch: 2,
+                cold: true,
+            },
+        );
+        r.finish(5, 9_000, true);
+        let mut out = Vec::new();
+        r.done()[0].events(1, "Fifer", &mut out);
+        // request + stage + queue-wait + cold-start + batch-wait + exec
+        assert_eq!(out.len(), 6);
+        let names: Vec<&str> = out
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(
+            names,
+            vec!["ipa", "nlp", "queue-wait", "cold-start", "batch-wait", "exec"]
+        );
+        // batch-wait = queue-wait - cold-wait, starting after the cold span
+        let bw = &out[4];
+        assert_eq!(bw.get("ts").unwrap().as_f64().unwrap(), 3_000.0);
+        assert_eq!(bw.get("dur").unwrap().as_f64().unwrap(), 1_000.0);
+        // all spans nest within the request span on the same track
+        let root_end = 1_000.0 + out[0].get("dur").unwrap().as_f64().unwrap();
+        for e in &out[1..] {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            assert!(ts >= 1_000.0 && ts + dur <= root_end);
+        }
+    }
+}

@@ -86,7 +86,7 @@ use crate::config::{ClusterConfig, Policy, RmConfig, TomlSection};
 use crate::experiments::TraceKind;
 use crate::metrics::Summary;
 use crate::model::Catalog;
-use crate::obs::ObsReport;
+use crate::obs::{self, ObsReport};
 use crate::trace::Trace;
 use crate::util::json::Json;
 use crate::util::{secs, Micros, MICROS_PER_S};
@@ -556,6 +556,32 @@ pub fn results_obs_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
     Json::obj(vec![
         ("scenario", Json::Str(spec.name.clone())),
         ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Render a trace-enabled sweep (from [`run_scenario_obs`] with
+/// `ObsConfig::trace_sample > 0`) as one merged Chrome trace-event
+/// document (`--trace-out`): each cell becomes a process (`pid` =
+/// matrix position + 1, labeled `trace/mix/policy/seed` via
+/// `process_name` metadata) holding its sampled request span trees and
+/// monitor-decision spans. Loadable in `chrome://tracing` / Perfetto.
+/// Byte-deterministic for a fixed spec regardless of `--threads` —
+/// sampling is seeded per cell and cells are emitted in matrix order.
+pub fn results_trace_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
+    let mut events = Vec::new();
+    for (i, r) in results.iter().enumerate() {
+        let pid = (i + 1) as u64;
+        let c = &r.cell;
+        let label = format!("{}/{}/{} seed={}", c.trace, c.mix, c.policy.name(), c.seed);
+        events.push(obs::trace::process_meta(pid, &label));
+        if let Some(report) = &r.obs {
+            report.trace_events(pid, None, &mut events);
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("scenario", Json::Str(spec.name.clone())),
+        ("traceEvents", Json::Arr(events)),
     ])
 }
 

@@ -128,6 +128,11 @@ pub struct ServeParams {
     /// + last metrics snapshot are still emitted. `fifer serve` wires
     /// this to SIGINT via [`sigint_flag`]; tests flip a leaked flag.
     pub interrupt: Option<&'static AtomicBool>,
+    /// Per-request span sampling: keep 1-in-N requests in the bounded
+    /// trace ring served at `GET /traces` (0 disables the recorder).
+    /// Live request rates are scrape-scale, so the default records
+    /// every request.
+    pub trace_sample: u64,
 }
 
 impl ServeParams {
@@ -142,6 +147,7 @@ impl ServeParams {
             synthetic: false,
             metrics_addr: None,
             interrupt: None,
+            trace_sample: 1,
         }
     }
 }
@@ -470,7 +476,12 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
     // the default ring is 24 h of minute buckets) — the /metrics
     // responder is what's optional. Enabled before bootstrap so the
     // initial provisioning spawns are counted, as in the sim driver.
-    core.enable_obs(ObsConfig::default());
+    // Span recording rides the same collector, bounded by the default
+    // trace ring, and is served at GET /traces.
+    core.enable_obs(ObsConfig {
+        trace_sample: p.trace_sample,
+        ..ObsConfig::default()
+    });
     core.bootstrap(horizon, end);
     let metrics: Option<(MetricsServer, SharedSnapshot)> = match &p.metrics_addr {
         Some(addr) => {

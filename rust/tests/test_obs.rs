@@ -1,17 +1,21 @@
 //! Observability-plane integration: byte-deterministic `--slo-timeline`
-//! output from the sim driver, the SLO contract shape, and the
-//! dependency-free `/metrics` HTTP responder end to end.
+//! and `--trace-out` output from the sim driver, the SLO contract
+//! shape, burn-rate alert edge transitions, and the dependency-free
+//! `/metrics` + `/traces` HTTP responder end to end.
 
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::{Arc, Mutex};
 
 use fifer::config::{Policy, SystemConfig};
+use fifer::metrics::JobRecord;
 use fifer::model::Catalog;
-use fifer::obs::{MetricsServer, ObsConfig, ObsReport, SharedSnapshot};
+use fifer::obs::{prom, Collector, MetricsServer, ObsConfig, ObsReport, SharedSnapshot};
 use fifer::scenario::{self, ScenarioSpec};
 use fifer::sim::{run_summarized_obs, SimParams};
 use fifer::trace::Trace;
+use fifer::util::json::Json;
+use fifer::util::secs;
 
 /// A small pure-generator sweep (no artifact files involved, so the
 /// traces are a function of the spec alone): 2 policies x 2 seeds.
@@ -29,7 +33,7 @@ policies = ["Bline", "Fifer"]
 expr = "poisson(rate=20)"
 "#;
 
-fn sim_report() -> ObsReport {
+fn sim_report_with(obs: ObsConfig) -> ObsReport {
     let cat = Catalog::paper();
     let (_, _, report) = run_summarized_obs(
         SimParams {
@@ -39,9 +43,13 @@ fn sim_report() -> ObsReport {
             drain_s: 10.0,
         },
         0,
-        Some(ObsConfig::default()),
+        Some(obs),
     );
     report.expect("collector was enabled")
+}
+
+fn sim_report() -> ObsReport {
+    sim_report_with(ObsConfig::default())
 }
 
 #[test]
@@ -151,6 +159,11 @@ fn metrics_endpoints_end_to_end() {
     assert_eq!(code, 404);
     let (code, _) = get(addr, "/metrics/history?minutes=abc");
     assert_eq!(code, 400);
+    // zero/empty minutes are rejected, not clamped to one row
+    let (code, _) = get(addr, "/metrics/history?minutes=0");
+    assert_eq!(code, 400);
+    let (code, _) = get(addr, "/metrics/history?minutes=");
+    assert_eq!(code, 400);
     let mut s = TcpStream::connect(addr).unwrap();
     write!(s, "POST /metrics HTTP/1.1\r\n\r\n").unwrap();
     let mut raw = String::new();
@@ -158,4 +171,273 @@ fn metrics_endpoints_end_to_end() {
     assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
 
     srv.stop();
+}
+
+#[test]
+fn prom_and_traces_endpoints_end_to_end() {
+    let shared: SharedSnapshot = Arc::new(Mutex::new(None));
+    let srv = MetricsServer::start("127.0.0.1:0", shared.clone()).expect("bind");
+    let addr = srv.local_addr();
+
+    let report = sim_report_with(ObsConfig {
+        trace_sample: 1,
+        ..ObsConfig::default()
+    });
+    assert!(!report.traces.is_empty(), "tracing at 1-in-1 records spans");
+    *shared.lock().unwrap() = Some(report.clone());
+
+    // /metrics/prom serves exactly the exposition renderer's bytes
+    let (code, body) = get(addr, "/metrics/prom");
+    assert_eq!(code, 200);
+    assert_eq!(body, prom::render(&report));
+    assert!(body.contains("# TYPE fifer_arrivals_total counter"));
+    assert!(body.contains("fifer_slo_attained{slo=\"request_success_rate\"}"));
+
+    // /traces serves the Chrome trace document, honoring last=N
+    let (code, body) = get(addr, "/traces");
+    assert_eq!(code, 200);
+    assert_eq!(body, report.trace_json(Some(100)).to_string());
+    let (code, body) = get(addr, "/traces?last=1");
+    assert_eq!(code, 200);
+    assert_eq!(body, report.trace_json(Some(1)).to_string());
+    let doc = Json::parse(&body).expect("valid JSON");
+    assert!(!doc.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+    // bad last values: zero and junk are 400
+    let (code, _) = get(addr, "/traces?last=0");
+    assert_eq!(code, 400);
+    let (code, _) = get(addr, "/traces?last=nope");
+    assert_eq!(code, 400);
+
+    srv.stop();
+}
+
+#[test]
+fn responder_rejects_oversized_and_stalled_requests() {
+    let shared: SharedSnapshot = Arc::new(Mutex::new(None));
+    let srv = MetricsServer::start("127.0.0.1:0", shared.clone()).expect("bind");
+    let addr = srv.local_addr();
+
+    // a request line that fills the 2 KiB head buffer without a CRLF
+    // is answered 431, not parsed (exactly 2048 bytes, so the server
+    // closes with nothing left unread and the client sees a clean FIN)
+    let mut s = TcpStream::connect(addr).unwrap();
+    let long = vec![b'a'; 2048 - "GET /".len()];
+    s.write_all(b"GET /").unwrap();
+    s.write_all(&long).unwrap();
+    s.flush().unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 431"), "{raw}");
+
+    // a client that connects and sends nothing is cut off with 408
+    // after the 2 s read timeout instead of stalling the responder
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 408"), "{raw}");
+
+    // the responder survived both and still serves normal requests
+    *shared.lock().unwrap() = Some(sim_report());
+    let (code, _) = get(addr, "/metrics");
+    assert_eq!(code, 200);
+
+    srv.stop();
+}
+
+// ---------------------------------------------------------------------
+// tracing
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_out_is_byte_identical_across_runs_and_thread_counts() {
+    let spec = ScenarioSpec::parse(SPEC).unwrap();
+    let obs = Some(ObsConfig {
+        trace_sample: 4,
+        trace_keep: usize::MAX,
+        ..ObsConfig::default()
+    });
+    let render = |threads| {
+        let results = scenario::run_scenario_obs(&spec, threads, obs).unwrap();
+        scenario::results_trace_json(&spec, &results).to_string()
+    };
+    let serial = render(1);
+    assert_eq!(serial, render(1), "run-to-run divergence");
+    assert_eq!(serial, render(4), "thread-count divergence");
+
+    // schema sanity: a loadable trace-event document with the span
+    // vocabulary the tentpole promises
+    let doc = Json::parse(&serial).expect("valid JSON");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() > 100, "only {} events", events.len());
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "M", "unexpected phase {ph}");
+        if ph == "X" {
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("pid").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(e.get("tid").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    for needle in [
+        "\"cat\":\"request\"",
+        "\"cat\":\"stage\"",
+        "\"name\":\"exec\"",
+        "\"name\":\"monitor\"",
+        "\"container\":",
+        "\"node\":",
+        "\"batch\":",
+        "\"cold\":",
+        "\"policy\":\"Fifer\"",
+        "\"policy\":\"Bline\"",
+    ] {
+        assert!(serial.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn trace_sampling_is_head_based_and_seeded() {
+    let full = sim_report_with(ObsConfig {
+        trace_sample: 1,
+        trace_keep: usize::MAX,
+        ..ObsConfig::default()
+    });
+    let quarter = sim_report_with(ObsConfig {
+        trace_sample: 4,
+        trace_keep: usize::MAX,
+        ..ObsConfig::default()
+    });
+    let off = sim_report();
+    // 1-in-1 keeps every completed request; 1-in-4 a strict subset
+    assert_eq!(full.traces.len() as u64, full.totals.completions);
+    assert!(quarter.traces.len() < full.traces.len());
+    assert!(!quarter.traces.is_empty());
+    assert!(off.traces.is_empty(), "trace_sample=0 disables recording");
+    // every sampled request carries a full span tree
+    for t in &full.traces {
+        assert!(!t.stages.is_empty(), "job {} has no stages", t.job_id);
+        for s in &t.stages {
+            assert!(s.enqueued <= s.exec_start && s.exec_start <= s.exec_end);
+            assert!(s.batch >= 1);
+        }
+        assert!(t.completion >= t.arrival);
+    }
+    // the sampled id set is a pure function of the seed
+    let again = sim_report_with(ObsConfig {
+        trace_sample: 4,
+        trace_keep: usize::MAX,
+        ..ObsConfig::default()
+    });
+    let ids = |r: &ObsReport| r.traces.iter().map(|t| t.job_id).collect::<Vec<_>>();
+    assert_eq!(ids(&quarter), ids(&again));
+}
+
+#[test]
+fn summary_carries_decision_latency_block() {
+    // deterministic runs render zeros...
+    let s = sim_report().summary_json().to_string();
+    assert!(s.contains("\"decision_latency_us\":"), "{s}");
+    assert!(s.contains("\"samples\":0"));
+    // ...and probed samples land in the histogram percentiles
+    let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Test");
+    for ns in [10_000u64, 150_000, 2_000_000] {
+        c.on_decision_latency(ns);
+    }
+    let r = c.report(0);
+    assert_eq!(r.decision.count, 3);
+    assert!((r.decision.max_us - 2000.0).abs() < 1e-9);
+    let s = r.summary_json().to_string();
+    assert!(s.contains("\"samples\":3"), "{s}");
+}
+
+// ---------------------------------------------------------------------
+// burn-rate alert edges + ring wraparound (satellite coverage)
+// ---------------------------------------------------------------------
+
+/// Feed `jobs` completions into `c` inside the one-minute bucket at
+/// `minute`, all succeeding (`ok`) or all violating.
+fn feed_minute(c: &mut Collector, minute: u64, jobs: u64, ok: bool) {
+    let t = secs(minute as f64 * 60.0 + 1.0);
+    for k in 0..jobs {
+        let rec = JobRecord {
+            chain: 0,
+            arrival: t,
+            completion: t,
+            stages: Vec::new(),
+        };
+        c.on_job_complete(t, minute * 10_000 + k, &rec, ok);
+    }
+}
+
+fn success_eval(c: &Collector, minute: u64) -> fifer::obs::SloEval {
+    let evals = c.report(secs(minute as f64 * 60.0 + 30.0)).contract();
+    assert_eq!(evals[0].name, "request_success_rate");
+    evals[0].clone()
+}
+
+#[test]
+fn burn_rate_alert_edge_transitions() {
+    // default windows: fast = 5 min, slow = 60 min, one-minute buckets
+    let mut c = Collector::new(ObsConfig::default(), 1000.0, 0, "Test");
+
+    // phase A: a long healthy history, then a 5-minute total outage —
+    // the fast window burns but the slow window still holds budget, so
+    // no page (brief spikes must not alert)
+    for m in 0..60 {
+        feed_minute(&mut c, m, 100, true);
+    }
+    for m in 60..65 {
+        feed_minute(&mut c, m, 100, false);
+    }
+    let e = success_eval(&c, 64);
+    assert!(e.burn_fast >= 1.0, "fast window must burn: {e:?}");
+    assert!(e.burn_slow < 1.0, "slow window must still hold: {e:?}");
+    assert!(!e.alerting(), "fast-only breach must not page: {e:?}");
+
+    // phase B: the outage persists until the slow window breaches too —
+    // now both burns cross 1 and the objective pages
+    for m in 65..125 {
+        feed_minute(&mut c, m, 100, false);
+    }
+    let e = success_eval(&c, 124);
+    assert!(e.burn_fast >= 1.0 && e.burn_slow >= 1.0, "{e:?}");
+    assert!(e.alerting(), "sustained breach must page: {e:?}");
+
+    // phase C: recovery hysteresis — 5 healthy minutes clear the fast
+    // window and the page drops even though the slow window is still
+    // deep in violation
+    for m in 125..130 {
+        feed_minute(&mut c, m, 100, true);
+    }
+    let e = success_eval(&c, 129);
+    assert!(e.burn_fast < 1.0, "recovered fast window: {e:?}");
+    assert!(e.burn_slow >= 1.0, "slow window still burned: {e:?}");
+    assert!(!e.alerting(), "recovery must clear the page: {e:?}");
+}
+
+#[test]
+fn ring_wraparound_keeps_oldest_row_identity() {
+    let cfg = ObsConfig {
+        bucket_s: 1,
+        retention_buckets: 4,
+        ..ObsConfig::default()
+    };
+    let mut c = Collector::new(cfg, 1000.0, 0, "Test");
+    // second s gets s+1 arrivals, so every row is self-identifying
+    for s in 0..12u64 {
+        for _ in 0..=s {
+            c.on_arrival(secs(s as f64));
+        }
+    }
+    let r = c.report(secs(11.0));
+    assert_eq!(r.rows.len(), 4);
+    assert_eq!(r.dropped_buckets, 8, "evictions are counted");
+    for (i, row) in r.rows.iter().enumerate() {
+        let s = 8 + i as u64;
+        assert_eq!(row.start, secs(s as f64), "row {i} start");
+        assert_eq!(row.arrivals, s + 1, "row {i} is the right row");
+    }
+    // totals survive wraparound even though rows were dropped
+    assert_eq!(r.totals.arrivals, (1..=12).sum::<u64>());
 }
