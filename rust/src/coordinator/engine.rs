@@ -57,6 +57,7 @@ use crate::coordinator::queue::{QueueEntry, StageQueue};
 use crate::coordinator::state::{BatchStart, CState, StateStore};
 use crate::coordinator::{lsf_key, scaling, slack::SlackPlan};
 use crate::energy::ClusterEnergy;
+use crate::estimator::{Invocation, InvocationLog};
 use crate::metrics::{JobRecord, Recorder, StageRecord};
 use crate::model::{Catalog, ChainId, MsId};
 use crate::obs::{Collector, Gauges, ObsConfig, ObsReport, StageSpan};
@@ -248,6 +249,10 @@ pub struct EngineCore<D: Driver> {
     /// telemetry taps cost one branch each and cannot perturb the
     /// zero-alloc pin or byte-identity of runs that don't ask for it).
     obs: Option<Box<Collector>>,
+    /// Opt-in invocation log for the offline optimality-gap estimators
+    /// (`None` by default — same contract as `obs`: one branch on the
+    /// completion path, zero effect on runs that don't ask for it).
+    inv_log: Option<Box<InvocationLog>>,
     pub(crate) driver: D,
 }
 
@@ -319,6 +324,7 @@ impl<D: Driver> EngineCore<D> {
             scratch_batch: Vec::with_capacity(16),
             scratch_done: Vec::with_capacity(16),
             obs: None,
+            inv_log: None,
             driver,
         }
     }
@@ -339,6 +345,24 @@ impl<D: Driver> EngineCore<D> {
         let seed = self.cfg.seed;
         let policy = self.policy.as_ref().map_or("?", |p| p.name());
         self.obs = Some(Box::new(Collector::new(cfg, slo_ms, seed, policy)));
+    }
+
+    /// Attach the invocation log feeding the offline optimality-gap
+    /// estimators ([`crate::estimator`]). Captures the exec-model
+    /// constants (batch cost slope, warm overhead, slack-plan batch
+    /// capacities) up front; per-invocation entries are recorded as
+    /// batches complete. Off by default, same contract as [`Self::enable_obs`].
+    pub fn enable_invocation_log(&mut self) {
+        let mut batch_cap = std::collections::BTreeMap::new();
+        for &ms in &self.stages {
+            batch_cap.insert(ms, self.plan.batch_for(ms));
+        }
+        self.inv_log = Some(Box::new(InvocationLog {
+            entries: Vec::new(),
+            gamma: self.cfg.rm.batch_cost_gamma,
+            overhead: self.cold.warm_overhead(),
+            batch_cap,
+        }));
     }
 
     /// Snapshot the collector at the current engine time (`None` when
@@ -570,6 +594,16 @@ impl<D: Driver> EngineCore<D> {
         (self.recorder, self.driver, obs)
     }
 
+    /// [`EngineCore::into_parts_obs`] plus the captured invocation log
+    /// (`None` when [`Self::enable_invocation_log`] was never called).
+    pub fn into_parts_full(
+        mut self,
+    ) -> (Recorder, D, Option<ObsReport>, Option<InvocationLog>) {
+        let log = self.inv_log.take().map(|b| *b);
+        let (recorder, driver, obs) = self.into_parts_obs();
+        (recorder, driver, obs, log)
+    }
+
     // ------------------------------------------------------------------
     // event handlers
     // ------------------------------------------------------------------
@@ -737,8 +771,31 @@ impl<D: Driver> EngineCore<D> {
             self.start_exec(cid);
         }
 
+        // per-stage response budget for the optimality log, resolved
+        // once per batch (all members share the stage)
+        let inv_budget = self
+            .inv_log
+            .is_some()
+            .then(|| ms(self.plan.s_r_for(ms_id)));
+
         // finalize stage records and advance every job of the batch
         for &job_id in &batch_jobs {
+            if let Some(budget) = inv_budget {
+                let (enqueued, exec_start) = {
+                    let j = &self.jobs[job_id as usize];
+                    (j.cur_enqueued, j.cur_exec_start)
+                };
+                if let Some(log) = self.inv_log.as_deref_mut() {
+                    log.entries.push(Invocation {
+                        ms_id,
+                        enqueued,
+                        exec_start,
+                        exec_end: self.now,
+                        batch: batch_jobs.len() as u32,
+                        budget,
+                    });
+                }
+            }
             if let Some((node, cold, stage)) = span_src {
                 let (enqueued, exec_start, cold_wait) = {
                     let j = &self.jobs[job_id as usize];

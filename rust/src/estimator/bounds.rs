@@ -1,0 +1,391 @@
+//! The three lower-bound estimators.
+//!
+//! All three consume the same prepared per-stage view: each
+//! invocation's release `r` (enqueue time), relaxed deadline `d`
+//! (slack-plan deadline widened to the realized completion, see
+//! [`super::Invocation::deadline`]), minimal pass duration `pmin`
+//! (warm overhead + recovered single-job exec), and minimal container
+//! occupancy `occ` (its cheapest possible share of a batch pass).
+//!
+//! Shared conventions (the "clairvoyant over recorded invocations"
+//! instance every bound is an optimum-lower-bound *of*):
+//!
+//! * An invocation's recovered single-job exec `e1` is intrinsic: any
+//!   batch serving it takes at least `overhead + e1·(1 + γ·(B−1))`,
+//!   and a batch's pass is at least as long as its longest member's.
+//! * A container runs one batch at a time, at most `cap` invocations
+//!   per batch (`cap` = slack-plan capacity, widened to the largest
+//!   batch the run actually formed, so the recorded schedule itself is
+//!   always admissible).
+//! * Every container spawn is cold (true of both drivers — the engine
+//!   has no prewarm path), so "containers that must exist" lower-bounds
+//!   cold starts.
+//!
+//! Numeric discipline: all sweeps run in `f64` microseconds derived
+//! from integer `Micros`, iteration order is fixed (BTreeMap stages,
+//! completion-order entries, fully-keyed sorts), and density ceilings
+//! subtract a 1e-9 epsilon before `ceil` so float noise can only ever
+//! *weaken* a bound, never overshoot it. This keeps `--optimality`
+//! output byte-identical across runs and `--threads`.
+
+use std::collections::BTreeMap;
+
+use super::InvocationLog;
+use crate::model::MsId;
+use crate::util::json::Json;
+use crate::util::MICROS_PER_S;
+
+/// A lower bound on both objectives, as computed by one estimator.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Bounds {
+    pub container_s: f64,
+    pub cold_starts: u64,
+}
+
+impl Bounds {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("container_s", Json::Num(self.container_s)),
+            ("cold_starts", Json::Num(self.cold_starts as f64)),
+        ])
+    }
+}
+
+/// Derived per-invocation window, all fields in f64 µs.
+struct Window {
+    /// Release (enqueue time).
+    r: f64,
+    /// Relaxed deadline.
+    d: f64,
+    /// Minimal pass duration serving this invocation.
+    pmin: f64,
+    /// Minimal container occupancy attributable to this invocation.
+    occ: f64,
+}
+
+struct Stage {
+    /// Batch capacity a container offers (plan cap widened to the
+    /// largest observed batch).
+    cap: usize,
+    /// Windows in completion order.
+    wins: Vec<Window>,
+}
+
+/// Candidate segment starts are subsampled to this many quantiles in
+/// [`segment_bound`]; subsampling can only weaken the bound.
+const MAX_SEGMENT_STARTS: usize = 64;
+
+fn prepare(log: &InvocationLog) -> BTreeMap<MsId, Stage> {
+    let mut observed_cap: BTreeMap<MsId, usize> = BTreeMap::new();
+    for e in &log.entries {
+        let c = observed_cap.entry(e.ms_id).or_insert(1);
+        *c = (*c).max(e.batch.max(1) as usize);
+    }
+    let gamma = log.gamma.max(0.0);
+    let oh = log.overhead as f64;
+    let mut stages: BTreeMap<MsId, Stage> = BTreeMap::new();
+    for (&ms, &obs) in &observed_cap {
+        let cap = log.batch_cap.get(&ms).copied().unwrap_or(1).max(obs);
+        stages.insert(ms, Stage { cap, wins: Vec::new() });
+    }
+    for e in &log.entries {
+        let st = stages.get_mut(&e.ms_id).expect("stage seeded above");
+        let b = e.batch.max(1) as f64;
+        let dur = e.exec_end.saturating_sub(e.exec_start) as f64;
+        // invert exec(B) = exec(1)·(1 + γ·(B−1)) + overhead
+        let e1 = (dur - oh).max(0.0) / (1.0 + gamma * (b - 1.0));
+        let occ_at = |bb: f64| (e1 * (1.0 + gamma * (bb - 1.0)) + oh) / bb;
+        // occ_at is monotone in B (hyperbola + constant), so the min
+        // over integer B ∈ [1, cap] sits at an endpoint; the realized
+        // share dur/b caps it so the bound can never exceed what the
+        // recorded schedule itself paid for this invocation
+        let occ = occ_at(1.0).min(occ_at(st.cap as f64)).min(dur / b);
+        let pmin = (oh + e1).min(dur);
+        st.wins.push(Window {
+            r: e.enqueued as f64,
+            d: e.deadline() as f64,
+            pmin,
+            occ,
+        });
+    }
+    stages
+}
+
+fn to_seconds(us: f64) -> f64 {
+    us / MICROS_PER_S as f64
+}
+
+fn ceil_div(n: usize, d: usize) -> usize {
+    if d == 0 {
+        n
+    } else {
+        n.div_ceil(d)
+    }
+}
+
+/// Greedy interval-packing bound.
+///
+/// Packs every invocation into its cheapest hypothetical batch slot:
+/// container-seconds ≥ Σ occ (work / shared-capacity bound), and every
+/// stage that served at least one invocation needed at least one
+/// (cold-started) container.
+pub fn greedy_bound(log: &InvocationLog) -> Bounds {
+    let stages = prepare(log);
+    let mut work_us = 0.0;
+    let mut cold = 0u64;
+    for st in stages.values() {
+        if st.wins.is_empty() {
+            continue;
+        }
+        cold += 1;
+        for w in &st.wins {
+            work_us += w.occ;
+        }
+    }
+    Bounds {
+        container_s: to_seconds(work_us),
+        cold_starts: cold,
+    }
+}
+
+/// Path-cover bound over the idle-gap graph.
+///
+/// Two invocations can share a container warm iff one's earliest
+/// finish precedes the other's latest start (the idle-gap DAG); by
+/// Dilworth, the minimum chain cover equals the maximum antichain,
+/// which for interval orders is the peak overlap of the mandatory
+/// windows `(d − pmin, r + pmin)` — any pass serving an invocation
+/// must cover its whole mandatory window. A sweep over those windows
+/// yields per stage:
+///
+/// * cold starts ≥ ⌈peak overlap / cap⌉ (simultaneous passes, ≤ cap
+///   antichain members per container);
+/// * container-seconds ≥ ∫ ⌈overlap(t) / cap⌉ dt (containers that must
+///   be mid-pass at time t).
+pub fn path_cover_bound(log: &InvocationLog) -> Bounds {
+    let stages = prepare(log);
+    let mut area_us = 0.0;
+    let mut cold = 0u64;
+    for st in stages.values() {
+        if st.wins.is_empty() {
+            continue;
+        }
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for w in &st.wins {
+            let ls = (w.d - w.pmin).max(w.r);
+            let ef = w.r + w.pmin;
+            if ef > ls {
+                events.push((ls, 1));
+                events.push((ef, -1));
+            }
+        }
+        if events.is_empty() {
+            // enough slack that no invocation has a mandatory part —
+            // the stage still needed one container
+            cold += 1;
+            continue;
+        }
+        // open intervals: at a tie, close (-1) before open (+1), so
+        // touching windows never count as overlapping (undercounts,
+        // i.e. stays a lower bound)
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite").then(a.1.cmp(&b.1)));
+        let mut live: i64 = 0;
+        let mut peak: i64 = 0;
+        let mut prev_t = events[0].0;
+        for &(t, delta) in &events {
+            if t > prev_t && live > 0 {
+                area_us += (t - prev_t) * ceil_div(live as usize, st.cap) as f64;
+            }
+            prev_t = t;
+            live += i64::from(delta);
+            peak = peak.max(live);
+        }
+        cold += ceil_div(peak as usize, st.cap).max(1) as u64;
+    }
+    Bounds {
+        container_s: to_seconds(area_us),
+        cold_starts: cold,
+    }
+}
+
+/// Segmented LP-relaxation-style bound.
+///
+/// For any segment `[a, b]`, the work `W(a, b)` of invocations whose
+/// whole window fits inside it must execute inside it, and each
+/// container contributes at most `b − a` of occupancy there — so the
+/// stage needed at least `⌈W(a, b) / (b − a)⌉` containers (all cold).
+/// Candidate `a`s are release-time quantiles (≤ 64); for each, a
+/// deadline-ordered prefix sweep evaluates every candidate `b` in
+/// O(n). Container-seconds from this family degenerate to the
+/// whole-window work bound (W is monotone in the segment), which is
+/// what it reports for that objective.
+pub fn segment_bound(log: &InvocationLog) -> Bounds {
+    let stages = prepare(log);
+    let mut work_us = 0.0;
+    let mut cold = 0u64;
+    for st in stages.values() {
+        if st.wins.is_empty() {
+            continue;
+        }
+        for w in &st.wins {
+            work_us += w.occ;
+        }
+        let mut starts: Vec<f64> = st.wins.iter().map(|w| w.r).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        starts.dedup();
+        let starts = subsample(&starts);
+        let mut best: u64 = 1;
+        for &a in &starts {
+            let mut items: Vec<(f64, f64)> = st
+                .wins
+                .iter()
+                .filter(|w| w.r >= a)
+                .map(|w| (w.d, w.occ))
+                .collect();
+            items.sort_by(|x, y| {
+                x.0.partial_cmp(&y.0)
+                    .expect("finite")
+                    .then(x.1.partial_cmp(&y.1).expect("finite"))
+            });
+            let mut acc = 0.0;
+            for &(d, occ) in &items {
+                acc += occ;
+                let len = d - a;
+                if len > 0.0 {
+                    let k = (acc / len - 1e-9).ceil();
+                    if k > best as f64 {
+                        best = k as u64;
+                    }
+                }
+            }
+        }
+        cold += best;
+    }
+    Bounds {
+        container_s: to_seconds(work_us),
+        cold_starts: cold,
+    }
+}
+
+/// Deterministic quantile subsample: keeps first and last, evenly
+/// spaced indices in between.
+fn subsample(starts: &[f64]) -> Vec<f64> {
+    if starts.len() <= MAX_SEGMENT_STARTS {
+        return starts.to_vec();
+    }
+    (0..MAX_SEGMENT_STARTS)
+        .map(|i| starts[i * (starts.len() - 1) / (MAX_SEGMENT_STARTS - 1)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Invocation, InvocationLog};
+    use super::*;
+    use crate::util::secs;
+
+    fn log_of(cap: usize, entries: Vec<Invocation>) -> InvocationLog {
+        let mut batch_cap = BTreeMap::new();
+        for e in &entries {
+            batch_cap.insert(e.ms_id, cap);
+        }
+        InvocationLog {
+            entries,
+            gamma: 0.0,
+            overhead: 0,
+            batch_cap,
+        }
+    }
+
+    fn unit_inv(enq_s: f64, end_s: f64, budget_s: f64) -> Invocation {
+        Invocation {
+            ms_id: 0,
+            enqueued: secs(enq_s),
+            exec_start: secs(enq_s),
+            exec_end: secs(end_s),
+            batch: 1,
+            budget: secs(budget_s),
+        }
+    }
+
+    #[test]
+    fn path_cover_touching_windows_do_not_overlap() {
+        // two tight jobs back to back: mandatory windows touch at t=1s
+        // and must not be counted as simultaneous
+        let log = log_of(
+            1,
+            vec![unit_inv(0.0, 1.0, 1.0), unit_inv(1.0, 2.0, 1.0)],
+        );
+        let b = path_cover_bound(&log);
+        assert_eq!(b.cold_starts, 1);
+        assert!((b.container_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_cover_concurrent_tight_jobs_need_two_containers() {
+        let log = log_of(
+            1,
+            vec![unit_inv(0.0, 1.0, 1.0), unit_inv(0.0, 1.0, 1.0)],
+        );
+        let b = path_cover_bound(&log);
+        assert_eq!(b.cold_starts, 2);
+        assert!((b.container_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_cover_batch_capacity_divides_peak() {
+        // four concurrent tight jobs, capacity 4: one shared pass does
+        let log = log_of(4, (0..4).map(|_| unit_inv(0.0, 1.0, 1.0)).collect());
+        let b = path_cover_bound(&log);
+        assert_eq!(b.cold_starts, 1);
+        assert!((b.container_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segment_density_forces_container_count() {
+        // 3s of work with releases and deadlines inside one 1s segment
+        // -> at least 3 containers, despite the work bound alone only
+        // implying "some container ran 3 container-seconds"
+        let log = log_of(
+            1,
+            (0..3).map(|_| unit_inv(10.0, 11.0, 1.0)).collect(),
+        );
+        let b = segment_bound(&log);
+        assert_eq!(b.cold_starts, 3);
+        assert!((b.container_s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segment_exact_density_does_not_overshoot() {
+        // density exactly 1.0: the epsilon guard must keep ceil at 1
+        let log = log_of(1, vec![unit_inv(0.0, 10.0, 10.0)]);
+        assert_eq!(segment_bound(&log).cold_starts, 1);
+    }
+
+    #[test]
+    fn subsample_is_deterministic_and_keeps_endpoints() {
+        let starts: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s1 = subsample(&starts);
+        let s2 = subsample(&starts);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), MAX_SEGMENT_STARTS);
+        assert_eq!(s1[0], 0.0);
+        assert_eq!(*s1.last().unwrap(), 999.0);
+    }
+
+    #[test]
+    fn slack_collapses_path_cover_but_not_work() {
+        // generous budgets: every pass can be deferred, so no mandatory
+        // parts exist — path-cover container_s drops to 0 while the
+        // greedy work bound holds the floor
+        let log = log_of(
+            1,
+            vec![unit_inv(0.0, 1.0, 100.0), unit_inv(0.5, 1.5, 100.0)],
+        );
+        let pc = path_cover_bound(&log);
+        assert_eq!(pc.container_s, 0.0);
+        assert_eq!(pc.cold_starts, 1);
+        let g = greedy_bound(&log);
+        assert!((g.container_s - 2.0).abs() < 1e-9);
+    }
+}

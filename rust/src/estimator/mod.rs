@@ -1,0 +1,400 @@
+//! Optimality gap: offline lower-bound estimators over a completed run's
+//! recorded invocation set.
+//!
+//! Every policy comparison elsewhere in the repo is *relative* ("Fifer
+//! spawns 4x fewer containers than Bline", paper §6). This module turns
+//! that into an absolute yardstick: given the invocations a finished run
+//! actually served — when each stage request became runnable, how long
+//! it executed, what per-stage response budget the slack plan gave it —
+//! compute **lower bounds** on the container-seconds and cold starts
+//! *any* schedule could have achieved on the same invocation set, and
+//! report each run's gap to those bounds. The estimator trio follows the
+//! local-search / path-cover / segment family of FaaS scheduling bounds
+//! (dslab-faas-estimators; NOAH, arxiv 1809.06100, frames serverless
+//! scheduling as the job-scheduling problem these bounds come from):
+//!
+//! * [`bounds::greedy_bound`] — greedy interval-packing: every
+//!   invocation packed into a maximally shared batch slot (work /
+//!   capacity bound).
+//! * [`bounds::path_cover_bound`] — path cover over the idle-gap graph:
+//!   Dilworth's theorem turns the minimum chain cover of the
+//!   "same container can serve i then j" DAG into the peak of the
+//!   mandatory-execution profile.
+//! * [`bounds::segment_bound`] — segmented LP-relaxation: work that must
+//!   complete inside a time segment, divided by segment capacity.
+//!
+//! # Soundness
+//!
+//! The headline invariant (pinned by `rust/tests/test_estimator.rs` for
+//! every registered policy): **a bound never exceeds the recorded run's
+//! achieved cost**. Two constructions make this hold unconditionally:
+//!
+//! * Deadlines are *relaxed to realized completions*: an invocation's
+//!   window is `[enqueued, max(enqueued + budget, exec_end)]`, so the
+//!   observed schedule is always feasible for the instance being
+//!   bounded — even when the run violated SLOs — and the optimum of the
+//!   relaxed instance is ≤ the observed cost.
+//! * Per-invocation service times are recovered from the recorded batch
+//!   pass by inverting the exec model
+//!   (`exec(B) = exec(1)·(1 + γ·(B−1)) + overhead`), so the minimal
+//!   occupancy credited to an invocation never exceeds its realized
+//!   share of container time.
+//!
+//! Two caveats, documented in `docs/EXPERIMENTS.md`: bounds are
+//! **per-objective, not joint** (the container-second optimum may retire
+//! eagerly while the cold-start optimum keeps containers alive forever —
+//! no single schedule need attain both), and they are *clairvoyant over
+//! the recorded invocation set* (stage release times are taken from the
+//! run being analyzed, the standard offline-estimator convention).
+//!
+//! Capture is an opt-in [`EngineCore`](crate::coordinator::engine)
+//! tap like the obs collector: `None` by default, so runs that don't ask
+//! for it keep the zero-alloc pin and byte-identity untouched. Enable
+//! via `fifer scenario run <spec> --optimality` (byte-deterministic
+//! across `--threads`), `fifer simulate --optimality`, or
+//! [`crate::sim::run_summarized_full`].
+
+pub mod bounds;
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Recorder;
+use crate::model::MsId;
+use crate::util::json::Json;
+use crate::util::{Micros, MICROS_PER_S};
+
+pub use bounds::{greedy_bound, path_cover_bound, segment_bound, Bounds};
+
+/// One recorded stage invocation: everything the estimators need to
+/// reconstruct its feasible execution window and minimal footprint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Invocation {
+    pub ms_id: MsId,
+    /// When the request entered the stage's global queue (its release).
+    pub enqueued: Micros,
+    /// When its batch pass began executing.
+    pub exec_start: Micros,
+    /// When its batch pass finished.
+    pub exec_end: Micros,
+    /// Size of the batch pass that served it.
+    pub batch: u32,
+    /// Per-stage response budget S_r (slack + exec, µs) from the slack
+    /// plan — the deadline is `enqueued + budget`, relaxed to the
+    /// realized completion when the run overshot it.
+    pub budget: Micros,
+}
+
+impl Invocation {
+    /// Relaxed deadline: the slack-plan deadline, widened to the
+    /// realized completion so the recorded schedule is always feasible
+    /// for the instance being bounded.
+    pub fn deadline(&self) -> Micros {
+        (self.enqueued + self.budget).max(self.exec_end)
+    }
+}
+
+/// The invocation set of one completed run, captured by the
+/// `EngineCore` tap, plus the exec-model constants needed to invert
+/// recorded batch passes into per-invocation service times.
+#[derive(Debug, Clone, Default)]
+pub struct InvocationLog {
+    /// Stage invocations in completion order (deterministic per seed).
+    pub entries: Vec<Invocation>,
+    /// Batch cost slope γ of `exec(B) = exec(1)·(1 + γ·(B−1))`.
+    pub gamma: f64,
+    /// Warm scheduling overhead added to every batch pass (µs).
+    pub overhead: Micros,
+    /// Slack-plan batch capacity per stage (shared capacity one
+    /// container offers a hypothetical schedule).
+    pub batch_cap: BTreeMap<MsId, usize>,
+}
+
+/// Lower bounds vs achieved cost for one run — the `optimality` block of
+/// [`crate::metrics::Summary`].
+#[derive(Debug, Clone)]
+pub struct OptimalityReport {
+    /// Stage invocations analyzed.
+    pub invocations: u64,
+    pub greedy: Bounds,
+    pub path_cover: Bounds,
+    pub segment: Bounds,
+    /// Best (largest) lower bound on container-seconds across the trio.
+    pub bound_container_s: f64,
+    /// Best (largest) lower bound on cold starts across the trio.
+    pub bound_cold_starts: u64,
+    /// The run's realized container-seconds over its full horizon
+    /// (drain included — the same window the log covers).
+    pub achieved_container_s: f64,
+    /// The run's realized cold starts.
+    pub achieved_cold_starts: u64,
+    /// `100·(achieved − bound)/achieved` per objective; 0 when nothing
+    /// was achieved. Negative would mean an unsound bound — the
+    /// soundness suite asserts it never is.
+    pub gap_container_pct: f64,
+    pub gap_cold_start_pct: f64,
+}
+
+fn gap_pct(achieved: f64, bound: f64) -> f64 {
+    if achieved <= 0.0 {
+        0.0
+    } else {
+        100.0 * (achieved - bound) / achieved
+    }
+}
+
+/// Realized container-seconds over the run's full lifetime, drain
+/// included — the cost the log's invocation set was served at. (The
+/// [`crate::metrics::Summary`] `avg_containers` field trims warm-up and
+/// clamps at the horizon; the bound must compare against the *whole*
+/// window its invocations span, so this is computed separately.)
+pub fn achieved_container_seconds(rec: &Recorder) -> f64 {
+    let mut area: u64 = 0;
+    for c in &rec.containers {
+        let end = c.retired_at.unwrap_or_else(|| rec.horizon.max(c.spawned_at));
+        area += end.saturating_sub(c.spawned_at);
+    }
+    area as f64 / MICROS_PER_S as f64
+}
+
+/// Run the full estimator trio over a captured log and the recorder of
+/// the same run; the combined bound per objective is the max across
+/// estimators (each is individually sound, so their max is too).
+pub fn analyze(log: &InvocationLog, rec: &Recorder) -> OptimalityReport {
+    let greedy = greedy_bound(log);
+    let path_cover = path_cover_bound(log);
+    let segment = segment_bound(log);
+    let bound_container_s = greedy
+        .container_s
+        .max(path_cover.container_s)
+        .max(segment.container_s);
+    let bound_cold_starts = greedy
+        .cold_starts
+        .max(path_cover.cold_starts)
+        .max(segment.cold_starts);
+    let achieved_container_s = achieved_container_seconds(rec);
+    let achieved_cold_starts = rec.cold_starts;
+    OptimalityReport {
+        invocations: log.entries.len() as u64,
+        greedy,
+        path_cover,
+        segment,
+        bound_container_s,
+        bound_cold_starts,
+        achieved_container_s,
+        achieved_cold_starts,
+        gap_container_pct: gap_pct(achieved_container_s, bound_container_s),
+        gap_cold_start_pct: gap_pct(achieved_cold_starts as f64, bound_cold_starts as f64),
+    }
+}
+
+impl OptimalityReport {
+    /// Byte-deterministic JSON rendering (sorted keys; entry order and
+    /// every float are pure functions of the run's seed).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("invocations", Json::Num(self.invocations as f64)),
+            ("bound_container_s", Json::Num(self.bound_container_s)),
+            (
+                "bound_cold_starts",
+                Json::Num(self.bound_cold_starts as f64),
+            ),
+            (
+                "achieved",
+                Json::obj(vec![
+                    ("container_s", Json::Num(self.achieved_container_s)),
+                    (
+                        "cold_starts",
+                        Json::Num(self.achieved_cold_starts as f64),
+                    ),
+                ]),
+            ),
+            (
+                "gap_pct",
+                Json::obj(vec![
+                    ("container_s", Json::Num(self.gap_container_pct)),
+                    ("cold_starts", Json::Num(self.gap_cold_start_pct)),
+                ]),
+            ),
+            (
+                "estimators",
+                Json::obj(vec![
+                    ("greedy", self.greedy.to_json()),
+                    ("path_cover", self.path_cover.to_json()),
+                    ("segment", self.segment.to_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{ms, secs};
+
+    /// A log with `overhead = 0`, `γ = 0`, unit batches — per-invocation
+    /// service time is exactly `exec_end − exec_start`.
+    fn plain_log(entries: Vec<Invocation>) -> InvocationLog {
+        let mut batch_cap = BTreeMap::new();
+        for e in &entries {
+            batch_cap.insert(e.ms_id, 1);
+        }
+        InvocationLog {
+            entries,
+            gamma: 0.0,
+            overhead: 0,
+            batch_cap,
+        }
+    }
+
+    fn inv(ms_id: MsId, enq_s: f64, start_s: f64, end_s: f64, budget_s: f64) -> Invocation {
+        Invocation {
+            ms_id,
+            enqueued: secs(enq_s),
+            exec_start: secs(start_s),
+            exec_end: secs(end_s),
+            batch: 1,
+            budget: secs(budget_s),
+        }
+    }
+
+    fn trivial_recorder(horizon_s: f64, containers: u64) -> Recorder {
+        let mut r = Recorder::new();
+        r.horizon = secs(horizon_s);
+        for i in 0..containers {
+            r.container_spawned(i, 0, 0, true);
+            r.container_retired(i, secs(horizon_s));
+        }
+        r
+    }
+
+    // --- edge cases: every estimator returns a defined bound ---------
+
+    #[test]
+    fn empty_trace_bounds_are_zero() {
+        let log = plain_log(Vec::new());
+        for b in [greedy_bound(&log), path_cover_bound(&log), segment_bound(&log)] {
+            assert_eq!(b.container_s, 0.0);
+            assert_eq!(b.cold_starts, 0);
+        }
+        let rep = analyze(&log, &trivial_recorder(10.0, 2));
+        assert_eq!(rep.invocations, 0);
+        assert_eq!(rep.bound_container_s, 0.0);
+        assert_eq!(rep.bound_cold_starts, 0);
+        // idle provisioned containers -> 100% gap, still well defined
+        assert!((rep.gap_container_pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_job_bounds_are_exact() {
+        // 2s of work, 5s budget: slack erases the mandatory window, so
+        // path-cover contributes no container-seconds — but the
+        // combined bound is held exact by the work-based estimators
+        let log = plain_log(vec![inv(3, 0.0, 0.0, 2.0, 5.0)]);
+        for b in [greedy_bound(&log), segment_bound(&log)] {
+            assert!(
+                (b.container_s - 2.0).abs() < 1e-9,
+                "container_s {}",
+                b.container_s
+            );
+        }
+        for b in [greedy_bound(&log), path_cover_bound(&log), segment_bound(&log)] {
+            assert_eq!(b.cold_starts, 1);
+        }
+        let rep = analyze(&log, &trivial_recorder(5.0, 1));
+        assert!((rep.bound_container_s - 2.0).abs() < 1e-9);
+        assert_eq!(rep.bound_cold_starts, 1);
+    }
+
+    #[test]
+    fn all_cold_trace_is_bounded_by_achieved() {
+        // three far-apart invocations, budget so tight no container
+        // could span two of them warm: the run cold-started each
+        let log = plain_log(vec![
+            inv(0, 0.0, 0.0, 1.0, 1.0),
+            inv(0, 100.0, 100.0, 101.0, 1.0),
+            inv(0, 200.0, 200.0, 201.0, 1.0),
+        ]);
+        let rec = {
+            let mut r = Recorder::new();
+            r.horizon = secs(201.0);
+            for (i, t) in [0.0, 100.0, 200.0].iter().enumerate() {
+                r.container_spawned(i as u64, 0, secs(*t), true);
+                r.container_retired(i as u64, secs(*t + 1.0));
+            }
+            r
+        };
+        let rep = analyze(&log, &rec);
+        assert!((rep.achieved_container_s - 3.0).abs() < 1e-9);
+        assert!(rep.bound_container_s <= rep.achieved_container_s + 1e-9);
+        // keeping one container alive across the gaps is feasible, so
+        // the cold-start bound must not exceed 1 per stage... and never
+        // the achieved 3
+        assert!(rep.bound_cold_starts >= 1);
+        assert!(rep.bound_cold_starts <= rep.achieved_cold_starts);
+    }
+
+    #[test]
+    fn all_slo_violating_trace_returns_defined_bounds() {
+        // zero budget: every invocation misses its deadline; the
+        // relaxation widens windows to realized completions instead of
+        // producing an infeasible (or panicking) instance
+        let log = plain_log(vec![
+            inv(0, 0.0, 5.0, 7.0, 0.0),
+            inv(0, 1.0, 9.0, 12.0, 0.0),
+        ]);
+        for b in [greedy_bound(&log), path_cover_bound(&log), segment_bound(&log)] {
+            assert!(b.container_s.is_finite() && b.container_s >= 0.0);
+            assert!(b.cold_starts >= 1);
+        }
+        assert!(greedy_bound(&log).container_s > 0.0);
+        for e in &log.entries {
+            assert!(e.deadline() >= e.exec_end);
+        }
+    }
+
+    #[test]
+    fn report_json_shape_and_determinism() {
+        let log = plain_log(vec![inv(0, 0.0, 0.0, 1.0, 2.0), inv(1, 0.5, 1.0, 2.0, 2.0)]);
+        let rep = analyze(&log, &trivial_recorder(5.0, 2));
+        let js = rep.to_json().to_string();
+        assert_eq!(js, rep.to_json().to_string());
+        for key in [
+            "\"bound_container_s\"",
+            "\"bound_cold_starts\"",
+            "\"achieved\"",
+            "\"gap_pct\"",
+            "\"greedy\"",
+            "\"path_cover\"",
+            "\"segment\"",
+        ] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
+    }
+
+    #[test]
+    fn batch_inversion_never_credits_more_than_realized_share() {
+        // a batch of 4 at γ=0.25 with 10ms overhead: occupancy credited
+        // per invocation must stay below its realized share of the pass
+        let e = Invocation {
+            ms_id: 0,
+            enqueued: 0,
+            exec_start: ms(5.0),
+            exec_end: ms(5.0) + ms(10.0) + ms(100.0 * 1.75),
+            batch: 4,
+            budget: ms(1000.0),
+        };
+        let mut batch_cap = BTreeMap::new();
+        batch_cap.insert(0, 4);
+        let log = InvocationLog {
+            entries: vec![e],
+            gamma: 0.25,
+            overhead: ms(10.0),
+            batch_cap,
+        };
+        let b = greedy_bound(&log);
+        let realized_share_s = (e.exec_end - e.exec_start) as f64 / 4.0 / 1e6;
+        assert!(b.container_s <= realized_share_s + 1e-12);
+        assert!(b.container_s > 0.0);
+    }
+}

@@ -85,6 +85,34 @@ pub fn run_policy(
     prototype_cluster: bool,
     seed: u64,
 ) -> PolicyRun {
+    run_policy_inner(policy, mix_name, kind, duration_s, prototype_cluster, seed, false)
+}
+
+/// [`run_policy`] with the offline optimality-gap analysis: the
+/// summary's `optimality` block reports how far the run's
+/// container-seconds and cold starts sit from the lower bounds of
+/// [`crate::estimator`] — the plumbing behind `fifer simulate
+/// --optimality`.
+pub fn run_policy_opt(
+    policy: Policy,
+    mix_name: &str,
+    kind: TraceKind,
+    duration_s: usize,
+    prototype_cluster: bool,
+    seed: u64,
+) -> PolicyRun {
+    run_policy_inner(policy, mix_name, kind, duration_s, prototype_cluster, seed, true)
+}
+
+fn run_policy_inner(
+    policy: Policy,
+    mix_name: &str,
+    kind: TraceKind,
+    duration_s: usize,
+    prototype_cluster: bool,
+    seed: u64,
+    optimality: bool,
+) -> PolicyRun {
     let cat = Catalog::paper();
     let mut cfg = if prototype_cluster {
         SystemConfig::prototype(policy)
@@ -107,7 +135,7 @@ pub fn run_policy(
     // Exclude the initial cold-start transient (~2 min of cluster warm-up)
     // from the steady-state metrics, as on a long-running real cluster.
     let warmup = crate::util::secs((duration_s as f64 * 0.5).min(700.0));
-    let (recorder, summary) = crate::sim::run_summarized(params, warmup);
+    let (recorder, summary, _) = crate::sim::run_summarized_full(params, warmup, None, optimality);
     PolicyRun {
         policy,
         summary,

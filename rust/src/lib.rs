@@ -57,7 +57,7 @@
 //! | drivers | [`sim`] (virtual time), [`server`] + [`runtime`] (real time, PJRT/synthetic) |
 //! | mechanics | [`coordinator`] (store/queues/slack/scaling), [`coldstart`], [`energy`] |
 //! | prediction | [`predictor`] (EWMA/ARIMA/LSTM zoo) |
-//! | evaluation | [`experiments`], [`metrics`], [`bench`] |
+//! | evaluation | [`experiments`], [`metrics`], [`bench`], [`estimator`] (offline lower bounds / optimality gap) |
 //! | observability | [`obs`] (SLO contract, timeline ring, `/metrics` endpoint — one schema for both drivers) |
 //! | support | [`cli`], [`util`] (vendored rng/json/stats) |
 //!
@@ -71,6 +71,7 @@ pub mod coldstart;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod estimator;
 pub mod experiments;
 pub mod metrics;
 pub mod model;

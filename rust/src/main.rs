@@ -93,6 +93,11 @@ fn run() -> Result<()> {
                             "--trace-out <file>",
                             "scenario run: export sampled span trees as Chrome trace JSON",
                         ),
+                        (
+                            "--optimality",
+                            "simulate/scenario run: offline lower bounds + gap-to-bound \
+                             (docs/EXPERIMENTS.md)",
+                        ),
                     ],
                 )
             );
@@ -105,6 +110,7 @@ const SCENARIO_USAGE: &str = "usage:
   fifer scenario run <file|builtin> [--threads N] [--json out.json] [--csv out.csv]
                      [--slo-timeline out.json]
                      [--trace-out spans.json] [--trace-sample 1-in-N]
+                     [--optimality]
   fifer scenario list              list built-in scenarios
   fifer scenario show <builtin>    print a built-in scenario file";
 
@@ -163,7 +169,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     ..fifer::obs::ObsConfig::default()
                 }
             });
-            let results = scenario::run_scenario_obs(&spec, threads, obs)?;
+            // offline lower-bound estimators (see docs/EXPERIMENTS.md
+            // "Optimality gap"): per-cell invocation logs feed the
+            // greedy/path-cover/segment trio; pure observers, so the
+            // sweep stays byte-identical across --threads
+            let optimality = args.flag("optimality");
+            let results = scenario::run_scenario_full(&spec, threads, obs, optimality)?;
             let mut t = Table::new(&[
                 "trace", "mix", "policy", "seed", "jobs", "viol%", "median ms", "p99 ms",
                 "avg cont", "cold", "energy Wh",
@@ -184,6 +195,30 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 ]);
             }
             t.print();
+            if optimality {
+                let mut g = Table::new(&[
+                    "trace", "mix", "policy", "seed", "bound cont-s", "achieved cont-s",
+                    "gap%", "bound cold", "achieved cold", "cold gap%",
+                ]);
+                for r in &results {
+                    if let Some(o) = &r.summary.optimality {
+                        g.row(&[
+                            r.cell.trace.clone(),
+                            r.cell.mix.clone(),
+                            r.cell.policy.name().to_string(),
+                            format!("{}", r.cell.seed),
+                            format!("{:.1}", o.bound_container_s),
+                            format!("{:.1}", o.achieved_container_s),
+                            format!("{:.1}", o.gap_container_pct),
+                            format!("{}", o.bound_cold_starts),
+                            format!("{}", o.achieved_cold_starts),
+                            format!("{:.1}", o.gap_cold_start_pct),
+                        ]);
+                    }
+                }
+                println!("optimality gap (offline lower bounds, per objective):");
+                g.print();
+            }
             if let Some(p) = args.get("json") {
                 std::fs::write(p, scenario::results_json(&spec, &results).to_string())?;
                 println!("wrote {p}");
@@ -335,7 +370,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let duration = args.usize_or("duration", 900)?;
     let prototype = !args.flag("large");
     let seed = args.u64_or("seed", 42)?;
-    let run = experiments::run_policy(policy, &mix, kind, duration, prototype, seed);
+    let optimality = args.flag("optimality");
+    let run = if optimality {
+        experiments::run_policy_opt(policy, &mix, kind, duration, prototype, seed)
+    } else {
+        experiments::run_policy(policy, &mix, kind, duration, prototype, seed)
+    };
     let s = &run.summary;
     println!(
         "{} on {}/{} ({}s, {} cluster):",
@@ -353,6 +393,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "  avg-containers={:.1} spawned={} cold-starts={} energy={:.1}Wh",
         s.avg_containers, s.total_spawned, s.cold_starts, s.energy_wh
     );
+    if let Some(o) = &s.optimality {
+        println!(
+            "  optimality: container-s bound={:.1} achieved={:.1} gap={:.1}%, \
+             cold-starts bound={} achieved={} gap={:.1}%",
+            o.bound_container_s,
+            o.achieved_container_s,
+            o.gap_container_pct,
+            o.bound_cold_starts,
+            o.achieved_cold_starts,
+            o.gap_cold_start_pct,
+        );
+    }
     Ok(())
 }
 

@@ -297,6 +297,7 @@ impl Recorder {
             queue_wait_median_ms: stats::percentile_sorted(&queue_waits, 50.0),
             queue_wait_p99_ms: stats::percentile_sorted(&queue_waits, 99.0),
             per_stage,
+            optimality: None,
         }
     }
 
@@ -379,6 +380,10 @@ pub struct Summary {
     pub queue_wait_median_ms: f64,
     pub queue_wait_p99_ms: f64,
     pub per_stage: HashMap<MsId, StageStats>,
+    /// Offline lower bounds vs achieved cost (see [`crate::estimator`]).
+    /// `None` unless the run was asked for `--optimality`; deliberately
+    /// absent from the CSV row so the sweep column set stays fixed.
+    pub optimality: Option<crate::estimator::OptimalityReport>,
 }
 
 impl Summary {
@@ -443,7 +448,7 @@ impl Summary {
                 )
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("jobs", Json::Num(self.jobs as f64)),
             ("slo_violation_pct", Json::Num(self.slo_violation_pct)),
             ("slo_attainment", Json::Num(self.slo_attainment)),
@@ -461,7 +466,13 @@ impl Summary {
             ("tail_breakdown", self.tail_breakdown.to_json()),
             ("avg_breakdown", self.avg_breakdown.to_json()),
             ("per_stage", Json::Obj(per_stage)),
-        ])
+        ];
+        // only present when the estimators ran, so outputs of runs that
+        // never asked for --optimality are byte-for-byte unchanged
+        if let Some(opt) = &self.optimality {
+            fields.push(("optimality", opt.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -618,5 +629,57 @@ mod tests {
         assert_eq!(js, s.to_json().to_string());
         assert!(js.contains("\"per_stage\"") && js.contains("\"tail_breakdown\""));
         assert!(js.contains("\"jobs\":1"));
+    }
+
+    #[test]
+    fn summary_csv_json_round_trip() {
+        // every CSV column exists in the JSON under the same name with
+        // the identical value (default float rendering round-trips), so
+        // a field added to one serialization but not the other — or a
+        // column reorder — fails here instead of skewing sweep output
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        r.container_spawned(1, 0, ms(0.0), true);
+        r.container_executed(1, 2);
+        r.job(job(0, 0.0, 500.0, vec![stage(0, 0.0, 100.0, 400.0, 50.0)]));
+        r.job(job(0, 100.0, 1200.0, vec![stage(0, 100.0, 400.0, 1300.0, 0.0)]));
+        let s = r.summarize(&cat);
+        let cells: Vec<&str> = s.csv_row().split(',').collect();
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(cells.len(), Summary::CSV_FIELDS.len());
+        for (i, field) in Summary::CSV_FIELDS.iter().enumerate() {
+            let cell: f64 = cells[i].parse().unwrap_or_else(|_| {
+                panic!("CSV cell {field}={} is not numeric", cells[i])
+            });
+            let jval = parsed
+                .get(field)
+                .unwrap_or_else(|_| panic!("JSON missing CSV field {field}"))
+                .as_f64()
+                .unwrap_or_else(|_| panic!("JSON field {field} not a number"));
+            assert!(
+                cell.to_bits() == jval.to_bits(),
+                "field {field}: csv {cell} != json {jval}"
+            );
+        }
+    }
+
+    #[test]
+    fn optimality_block_is_json_only() {
+        // attaching an optimality report must not change the CSV column
+        // set (the block is JSON-only by design) and must appear in the
+        // JSON exactly once it is set
+        let cat = Catalog::paper();
+        let mut r = Recorder::new();
+        r.horizon = ms(10_000.0);
+        r.container_spawned(1, 0, ms(0.0), true);
+        r.job(job(0, 0.0, 500.0, vec![]));
+        let mut s = r.summarize(&cat);
+        assert!(!s.to_json().to_string().contains("\"optimality\""));
+        let log = crate::estimator::InvocationLog::default();
+        s.optimality = Some(crate::estimator::analyze(&log, &r));
+        assert_eq!(s.csv_row().split(',').count(), Summary::CSV_FIELDS.len());
+        let js = s.to_json().to_string();
+        assert!(js.contains("\"optimality\"") && js.contains("\"bound_container_s\""));
     }
 }

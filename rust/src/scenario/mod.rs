@@ -74,7 +74,7 @@
 pub mod expr;
 mod runner;
 
-pub use runner::{run_scenario, run_scenario_obs};
+pub use runner::{run_scenario, run_scenario_full, run_scenario_obs};
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -18,7 +18,7 @@ use super::{Cell, CellResult, ScenarioSpec};
 use crate::config::{RmConfig, SystemConfig};
 use crate::model::Catalog;
 use crate::obs::ObsConfig;
-use crate::sim::{run_summarized_obs, SimParams};
+use crate::sim::{run_summarized_full, SimParams};
 use crate::trace::Trace;
 
 /// Run one cell of the matrix. Identical to `experiments::run_policy`
@@ -29,6 +29,7 @@ fn run_cell(
     traces: &BTreeMap<String, Trace>,
     cell: &Cell,
     obs: Option<ObsConfig>,
+    optimality: bool,
 ) -> CellResult {
     let cat = Catalog::paper();
     let mut rm = RmConfig::paper(cell.policy);
@@ -53,7 +54,7 @@ fn run_cell(
         trace,
         drain_s: spec.drain_s,
     };
-    let (_, summary, report) = run_summarized_obs(params, warmup, obs);
+    let (_, summary, report) = run_summarized_full(params, warmup, obs, optimality);
     CellResult {
         cell: cell.clone(),
         summary,
@@ -78,6 +79,21 @@ pub fn run_scenario_obs(
     threads: usize,
     obs: Option<ObsConfig>,
 ) -> Result<Vec<CellResult>> {
+    run_scenario_full(spec, threads, obs, false)
+}
+
+/// [`run_scenario_obs`] plus per-cell optimality-gap analysis — the
+/// plumbing behind `fifer scenario run --optimality`. Each cell's
+/// `optimality` block is computed from that cell's own invocation log
+/// (a pure observer of the run, itself a pure function of the cell
+/// seed), so the sweep stays byte-identical across thread counts with
+/// the estimators on.
+pub fn run_scenario_full(
+    spec: &ScenarioSpec,
+    threads: usize,
+    obs: Option<ObsConfig>,
+    optimality: bool,
+) -> Result<Vec<CellResult>> {
     let traces = spec.build_traces()?;
     let cells = spec.cells();
     if cells.is_empty() {
@@ -87,7 +103,7 @@ pub fn run_scenario_obs(
     if threads == 1 {
         return Ok(cells
             .iter()
-            .map(|c| run_cell(spec, &traces, c, obs))
+            .map(|c| run_cell(spec, &traces, c, obs, optimality))
             .collect());
     }
     let next = AtomicUsize::new(0);
@@ -99,7 +115,7 @@ pub fn run_scenario_obs(
                 if i >= cells.len() {
                     break;
                 }
-                let r = run_cell(spec, &traces, &cells[i], obs);
+                let r = run_cell(spec, &traces, &cells[i], obs, optimality);
                 *slots[i].lock().unwrap() = Some(r);
             });
         }

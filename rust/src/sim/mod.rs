@@ -114,12 +114,31 @@ impl EngineCore<VirtualDriver> {
     /// live `/metrics` endpoints serve — one contract, two drivers —
     /// and, like everything else here, is a pure function of the seed.
     pub fn run_collecting(
-        mut self,
+        self,
         check_every: u64,
         obs: Option<ObsConfig>,
     ) -> Result<(Recorder, Option<ObsReport>), String> {
+        self.run_collecting_full(check_every, obs, false)
+            .map(|(rec, report, _)| (rec, report))
+    }
+
+    /// [`run_collecting`](Self::run_collecting) plus an optional
+    /// invocation log for the offline optimality-gap estimators
+    /// (`crate::estimator`). Like the obs collector, the log tap is a
+    /// pure observer: enabling it cannot change scheduling decisions,
+    /// so the recorder is byte-identical either way.
+    pub fn run_collecting_full(
+        mut self,
+        check_every: u64,
+        obs: Option<ObsConfig>,
+        invocation_log: bool,
+    ) -> Result<(Recorder, Option<ObsReport>, Option<crate::estimator::InvocationLog>), String>
+    {
         if let Some(cfg) = obs {
             self.enable_obs(cfg);
+        }
+        if invocation_log {
+            self.enable_invocation_log();
         }
         let horizon = secs(self.driver.trace.duration_s() as f64);
         let end = horizon + secs(self.driver.drain_s);
@@ -135,8 +154,8 @@ impl EngineCore<VirtualDriver> {
         // initial provisioning + periodic events, then drain the heap
         self.bootstrap(horizon, end);
         self.run_events(check_every)?;
-        let (recorder, _driver, report) = self.into_parts_obs();
-        Ok((recorder, report))
+        let (recorder, _driver, report, log) = self.into_parts_full();
+        Ok((recorder, report, log))
     }
 }
 
@@ -162,11 +181,28 @@ pub fn run_summarized_obs(
     warmup: Micros,
     obs: Option<ObsConfig>,
 ) -> (Recorder, crate::metrics::Summary, Option<ObsReport>) {
+    run_summarized_full(p, warmup, obs, false)
+}
+
+/// [`run_summarized_obs`] plus the offline optimality-gap analysis:
+/// when `optimality` is set, the engine records its invocation log and
+/// the summary's `optimality` block carries the three lower-bound
+/// estimators' verdict against the run's achieved cost — the plumbing
+/// behind `fifer scenario run --optimality` (see `crate::estimator`).
+pub fn run_summarized_full(
+    p: SimParams,
+    warmup: Micros,
+    obs: Option<ObsConfig>,
+    optimality: bool,
+) -> (Recorder, crate::metrics::Summary, Option<ObsReport>) {
     let cat = Catalog::paper();
-    let (rec, report) = Engine::new(p)
-        .run_collecting(0, obs)
+    let (rec, report, log) = Engine::new(p)
+        .run_collecting_full(0, obs, optimality)
         .expect("run without invariant checks cannot fail");
-    let sum = rec.summarize_after(&cat, warmup);
+    let mut sum = rec.summarize_after(&cat, warmup);
+    if let Some(log) = log {
+        sum.optimality = Some(crate::estimator::analyze(&log, &rec));
+    }
     (rec, sum, report)
 }
 

@@ -1,0 +1,211 @@
+//! Optimality-gap subsystem integration: the soundness property (a
+//! lower bound never exceeds any policy's achieved cost, for every
+//! registered policy at every tested seed, on both objectives), a
+//! hand-computed fixture whose exact optimum all three estimators must
+//! hit, byte-determinism of `--optimality` output across runs and
+//! thread counts, and the JSON-only placement of the `optimality`
+//! block.
+
+use std::collections::BTreeMap;
+
+use fifer::config::{Policy, SystemConfig};
+use fifer::estimator::{
+    self, greedy_bound, path_cover_bound, segment_bound, Invocation, InvocationLog,
+};
+use fifer::metrics::Recorder;
+use fifer::model::Catalog;
+use fifer::scenario::{self, ScenarioSpec};
+use fifer::sim::{run_summarized_full, SimParams};
+use fifer::trace::Trace;
+use fifer::util::secs;
+
+/// A small pure-generator sweep (traces are a function of the spec
+/// alone): 2 policies x 2 seeds, mirroring the `test_obs.rs` pins.
+const SPEC: &str = r#"
+[scenario]
+name = "optimality-pin"
+duration_s = 60
+drain_s = 10
+seeds = [7, 42]
+traces = ["t"]
+mixes = ["Heavy"]
+policies = ["Bline", "Fifer"]
+
+[trace.t]
+expr = "poisson(rate=20)"
+"#;
+
+fn run_with_optimality(policy: Policy, seed: u64) -> fifer::metrics::Summary {
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(policy);
+    cfg.seed = seed;
+    let (_, sum, _) = run_summarized_full(
+        SimParams {
+            cfg,
+            chains: cat.mix("Heavy").unwrap().chains.clone(),
+            trace: Trace::poisson(20.0, 60),
+            drain_s: 30.0,
+        },
+        0,
+        None,
+        true,
+    );
+    sum
+}
+
+/// The headline invariant: for every registered policy, at every tested
+/// seed, no estimator's bound exceeds the run's achieved cost on either
+/// objective. Soundness holds by construction (deadlines are relaxed to
+/// realized completions; per-invocation occupancy never exceeds the
+/// realized batch share), so any failure here is an estimator bug, not
+/// an unlucky seed.
+#[test]
+fn bounds_are_sound_for_every_policy_and_seed() {
+    for policy in Policy::ALL {
+        for seed in [7u64, 42, 1009] {
+            let sum = run_with_optimality(policy, seed);
+            let o = sum.optimality.as_ref().expect("optimality requested");
+            assert!(
+                o.invocations > 0,
+                "{}/{}: no invocations captured",
+                policy.name(),
+                seed
+            );
+            let per = [
+                ("greedy", &o.greedy),
+                ("path_cover", &o.path_cover),
+                ("segment", &o.segment),
+            ];
+            for (name, b) in per {
+                assert!(
+                    b.container_s <= o.achieved_container_s + 1e-6,
+                    "{}/{} {}: container_s bound {} > achieved {}",
+                    policy.name(),
+                    seed,
+                    name,
+                    b.container_s,
+                    o.achieved_container_s
+                );
+                assert!(
+                    b.cold_starts <= o.achieved_cold_starts,
+                    "{}/{} {}: cold bound {} > achieved {}",
+                    policy.name(),
+                    seed,
+                    name,
+                    b.cold_starts,
+                    o.achieved_cold_starts
+                );
+            }
+            // combined bound inherits soundness and is non-vacuous
+            assert!(o.bound_container_s <= o.achieved_container_s + 1e-6);
+            assert!(o.bound_cold_starts <= o.achieved_cold_starts);
+            assert!(
+                o.bound_container_s > 0.0 && o.bound_cold_starts >= 1,
+                "{}/{}: vacuous bound",
+                policy.name(),
+                seed
+            );
+            assert!(o.gap_container_pct >= -1e-9 && o.gap_container_pct <= 100.0);
+            assert!(o.gap_cold_start_pct >= -1e-9 && o.gap_cold_start_pct <= 100.0);
+        }
+    }
+}
+
+/// Hand-computable fixture: three back-to-back 10s jobs on one stage,
+/// zero overhead, no batching (cap 1), budgets exactly as tight as the
+/// work. The unique optimal schedule runs them consecutively in one
+/// container: 30 container-seconds, 1 cold start — and each estimator
+/// must report exactly that, not merely a lower bound of it.
+#[test]
+fn three_job_fixture_all_estimators_hit_exact_optimum() {
+    let inv = |enq_s: f64, end_s: f64| Invocation {
+        ms_id: 0,
+        enqueued: secs(enq_s),
+        exec_start: secs(enq_s),
+        exec_end: secs(end_s),
+        batch: 1,
+        budget: secs(10.0),
+    };
+    let mut batch_cap = BTreeMap::new();
+    batch_cap.insert(0usize, 1usize);
+    let log = InvocationLog {
+        entries: vec![inv(0.0, 10.0), inv(10.0, 20.0), inv(20.0, 30.0)],
+        gamma: 0.0,
+        overhead: 0,
+        batch_cap,
+    };
+    let per = [
+        ("greedy", greedy_bound(&log)),
+        ("path_cover", path_cover_bound(&log)),
+        ("segment", segment_bound(&log)),
+    ];
+    for (name, b) in per {
+        assert_eq!(b.container_s, 30.0, "{name}: container_s {}", b.container_s);
+        assert_eq!(b.cold_starts, 1, "{name}: cold_starts {}", b.cold_starts);
+    }
+    // against a recorder that realizes the optimum, the gap is exactly 0
+    let mut rec = Recorder::new();
+    rec.horizon = secs(30.0);
+    rec.container_spawned(0, 0, 0, true);
+    rec.container_retired(0, secs(30.0));
+    let rep = estimator::analyze(&log, &rec);
+    assert_eq!(rep.bound_container_s, 30.0);
+    assert_eq!(rep.bound_cold_starts, 1);
+    assert_eq!(rep.achieved_container_s, 30.0);
+    assert_eq!(rep.achieved_cold_starts, 1);
+    assert_eq!(rep.gap_container_pct, 0.0);
+    assert_eq!(rep.gap_cold_start_pct, 0.0);
+}
+
+/// `--optimality` output is a pure function of the spec: byte-identical
+/// across repeated runs and across `--threads 1` vs `4`, mirroring the
+/// `--slo-timeline` / `--trace-out` pins in `test_obs.rs`.
+#[test]
+fn optimality_json_is_byte_identical_across_runs_and_thread_counts() {
+    let spec = ScenarioSpec::parse(SPEC).unwrap();
+    let render = |threads| {
+        let results = scenario::run_scenario_full(&spec, threads, None, true).unwrap();
+        assert!(results.iter().all(|r| r.summary.optimality.is_some()));
+        scenario::results_json(&spec, &results).to_string()
+    };
+    let serial = render(1);
+    assert_eq!(serial, render(1), "run-to-run divergence");
+    assert_eq!(serial, render(4), "thread-count divergence");
+    assert!(serial.contains("\"optimality\""));
+    assert!(serial.contains("\"bound_container_s\""));
+    assert!(serial.contains("\"path_cover\""));
+}
+
+/// The estimators are pure observers: a sweep that doesn't ask for
+/// them carries no `optimality` block, and its JSON is unchanged.
+#[test]
+fn plain_sweep_carries_no_optimality_block() {
+    let spec = ScenarioSpec::parse(SPEC).unwrap();
+    let results = scenario::run_scenario(&spec, 2).unwrap();
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| r.summary.optimality.is_none()));
+    let js = scenario::results_json(&spec, &results).to_string();
+    assert!(!js.contains("\"optimality\""));
+}
+
+/// Enabling the invocation log cannot perturb scheduling: the summary
+/// of a run with `--optimality` matches the plain run byte-for-byte
+/// once the block itself is stripped (here: compare shared scalars).
+#[test]
+fn invocation_log_is_a_pure_observer() {
+    let cat = Catalog::paper();
+    let params = || SimParams {
+        cfg: SystemConfig::prototype(Policy::Fifer),
+        chains: cat.mix("Heavy").unwrap().chains.clone(),
+        trace: Trace::poisson(20.0, 40),
+        drain_s: 20.0,
+    };
+    let (_, plain, _) = run_summarized_full(params(), 0, None, false);
+    let (_, logged, _) = run_summarized_full(params(), 0, None, true);
+    assert!(plain.optimality.is_none() && logged.optimality.is_some());
+    assert_eq!(plain.jobs, logged.jobs);
+    assert_eq!(plain.total_spawned, logged.total_spawned);
+    assert_eq!(plain.cold_starts, logged.cold_starts);
+    assert!(plain.median_ms.to_bits() == logged.median_ms.to_bits());
+    assert!(plain.energy_wh.to_bits() == logged.energy_wh.to_bits());
+}
