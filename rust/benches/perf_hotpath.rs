@@ -23,13 +23,19 @@
 //! panics, failing the CI perf job.
 
 use fifer::bench::{bench, section, Table, Timing};
-use fifer::config::Policy;
+use fifer::config::{Policy, SystemConfig};
 use fifer::coordinator::queue::{Ordering as QOrder, QueueEntry, StageQueue};
+use fifer::coordinator::sharded::ShardRouter;
 use fifer::coordinator::state::StateStore;
 use fifer::experiments::{run_policy, TraceKind};
+use fifer::model::Catalog;
+use fifer::obs::ObsConfig;
 use fifer::predictor::{nn::LstmPredictor, Predictor};
+use fifer::sim::sharded::run_sharded_summarized;
+use fifer::sim::SimParams;
+use fifer::trace::Trace;
 use fifer::util::json::Json;
-use fifer::util::stats;
+use fifer::util::{secs, stats};
 
 /// The allocation counter behind the zero-alloc pin (see module docs).
 #[cfg(feature = "bench-alloc")]
@@ -417,6 +423,238 @@ fn main() {
         println!("acceptance: allocs/dispatch {a:.4} <= {alloc_budget} -> PASS");
     }
 
+    // ------------------------------------------------------------------
+    // Shard router: p50 ns/route over 1M chain-hash routes, alloc-free.
+    // ------------------------------------------------------------------
+    section("Perf", "shard router (splitmix64 chain-hash, 1M routes)");
+    let router = ShardRouter::new(42, 4);
+    // time in batches of 1000 so the ~ns-scale op outlives timer noise
+    const ROUTE_BATCH: usize = 1_000;
+    let mut chain = 0usize;
+    let rt = bench("route x1000", 1_000, || {
+        let mut acc = 0usize;
+        for _ in 0..ROUTE_BATCH {
+            chain = (chain + 1) % 1024;
+            acc = acc.wrapping_add(router.route(chain));
+        }
+        std::hint::black_box(acc);
+    });
+    let route_p50_ns = rt.p50_ns / ROUTE_BATCH as f64;
+    // separate counted pass: routing must never touch the heap
+    alloc_reset();
+    let mut acc = 0usize;
+    for i in 0..1_000_000usize {
+        acc = acc.wrapping_add(router.route(i % 1024));
+    }
+    std::hint::black_box(acc);
+    let route_allocs = alloc_count();
+    println!(
+        "route: {route_p50_ns:.2} ns/route p50, allocs over 1M routes: {}",
+        match route_allocs {
+            Some(n) => format!("{n}"),
+            None => "not counted (run with --features bench-alloc)".to_string(),
+        }
+    );
+    if let Some(n) = route_allocs {
+        assert_eq!(n, 0, "shard routing must not allocate");
+        println!("acceptance: 0 allocs/route -> PASS");
+    }
+
+    // ------------------------------------------------------------------
+    // Per-shard dispatch cycle: route into 4 shard-local stores, pin the
+    // routed steady-state cycle to the same zero-alloc budget.
+    // ------------------------------------------------------------------
+    section(
+        "Perf",
+        "per-shard dispatch cycle (router + 4 shard-local stores, zero-alloc pin)",
+    );
+    let nsh = 4usize;
+    let mut sh_stores: Vec<StateStore> = Vec::with_capacity(nsh);
+    let mut sh_queues: Vec<StageQueue> = Vec::with_capacity(nsh);
+    let mut sh_seq = vec![0u64; nsh];
+    let mut sh_now = vec![0u64; nsh];
+    for k in 0..nsh {
+        let mut st = StateStore::new(2, 16, 1.0);
+        for _ in 0..4 {
+            st.spawn(0, 4, 0, 0, false).expect("fixture fits");
+        }
+        let mut q = StageQueue::new(QOrder::LeastSlackFirst);
+        for _ in 0..4 {
+            sh_seq[k] += 1;
+            sh_now[k] += 1;
+            q.push(QueueEntry {
+                job_id: sh_seq[k],
+                lsf_key: sh_seq[k],
+                enqueued: sh_now[k],
+                seq: sh_seq[k],
+            });
+        }
+        sh_stores.push(st);
+        sh_queues.push(q);
+    }
+    // settle capacities across all shards before counting
+    for i in 0..1_000usize {
+        let k = router.route(i % 64);
+        dispatch_cycle(
+            &mut sh_stores[k],
+            &mut sh_queues[k],
+            &mut sh_seq[k],
+            &mut sh_now[k],
+            &mut batch_buf,
+            &mut done_buf,
+        );
+    }
+    alloc_reset();
+    let t0 = std::time::Instant::now();
+    for i in 0..CYCLES {
+        let k = router.route(i as usize % 64);
+        dispatch_cycle(
+            &mut sh_stores[k],
+            &mut sh_queues[k],
+            &mut sh_seq[k],
+            &mut sh_now[k],
+            &mut batch_buf,
+            &mut done_buf,
+        );
+    }
+    let sharded_cycle_ns = t0.elapsed().as_nanos() as f64 / CYCLES as f64;
+    let allocs_per_sharded_dispatch = alloc_count().map(|n| n as f64 / CYCLES as f64);
+    for st in &sh_stores {
+        st.check_consistency().expect("shard fixture store consistent");
+    }
+    println!(
+        "routed dispatch cycle: {sharded_cycle_ns:.0} ns, allocs/dispatch: {} (budget {alloc_budget})",
+        match allocs_per_sharded_dispatch {
+            Some(a) => format!("{a:.4}"),
+            None => "not counted (run with --features bench-alloc)".to_string(),
+        }
+    );
+    if let Some(a) = allocs_per_sharded_dispatch {
+        assert!(
+            a <= alloc_budget,
+            "per-shard zero-alloc dispatch pin violated: {a:.4} allocs/dispatch > \
+             budget {alloc_budget}"
+        );
+        println!("acceptance: sharded allocs/dispatch {a:.4} <= {alloc_budget} -> PASS");
+    }
+
+    // ------------------------------------------------------------------
+    // Quality vs shard count: the same flash crowd under 1/2/4 shards
+    // (SLO attainment, utilization, cold starts, PR-9 optimality bound,
+    // per-shard decision latency). Lands in BENCH_perf.json `shards`.
+    // ------------------------------------------------------------------
+    section(
+        "Perf",
+        "sharded coordinator: quality vs shard count (flashcrowd, heavy mix, Fifer)",
+    );
+    let shard_counts = [1usize, 2, 4];
+    let lambdas: &[f64] = if quick { &[30.0] } else { &[20.0, 50.0, 80.0] };
+    let sh_dur = if quick { 60usize } else { 300 };
+    let mut shard_sweep_json: Vec<Json> = Vec::new();
+    let mut sht = Table::new(&[
+        "λ", "shards", "jobs", "attain%", "util%", "cold", "gap%", "migr", "decision p95 µs",
+    ]);
+    for &lam in lambdas {
+        for &ns in &shard_counts {
+            let cat = Catalog::paper();
+            let p = SimParams {
+                cfg: SystemConfig::prototype(Policy::Fifer), // seed 42
+                chains: cat.mix("Heavy").expect("Heavy mix registered").chains.clone(),
+                trace: Trace::flashcrowd(sh_dur, lam, 2.0 * lam, sh_dur / 3, (sh_dur / 10).max(1)),
+                drain_s: 30.0,
+            };
+            let warmup = secs((sh_dur as f64 * 0.5).min(700.0));
+            let (run, sum) =
+                run_sharded_summarized(p, ns, warmup, Some(ObsConfig::default()), true)
+                    .expect("shard counts fit the prototype cluster");
+            // cluster utilization over the whole timeline: busy core-ticks
+            // over allocated core-ticks
+            let util_pct = run
+                .report
+                .as_ref()
+                .map(|r| {
+                    let busy: f64 = r.rows.iter().map(|row| row.busy_cores_sum).sum();
+                    let alloc: f64 = r.rows.iter().map(|row| row.alloc_cores_sum).sum();
+                    100.0 * busy / alloc.max(1e-9)
+                })
+                .unwrap_or(0.0);
+            let gap_pct = sum.optimality.as_ref().map(|o| o.gap_container_pct);
+            let shard_decision: Vec<Json> = run
+                .shard_decision_ns
+                .iter()
+                .enumerate()
+                .map(|(k, v)| {
+                    let f: Vec<f64> = v.iter().map(|&n| n as f64).collect();
+                    let (p50, p95) = if f.is_empty() {
+                        (0.0, 0.0)
+                    } else {
+                        (
+                            stats::percentile(&f, 50.0) / 1e3,
+                            stats::percentile(&f, 95.0) / 1e3,
+                        )
+                    };
+                    Json::obj(vec![
+                        ("shard", Json::Num(k as f64)),
+                        ("decisions", Json::Num(f.len() as f64)),
+                        ("p50_us", Json::Num(p50)),
+                        ("p95_us", Json::Num(p95)),
+                    ])
+                })
+                .collect();
+            let dec_all: Vec<f64> = run
+                .shard_decision_ns
+                .iter()
+                .flatten()
+                .map(|&n| n as f64)
+                .collect();
+            let dec_p95_us = if dec_all.is_empty() {
+                0.0
+            } else {
+                stats::percentile(&dec_all, 95.0) / 1e3
+            };
+            sht.row(&[
+                format!("{lam:.0}"),
+                format!("{ns}"),
+                format!("{}", sum.jobs),
+                format!("{:.2}", 100.0 * sum.slo_attainment),
+                format!("{util_pct:.1}"),
+                format!("{}", sum.cold_starts),
+                match gap_pct {
+                    Some(g) => format!("{g:.1}"),
+                    None => "-".to_string(),
+                },
+                format!("{}", run.migrations),
+                format!("{dec_p95_us:.2}"),
+            ]);
+            shard_sweep_json.push(Json::obj(vec![
+                ("lambda", Json::Num(lam)),
+                ("shards", Json::Num(ns as f64)),
+                ("jobs", Json::Num(sum.jobs as f64)),
+                ("slo_attainment", Json::Num(sum.slo_attainment)),
+                ("utilization_pct", Json::Num(util_pct)),
+                ("cold_starts", Json::Num(sum.cold_starts as f64)),
+                ("gap_container_pct", gap_pct.map_or(Json::Null, Json::Num)),
+                ("migrations", Json::Num(run.migrations as f64)),
+                ("decision_p95_us", Json::Num(dec_p95_us)),
+                ("per_shard_decision_latency_us", Json::Arr(shard_decision)),
+            ]));
+        }
+    }
+    sht.print();
+    let shards_json = Json::obj(vec![
+        ("router_p50_ns_per_route", Json::Num(route_p50_ns)),
+        (
+            "router_allocs_per_1m_routes",
+            route_allocs.map_or(Json::Null, |n| Json::Num(n as f64)),
+        ),
+        ("sharded_dispatch_cycle_ns", Json::Num(sharded_cycle_ns)),
+        (
+            "allocs_per_sharded_dispatch",
+            allocs_per_sharded_dispatch.map_or(Json::Null, Json::Num),
+        ),
+        ("sweep", Json::Arr(shard_sweep_json)),
+    ]);
+
     // whole-sim throughput + sampled dispatch decision latency (§6.1.5)
     let dur = if quick { 60 } else { 600 };
     section(
@@ -520,6 +758,7 @@ fn main() {
             allocs_per_dispatch.map_or(Json::Null, Json::Num),
         ),
         ("dispatch_cycle_ns", Json::Num(dispatch_cycle_ns)),
+        ("shards", shards_json),
         ("sim", sim_json),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");

@@ -1069,6 +1069,65 @@ impl<D: Driver> EngineCore<D> {
     }
 
     // ------------------------------------------------------------------
+    // sharding support (see crate::coordinator::sharded)
+    // ------------------------------------------------------------------
+
+    /// Requests waiting in this engine's global stage queues — the
+    /// sharded rebalancer's load signal. O(stages).
+    pub fn backlog(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Total provisioned cores this engine currently owns (migrated-away
+    /// tombstone nodes contribute 0) — the rebalancer's capacity signal.
+    pub fn capacity_cores(&self) -> f64 {
+        self.store.capacity_cores()
+    }
+
+    /// Give up one empty node's capacity for migration to another shard.
+    ///
+    /// Picks the highest-id capacity-bearing node that hosts no
+    /// containers (warm, starting, or busy) — capacity holding running
+    /// containers is never migrated — and only when at least two
+    /// capacity-bearing nodes remain, so a shard is never drained to
+    /// zero. Returns the cores taken, or `None` when no node is
+    /// eligible. The drained node stays as a zero-capacity tombstone
+    /// (store indices stay dense; its energy ledger keeps its
+    /// accumulated Wh and powers off naturally).
+    pub fn donate_node_capacity(&mut self) -> Option<f64> {
+        let bearing = self
+            .store
+            .nodes
+            .iter()
+            .filter(|n| n.total_cores > 0.0)
+            .count();
+        if bearing < 2 {
+            return None;
+        }
+        let victim = self
+            .store
+            .nodes
+            .iter()
+            .rev()
+            .find(|n| n.total_cores > 0.0 && self.store.node_is_empty(n.id))
+            .map(|n| n.id)?;
+        // settle the victim's energy up to now before its capacity
+        // leaves, so the migration boundary is accounted exactly
+        let (busy, alloc) = self.store.node_load(victim);
+        self.energy.nodes[victim].update(self.now, busy, alloc, &self.cfg.cluster);
+        self.store.drain_node(victim).ok()
+    }
+
+    /// Accept node capacity migrated from another shard: appends a fresh
+    /// node to the store and a matching ledger entry to the energy
+    /// model, keeping the two dense per-node lists in lockstep.
+    pub fn accept_node_capacity(&mut self, cores: f64) {
+        let id = self.store.add_node(cores);
+        debug_assert_eq!(id, self.energy.nodes.len());
+        self.energy.nodes.push(crate::energy::NodeEnergy::new());
+    }
+
+    // ------------------------------------------------------------------
     // invariant checks (used by property tests)
     // ------------------------------------------------------------------
 

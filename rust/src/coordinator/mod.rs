@@ -31,6 +31,7 @@ pub mod engine;
 pub mod policy;
 pub mod queue;
 pub mod scaling;
+pub mod sharded;
 pub mod slack;
 pub mod state;
 

@@ -1,0 +1,328 @@
+//! Sharded coordinator: N independent [`EngineCore`] shards behind a
+//! stable chain-hash router, with conservative capacity rebalancing.
+//!
+//! The paper's §6.1.5 probe shows a single coordinator's decision
+//! latency becoming the bottleneck at millions-of-users arrival rates.
+//! Sharding splits the cluster into N engines, each owning a slice of
+//! node capacity and serving the chains that hash to it. Three pieces:
+//!
+//! * [`ShardRouter`] — maps a `ChainId` to a shard with splitmix64 over
+//!   `chain ⊕ seed`. No `DefaultHasher`: the assignment is
+//!   bit-reproducible across platforms and rustc versions, which the
+//!   byte-determinism contract (DESIGN.md §Sharding) depends on.
+//! * [`Rebalancer`] — watches per-shard pressure (backlog per
+//!   provisioned core) on monitor ticks and migrates one empty node's
+//!   capacity from the least- to the most-pressured shard, with
+//!   hysteresis (K consecutive imbalanced ticks) and a cooldown so
+//!   capacity doesn't thrash. Capacity holding running containers is
+//!   never migrated ([`EngineCore::donate_node_capacity`] refuses).
+//! * [`ShardedCoordinator`] — owns the shards and wires the two
+//!   together. Drivers (sim lockstep loop, live shard threads) decide
+//!   *when* to advance shards and call [`ShardedCoordinator::rebalance_once`];
+//!   this module decides *where* work and capacity go.
+
+use crate::coordinator::engine::{Driver, EngineCore};
+use crate::model::ChainId;
+
+/// splitmix64 finalizer (Steele et al., "Fast splittable pseudorandom
+/// number generators"). Same constants as `util::rng`, duplicated here
+/// so the router has no dependency on the PRNG module's internals.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Stable chain → shard map. Stateless and `Copy`: routing 1M arrivals
+/// is a hash and a modulo, no allocation (pinned by `perf_hotpath`).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRouter {
+    seed: u64,
+    shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(seed: u64, shards: usize) -> Self {
+        Self { seed, shards: shards.max(1) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Shard index for a chain. All invocations of a chain land on the
+    /// same shard, so per-chain state (warm pools, batching queues)
+    /// never splits.
+    #[inline]
+    pub fn route(&self, chain: ChainId) -> usize {
+        (splitmix64(chain as u64 ^ self.seed) % self.shards as u64) as usize
+    }
+}
+
+/// Split `total` items across `shards` as evenly as possible; returns
+/// the count for shard `k` (the first `total % shards` shards get one
+/// extra). Used to partition nodes and live executor threads.
+pub fn partition_count(total: usize, shards: usize, k: usize) -> usize {
+    let shards = shards.max(1);
+    total / shards + usize::from(k < total % shards)
+}
+
+/// Rebalancer tuning. Defaults are deliberately conservative: a shard
+/// must look overloaded for `hysteresis_ticks` consecutive monitor
+/// ticks before one node moves, and after a migration the rebalancer
+/// sits out `cooldown_ticks` so the move can take effect.
+#[derive(Clone, Copy, Debug)]
+pub struct RebalancerConfig {
+    /// Fire when max pressure exceeds `pressure_ratio` × min pressure…
+    pub pressure_ratio: f64,
+    /// …by at least this absolute gap (filters noise near zero load).
+    pub min_gap: f64,
+    /// Consecutive imbalanced ticks required before migrating.
+    pub hysteresis_ticks: u32,
+    /// Ticks to sit out after a migration.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for RebalancerConfig {
+    fn default() -> Self {
+        Self { pressure_ratio: 2.0, min_gap: 0.25, hysteresis_ticks: 3, cooldown_ticks: 3 }
+    }
+}
+
+/// Deterministic pressure-based capacity rebalancer. Pure arithmetic
+/// over the pressure vector — no RNG, no clock — so sim runs stay
+/// byte-reproducible.
+#[derive(Clone, Debug, Default)]
+pub struct Rebalancer {
+    pub cfg: RebalancerConfig,
+    streak: u32,
+    cooldown: u32,
+    migrations: u64,
+}
+
+impl Rebalancer {
+    pub fn new(cfg: RebalancerConfig) -> Self {
+        Self { cfg, streak: 0, cooldown: 0, migrations: 0 }
+    }
+
+    /// Total migrations performed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// One monitor tick: given per-shard pressures (backlog per core),
+    /// decide whether to migrate and from/to whom. Returns
+    /// `Some((donor, receiver))` when a move should happen; the caller
+    /// performs it and must report back via [`Rebalancer::record`].
+    pub fn plan(&mut self, pressures: &[f64]) -> Option<(usize, usize)> {
+        if pressures.len() < 2 {
+            return None;
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = 0usize;
+        for (i, &p) in pressures.iter().enumerate() {
+            if p < pressures[lo] {
+                lo = i;
+            }
+            if p > pressures[hi] {
+                hi = i;
+            }
+        }
+        let imbalanced = pressures[hi] > pressures[lo] * self.cfg.pressure_ratio + self.cfg.min_gap;
+        if !imbalanced {
+            self.streak = 0;
+            return None;
+        }
+        self.streak += 1;
+        if self.streak < self.cfg.hysteresis_ticks {
+            return None;
+        }
+        self.streak = 0;
+        Some((lo, hi))
+    }
+
+    /// Record a completed migration and arm the cooldown.
+    pub fn record(&mut self) {
+        self.migrations += 1;
+        self.cooldown = self.cfg.cooldown_ticks;
+    }
+}
+
+/// N engines + router + rebalancer. Generic over the driver like
+/// [`EngineCore`] itself: the sim wraps `EngineCore<VirtualDriver>`
+/// shards and advances them in lockstep epochs; the live server runs
+/// one `EngineCore<RealTimeDriver>` per thread and uses the router and
+/// rebalancer standalone (see `server::serve_sharded`).
+pub struct ShardedCoordinator<D: Driver> {
+    shards: Vec<EngineCore<D>>,
+    router: ShardRouter,
+    rebalancer: Rebalancer,
+}
+
+impl<D: Driver> ShardedCoordinator<D> {
+    pub fn new(shards: Vec<EngineCore<D>>, router_seed: u64, rcfg: RebalancerConfig) -> Self {
+        let n = shards.len().max(1);
+        Self {
+            shards,
+            router: ShardRouter::new(router_seed, n),
+            rebalancer: Rebalancer::new(rcfg),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router(&self) -> ShardRouter {
+        self.router
+    }
+
+    /// Shard index an arriving chain invocation belongs to.
+    #[inline]
+    pub fn route(&self, chain: ChainId) -> usize {
+        self.router.route(chain)
+    }
+
+    pub fn shards(&self) -> &[EngineCore<D>] {
+        &self.shards
+    }
+
+    pub fn shards_mut(&mut self) -> &mut [EngineCore<D>] {
+        &mut self.shards
+    }
+
+    pub fn shard_mut(&mut self, k: usize) -> &mut EngineCore<D> {
+        &mut self.shards[k]
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.rebalancer.migrations()
+    }
+
+    /// Per-shard pressure vector: queued requests per provisioned core.
+    pub fn pressures(&self) -> Vec<f64> {
+        self.shards
+            .iter()
+            .map(|s| s.backlog() as f64 / s.capacity_cores().max(1e-9))
+            .collect()
+    }
+
+    /// One rebalance tick: compute pressures, ask the rebalancer for a
+    /// plan, and migrate one empty node's capacity donor → receiver.
+    /// Returns `Some((donor, receiver, cores))` when capacity moved.
+    /// No-op (and allocation-free on the engine side) when balanced,
+    /// cooling down, or when the donor has no eligible empty node.
+    pub fn rebalance_once(&mut self) -> Option<(usize, usize, f64)> {
+        let pressures = self.pressures();
+        let (donor, receiver) = self.rebalancer.plan(&pressures)?;
+        let cores = self.shards[donor].donate_node_capacity()?;
+        self.shards[receiver].accept_node_capacity(cores);
+        self.rebalancer.record();
+        Some((donor, receiver, cores))
+    }
+
+    /// Tear down into the per-shard engines (for result extraction).
+    pub fn into_shards(self) -> Vec<EngineCore<D>> {
+        self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_matches_reference_vectors() {
+        // First value is the canonical seed-0 splitmix64 output; the
+        // second pins the finalizer applied to its own output.
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(splitmix64(0)), 0xA706_DD2F_4D19_7E6F);
+    }
+
+    #[test]
+    fn router_is_stable_and_in_range() {
+        let r = ShardRouter::new(42, 4);
+        for chain in 0..64usize {
+            let a = r.route(chain);
+            assert!(a < 4);
+            assert_eq!(a, r.route(chain), "routing must be stable");
+        }
+        // one shard ⇒ everything routes to 0
+        let one = ShardRouter::new(42, 1);
+        assert!((0..64).all(|c| one.route(c) == 0));
+    }
+
+    #[test]
+    fn router_spreads_chains_across_shards() {
+        // With many chains, no shard should be starved. (The built-in
+        // catalog only has 4 chains — see DESIGN.md §Sharding for the
+        // degeneracy note — so test the hash itself over a wider id
+        // space.)
+        let r = ShardRouter::new(7, 4);
+        let mut counts = [0usize; 4];
+        for chain in 0..4096usize {
+            counts[r.route(chain)] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            assert!(c > 512, "shard {k} starved: {c}/4096 chains");
+        }
+    }
+
+    #[test]
+    fn partition_count_is_exhaustive_and_even() {
+        for total in 0..20usize {
+            for shards in 1..6usize {
+                let parts: Vec<usize> =
+                    (0..shards).map(|k| partition_count(total, shards, k)).collect();
+                assert_eq!(parts.iter().sum::<usize>(), total);
+                let (min, max) = (parts.iter().min().unwrap(), parts.iter().max().unwrap());
+                assert!(max - min <= 1, "uneven split {parts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rebalancer_requires_sustained_imbalance() {
+        let mut rb = Rebalancer::new(RebalancerConfig {
+            pressure_ratio: 2.0,
+            min_gap: 0.25,
+            hysteresis_ticks: 3,
+            cooldown_ticks: 2,
+        });
+        let hot = [0.1, 5.0];
+        // two imbalanced ticks: hysteresis not yet met
+        assert_eq!(rb.plan(&hot), None);
+        assert_eq!(rb.plan(&hot), None);
+        // a balanced tick resets the streak
+        assert_eq!(rb.plan(&[1.0, 1.0]), None);
+        assert_eq!(rb.plan(&hot), None);
+        assert_eq!(rb.plan(&hot), None);
+        // third consecutive imbalanced tick fires, least → most pressured
+        assert_eq!(rb.plan(&hot), Some((0, 1)));
+        rb.record();
+        assert_eq!(rb.migrations(), 1);
+        // cooldown: next two ticks sit out even though still imbalanced
+        assert_eq!(rb.plan(&hot), None);
+        assert_eq!(rb.plan(&hot), None);
+        // then the streak must build up again from zero
+        assert_eq!(rb.plan(&hot), None);
+        assert_eq!(rb.plan(&hot), None);
+        assert_eq!(rb.plan(&hot), Some((0, 1)));
+    }
+
+    #[test]
+    fn rebalancer_ignores_single_shard_and_balanced_load() {
+        let mut rb = Rebalancer::new(RebalancerConfig::default());
+        assert_eq!(rb.plan(&[9.0]), None, "one shard: nothing to do");
+        for _ in 0..10 {
+            assert_eq!(rb.plan(&[1.0, 1.1, 0.9]), None);
+        }
+        assert_eq!(rb.migrations(), 0);
+    }
+}

@@ -641,6 +641,63 @@ impl StateStore {
         self.live_count
     }
 
+    /// Total provisioned cores across all nodes (drained tombstones
+    /// contribute 0). The sharded rebalancer reads this as a shard's
+    /// capacity denominator.
+    pub fn capacity_cores(&self) -> f64 {
+        self.nodes.iter().map(|n| n.total_cores).sum()
+    }
+
+    /// Whether a node hosts no containers (warm, starting, or busy).
+    #[inline]
+    pub fn node_is_empty(&self, node: usize) -> bool {
+        self.node_members[node].is_empty()
+    }
+
+    /// Append a new node with `cores` capacity, returning its id. Used
+    /// by the sharded rebalancer to accept capacity migrated from
+    /// another shard; nodes are only ever appended (never removed), so
+    /// container `node` indices and the dense per-node aggregate vectors
+    /// stay valid.
+    pub fn add_node(&mut self, cores: f64) -> usize {
+        let id = self.nodes.len();
+        let cores = cores.max(0.0);
+        self.nodes.push(Node {
+            id,
+            total_cores: cores,
+            alloc_cores: 0.0,
+            containers: 0,
+        });
+        self.node_members.push(BTreeSet::new());
+        self.node_busy.push(0);
+        self.node_index.insert((f64_key(cores), id));
+        id
+    }
+
+    /// Drain a node's capacity to zero, returning the cores taken. The
+    /// node stays in place as a zero-capacity tombstone (so indices stay
+    /// dense and `check_consistency` invariants hold); with zero free
+    /// cores it can never be picked for placement again. Refuses nodes
+    /// that currently host containers — migration must never strand a
+    /// running container's resources.
+    pub fn drain_node(&mut self, node: usize) -> Result<f64, String> {
+        if node >= self.nodes.len() {
+            return Err(format!("drain_node: no node {node}"));
+        }
+        if !self.node_members[node].is_empty() {
+            return Err(format!(
+                "drain_node: node {node} hosts {} container(s)",
+                self.node_members[node].len()
+            ));
+        }
+        let cores = self.nodes[node].total_cores;
+        let old_key = (f64_key(self.node_free(node)), node);
+        self.node_index.remove(&old_key);
+        self.nodes[node].total_cores = 0.0;
+        self.node_index.insert((f64_key(0.0), node));
+        Ok(cores)
+    }
+
     /// Look up a live container by id (None for removed/recycled ids).
     #[inline]
     pub fn get(&self, cid: u64) -> Option<&Container> {
@@ -946,6 +1003,56 @@ mod tests {
         assert_eq!(s.pick_container(1), Some(a));
         s.remove(a);
         assert_eq!(s.pick_container(1), Some(c));
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn drain_refuses_occupied_node_and_tombstones_empty_ones() {
+        let mut s = store();
+        let a = s.spawn(1, 2, 0, 0, false).unwrap();
+        assert_eq!(s.get(a).unwrap().node, 0);
+        // node 0 hosts a container -> migration must refuse it
+        assert!(s.drain_node(0).is_err());
+        assert!(s.drain_node(99).is_err());
+        // node 1 is empty -> drains to a zero-capacity tombstone
+        assert!(s.node_is_empty(1));
+        assert_eq!(s.drain_node(1).unwrap(), 2.0);
+        assert_eq!(s.nodes[1].total_cores, 0.0);
+        assert_eq!(s.capacity_cores(), 2.0);
+        s.check_consistency().unwrap();
+        // a tombstone is never picked for placement
+        for _ in 0..4 {
+            let cid = s.spawn(1, 1, 0, 0, false).unwrap();
+            assert_eq!(s.get(cid).unwrap().node, 0);
+        }
+        assert!(s.pick_node().is_none());
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn add_node_extends_capacity_in_place() {
+        let mut s = store();
+        assert_eq!(s.capacity_cores(), 4.0);
+        let id = s.add_node(2.0);
+        assert_eq!(id, 2);
+        assert_eq!(s.capacity_cores(), 6.0);
+        s.check_consistency().unwrap();
+        // fill the original nodes, then placement spills onto the newcomer
+        let mut spawned = Vec::new();
+        while let Some(cid) = s.spawn(0, 1, 0, 0, false) {
+            spawned.push(cid);
+        }
+        assert_eq!(spawned.len(), 12); // 6 cores / 0.5
+        assert!(spawned.iter().any(|&c| s.get(c).unwrap().node == id));
+        // drain -> add round-trips capacity exactly
+        for cid in spawned {
+            s.remove(cid);
+        }
+        let cores = s.drain_node(id).unwrap();
+        assert_eq!(cores, 2.0);
+        let id2 = s.add_node(cores);
+        assert_eq!(id2, 3);
+        assert_eq!(s.capacity_cores(), 6.0);
         s.check_consistency().unwrap();
     }
 

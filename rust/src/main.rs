@@ -20,7 +20,7 @@ use fifer::cli::Args;
 use fifer::config::{Policy, RmConfig};
 use fifer::experiments::{self, TraceKind};
 use fifer::scenario::{self, ScenarioSpec};
-use fifer::server::{serve, ServeParams};
+use fifer::server::{serve_sharded, ServeParams};
 
 fn main() {
     if let Err(e) = run() {
@@ -77,6 +77,11 @@ fn run() -> Result<()> {
                         (
                             "--executors <n>",
                             "serve: max live containers (executor threads)",
+                        ),
+                        (
+                            "--shards <n>",
+                            "serve: split the coordinator into n chain-hash shards \
+                             (docs/DESIGN.md §Sharding)",
                         ),
                         ("--drain <s>", "serve: drain window after the generator stops"),
                         ("--monitor <s>", "serve: monitor-tick interval override"),
@@ -140,7 +145,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let threads = args.usize_or("threads", 1)?;
             let cells = spec.cells();
             println!(
-                "scenario {}: {} cells ({} traces x {} mixes x {} policies x {} seeds), \
+                "scenario {}: {} cells ({} traces x {} mixes x {} policies x {} seeds{}), \
                  {} thread(s)",
                 spec.name,
                 cells.len(),
@@ -148,6 +153,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 spec.mixes.len(),
                 spec.policies.len(),
                 spec.seeds.len(),
+                if spec.shard_counts != [1] {
+                    format!(" x {} shard counts", spec.shard_counts.len())
+                } else {
+                    String::new()
+                },
                 threads.clamp(1, cells.len().max(1)),
             );
             // observability collection is opt-in: the plain sweep stays
@@ -175,16 +185,28 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             // sweep stays byte-identical across --threads
             let optimality = args.flag("optimality");
             let results = scenario::run_scenario_full(&spec, threads, obs, optimality)?;
-            let mut t = Table::new(&[
-                "trace", "mix", "policy", "seed", "jobs", "viol%", "median ms", "p99 ms",
-                "avg cont", "cold", "energy Wh",
+            // the shards column only appears when the sweep actually
+            // varies it, keeping classic sweep output unchanged
+            let sharded = spec.shard_counts != [1];
+            let mut header = vec!["trace", "mix", "policy", "seed"];
+            if sharded {
+                header.push("shards");
+            }
+            header.extend([
+                "jobs", "viol%", "median ms", "p99 ms", "avg cont", "cold", "energy Wh",
             ]);
+            let mut t = Table::new(&header);
             for r in &results {
-                t.row(&[
+                let mut row = vec![
                     r.cell.trace.clone(),
                     r.cell.mix.clone(),
                     r.cell.policy.name().to_string(),
                     format!("{}", r.cell.seed),
+                ];
+                if sharded {
+                    row.push(format!("{}", r.cell.shards));
+                }
+                row.extend([
                     format!("{}", r.summary.jobs),
                     format!("{:.2}", r.summary.slo_violation_pct),
                     format!("{:.0}", r.summary.median_ms),
@@ -193,6 +215,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     format!("{}", r.summary.cold_starts),
                     format!("{:.1}", r.summary.energy_wh),
                 ]);
+                t.row(&row);
             }
             t.print();
             if optimality {
@@ -278,6 +301,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     p.executors = args.usize_or("executors", p.executors)?;
     p.drain_s = args.f64_or("drain", p.drain_s)?;
     p.synthetic = args.flag("synthetic");
+    let shards = args.usize_or("shards", 1)?;
     // --no-batching is shorthand for the non-batching baseline policy;
     // combining it with an explicit batching --policy is contradictory
     let policy = match (args.get("policy"), args.flag("no-batching")) {
@@ -315,16 +339,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!(
         "live serve: rate={} req/s, {}s (+{}s drain), policy={} (batching={}), \
-         up to {} containers, {} backend",
+         up to {} containers, {} backend{}",
         p.rate,
         p.duration_s,
         p.drain_s,
         policy.name(),
         policy.batching(),
         p.executors,
-        if p.synthetic { "synthetic" } else { "PJRT" }
+        if p.synthetic { "synthetic" } else { "PJRT" },
+        if shards > 1 {
+            format!(", {shards} coordinator shards")
+        } else {
+            String::new()
+        }
     );
-    let r = serve(p)?;
+    let r = serve_sharded(p, shards)?;
     if r.interrupted {
         println!("interrupted: generator stopped early, in-flight jobs drained");
     }

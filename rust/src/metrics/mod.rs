@@ -301,6 +301,50 @@ impl Recorder {
         }
     }
 
+    /// Fold per-shard recorders into one cluster-wide recorder (used by
+    /// the sharded sim driver). A single part is returned unchanged, so
+    /// the shards=1 path stays byte-identical to the unsharded engine.
+    ///
+    /// Jobs, containers, and decision samples concatenate in shard
+    /// order (summaries sort internally, so order never leaks into
+    /// results); counters and energy sum; the cumulative energy series
+    /// is rebuilt over the union of sample times with each shard
+    /// contributing its last value at or before each time.
+    pub fn merge(mut parts: Vec<Recorder>) -> Recorder {
+        if parts.len() <= 1 {
+            return parts.pop().unwrap_or_default();
+        }
+        let mut out = Recorder::new();
+        let mut times: Vec<Micros> = parts
+            .iter()
+            .flat_map(|p| p.energy_series.iter().map(|(t, _)| *t))
+            .collect();
+        times.sort_unstable();
+        times.dedup();
+        let mut idx = vec![0usize; parts.len()];
+        let mut last = vec![0.0f64; parts.len()];
+        for t in times {
+            for (k, p) in parts.iter().enumerate() {
+                while idx[k] < p.energy_series.len() && p.energy_series[idx[k]].0 <= t {
+                    last[k] = p.energy_series[idx[k]].1;
+                    idx[k] += 1;
+                }
+            }
+            out.energy_series.push((t, last.iter().sum()));
+        }
+        for p in parts {
+            out.jobs.extend(p.jobs);
+            out.containers.extend(p.containers);
+            out.cold_starts += p.cold_starts;
+            out.batches += p.batches;
+            out.reclaimed += p.reclaimed;
+            out.energy_wh += p.energy_wh;
+            out.horizon = out.horizon.max(p.horizon);
+            out.decision_ns.extend(p.decision_ns);
+        }
+        out
+    }
+
     /// Response-latency CDF in ms (Fig. 10a).
     pub fn latency_cdf(&self, points: usize) -> Vec<(f64, f64)> {
         let r: Vec<f64> = self.jobs.iter().map(|j| to_ms(j.response())).collect();

@@ -164,6 +164,107 @@ impl DecisionStats {
     }
 }
 
+/// Per-shard slice of a merged sharded report: the shard's own
+/// decision-latency distribution plus its tick-averaged busy/allocated
+/// cores. Present only on reports produced by [`merge_reports`] from
+/// more than one shard — unsharded reports keep `shards` empty and
+/// render byte-identically to before sharding existed.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub decision: DecisionStats,
+    /// Mean busy cores per monitor tick over the shard's whole run.
+    pub busy_cores: f64,
+    /// Mean allocated cores per monitor tick over the shard's run.
+    pub alloc_cores: f64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        let util = if self.alloc_cores <= 0.0 {
+            0.0
+        } else {
+            (self.busy_cores / self.alloc_cores).clamp(0.0, 1.0)
+        };
+        Json::obj(vec![
+            ("shard", Json::Num(self.shard as f64)),
+            ("decision_latency_us", self.decision.to_json()),
+            ("busy_cores", Json::Num(self.busy_cores)),
+            ("alloc_cores", Json::Num(self.alloc_cores)),
+            ("utilization", Json::Num(util)),
+        ])
+    }
+}
+
+/// Fold per-shard [`ObsReport`]s into one cluster-wide report (the
+/// sharded drivers' merge step). A single report passes through
+/// unchanged — the shards=1 byte-identity contract. With more, rows
+/// merge by bucket start ([`BucketRow::merge`]), totals and decision
+/// stats fold, traces/monitor spans concatenate in shard order, and
+/// `shards` carries each shard's own decision stats and tick-averaged
+/// load for per-shard rendering (`/metrics/summary`, `/metrics/prom`).
+pub fn merge_reports(reports: Vec<ObsReport>) -> Option<ObsReport> {
+    if reports.len() <= 1 {
+        return reports.into_iter().next();
+    }
+    let shards: Vec<ShardStats> = reports
+        .iter()
+        .enumerate()
+        .map(|(k, r)| {
+            let (mut ticks, mut busy, mut alloc) = (0u64, 0.0f64, 0.0f64);
+            for row in &r.rows {
+                ticks += row.ticks;
+                busy += row.busy_cores_sum;
+                alloc += row.alloc_cores_sum;
+            }
+            let t = ticks.max(1) as f64;
+            ShardStats {
+                shard: k,
+                decision: r.decision.clone(),
+                busy_cores: busy / t,
+                alloc_cores: alloc / t,
+            }
+        })
+        .collect();
+    let mut it = reports.into_iter();
+    let mut out = it.next().expect("len > 1");
+    let mut rows: std::collections::BTreeMap<Micros, BucketRow> =
+        out.rows.drain(..).map(|r| (r.start, r)).collect();
+    for r in it {
+        out.now = out.now.max(r.now);
+        out.dropped_buckets += r.dropped_buckets;
+        out.totals.arrivals += r.totals.arrivals;
+        out.totals.dispatches += r.totals.dispatches;
+        out.totals.completions += r.totals.completions;
+        out.totals.slo_ok += r.totals.slo_ok;
+        out.totals.slo_violations += r.totals.slo_violations;
+        out.totals.cold_hit_jobs += r.totals.cold_hit_jobs;
+        out.totals.spawns_cold += r.totals.spawns_cold;
+        out.totals.spawns_warm += r.totals.spawns_warm;
+        out.totals.retirements += r.totals.retirements;
+        out.totals.batches += r.totals.batches;
+        out.totals.batched_jobs += r.totals.batched_jobs;
+        out.dropped_traces += r.dropped_traces;
+        out.traces.extend(r.traces);
+        out.monitor_spans.extend(r.monitor_spans);
+        out.decision.hist.merge(&r.decision.hist);
+        out.decision.sum_us += r.decision.sum_us;
+        out.decision.max_us = out.decision.max_us.max(r.decision.max_us);
+        out.decision.count += r.decision.count;
+        for row in r.rows {
+            match rows.entry(row.start) {
+                std::collections::btree_map::Entry::Vacant(v) => {
+                    v.insert(row);
+                }
+                std::collections::btree_map::Entry::Occupied(mut o) => o.get_mut().merge(&row),
+            }
+        }
+    }
+    out.rows = rows.into_values().collect();
+    out.shards = shards;
+    Some(out)
+}
+
 /// Driver-agnostic telemetry collector fed from `EngineCore` taps.
 ///
 /// All methods take the engine clock (`now`, µs); the collector holds
@@ -397,6 +498,7 @@ impl Collector {
                 .as_ref()
                 .map_or_else(Vec::new, |t| t.monitors().iter().copied().collect()),
             decision: self.decision.clone(),
+            shards: Vec::new(),
         }
     }
 }
@@ -429,6 +531,10 @@ pub struct ObsReport {
     pub monitor_spans: Vec<MonitorSpan>,
     /// Probed dispatch decision latency (zeros unless the probe is on).
     pub decision: DecisionStats,
+    /// Per-shard stats when this report was merged from a sharded run
+    /// ([`merge_reports`]); empty — and absent from every rendering —
+    /// for unsharded runs, preserving their output byte-for-byte.
+    pub shards: Vec<ShardStats>,
 }
 
 impl ObsReport {
@@ -482,7 +588,7 @@ impl ObsReport {
                 alerts.push(Json::Str(e.name.to_string()));
             }
         }
-        Json::obj(vec![
+        let mut fields = vec![
             ("now_s", self.now_s()),
             ("bucket_s", Json::Num(self.bucket_s as f64)),
             ("buckets", Json::Num(self.rows.len() as f64)),
@@ -500,7 +606,16 @@ impl ObsReport {
             ("slo", Json::obj(slo_obj)),
             ("alerts", Json::Arr(alerts)),
             ("decision_latency_us", self.decision.to_json()),
-        ])
+        ];
+        // only merged sharded reports carry this — unsharded output is
+        // byte-for-byte what it was before sharding existed
+        if !self.shards.is_empty() {
+            fields.push((
+                "shards",
+                Json::Arr(self.shards.iter().map(|s| s.to_json()).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// `GET /metrics/history?minutes=N` — the last N minutes of rows

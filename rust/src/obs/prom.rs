@@ -204,6 +204,89 @@ pub fn render(r: &ObsReport) -> String {
         );
     }
 
+    // -- per-shard series (merged sharded runs only) --------------------
+    // Dedicated `fifer_shard_*` families rather than a `shard` label on
+    // the existing names: unsharded expositions stay byte-identical,
+    // and the aggregate series keep their meaning under sharding.
+    if !r.shards.is_empty() {
+        let _ = writeln!(
+            &mut out,
+            "# HELP fifer_shard_decision_latency_us Per-shard dispatch decision latency (us)."
+        );
+        let _ = writeln!(&mut out, "# TYPE fifer_shard_decision_latency_us histogram");
+        for s in &r.shards {
+            let mut cum = 0u64;
+            for (i, &c) in s.decision.hist.counts().iter().enumerate() {
+                cum += c;
+                match LatencyHist::bucket_bound(i) {
+                    Some(b) => {
+                        let _ = writeln!(
+                            &mut out,
+                            "fifer_shard_decision_latency_us_bucket{{shard=\"{}\",le=\"{}\"}} {cum}",
+                            s.shard,
+                            num(b)
+                        );
+                    }
+                    None => {
+                        let _ = writeln!(
+                            &mut out,
+                            "fifer_shard_decision_latency_us_bucket{{shard=\"{}\",le=\"+Inf\"}} {cum}",
+                            s.shard
+                        );
+                    }
+                }
+            }
+            let _ = writeln!(
+                &mut out,
+                "fifer_shard_decision_latency_us_sum{{shard=\"{}\"}} {}",
+                s.shard,
+                num(s.decision.sum_us)
+            );
+            let _ = writeln!(
+                &mut out,
+                "fifer_shard_decision_latency_us_count{{shard=\"{}\"}} {}",
+                s.shard,
+                s.decision.hist.total()
+            );
+        }
+        let shard_gauge = |out: &mut String, name: &str, help: &str| {
+            let _ = writeln!(out, "# HELP fifer_shard_{name} {help}");
+            let _ = writeln!(out, "# TYPE fifer_shard_{name} gauge");
+        };
+        shard_gauge(&mut out, "busy_cores", "Busy cores per shard (tick average over the run).");
+        for s in &r.shards {
+            let _ = writeln!(
+                &mut out,
+                "fifer_shard_busy_cores{{shard=\"{}\"}} {}",
+                s.shard,
+                num(s.busy_cores)
+            );
+        }
+        shard_gauge(&mut out, "alloc_cores", "Allocated cores per shard (tick average over the run).");
+        for s in &r.shards {
+            let _ = writeln!(
+                &mut out,
+                "fifer_shard_alloc_cores{{shard=\"{}\"}} {}",
+                s.shard,
+                num(s.alloc_cores)
+            );
+        }
+        shard_gauge(&mut out, "utilization", "Busy / allocated cores per shard.");
+        for s in &r.shards {
+            let util = if s.alloc_cores <= 0.0 {
+                0.0
+            } else {
+                (s.busy_cores / s.alloc_cores).clamp(0.0, 1.0)
+            };
+            let _ = writeln!(
+                &mut out,
+                "fifer_shard_utilization{{shard=\"{}\"}} {}",
+                s.shard,
+                num(util)
+            );
+        }
+    }
+
     out
 }
 
@@ -266,6 +349,49 @@ mod tests {
         assert!(text.contains("fifer_slo_burn_rate{slo=\"e2e_p95_ms\",window=\"fast\"}"));
         // deterministic re-render
         assert_eq!(text, render(&report()));
+    }
+
+    #[test]
+    fn sharded_report_adds_labeled_families_only() {
+        // an unsharded report never emits fifer_shard_* …
+        let plain = render(&report());
+        assert!(!plain.contains("fifer_shard_"));
+        // … and a merged two-shard report adds the labeled families
+        // while keeping the exposition well-formed (unique TYPEs and
+        // series, every sample typed)
+        let merged = crate::obs::merge_reports(vec![report(), report()]).unwrap();
+        assert_eq!(merged.shards.len(), 2);
+        let text = render(&merged);
+        for needle in [
+            "# TYPE fifer_shard_decision_latency_us histogram",
+            "fifer_shard_decision_latency_us_count{shard=\"0\"}",
+            "fifer_shard_decision_latency_us_count{shard=\"1\"}",
+            "fifer_shard_busy_cores{shard=\"1\"}",
+            "fifer_shard_alloc_cores{shard=\"0\"}",
+            "fifer_shard_utilization{shard=\"1\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle}");
+        }
+        let mut types = std::collections::BTreeSet::new();
+        let mut series = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split(' ').next().unwrap().to_string();
+                assert!(types.insert(name.clone()), "duplicate TYPE {name}");
+            } else if !line.starts_with('#') {
+                let (key, value) = line.rsplit_once(' ').unwrap();
+                assert!(value.parse::<f64>().unwrap().is_finite(), "{line}");
+                assert!(series.insert(key.to_string()), "duplicate series {key}");
+                let base = key.split('{').next().unwrap();
+                let base = base
+                    .trim_end_matches("_bucket")
+                    .trim_end_matches("_sum")
+                    .trim_end_matches("_count");
+                assert!(types.contains(base), "sample {key} has no TYPE");
+            }
+        }
+        // aggregate decision count doubles in the merged report
+        assert!(text.contains("fifer_decision_latency_us_count 2"));
     }
 
     #[test]

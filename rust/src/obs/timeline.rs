@@ -192,6 +192,39 @@ impl BucketRow {
         }
     }
 
+    /// Fold another row covering the same bucket into this one (used
+    /// when merging per-shard timelines): counters and sums add, the
+    /// histograms merge bucket-wise, and the tracked max takes the max.
+    /// Note `ticks` adds too — a merged row's gauge averages are
+    /// per-shard-tick, i.e. mean load of one shard, not of the cluster;
+    /// SLO ratios (counter/counter) are unaffected.
+    pub fn merge(&mut self, other: &BucketRow) {
+        self.arrivals += other.arrivals;
+        self.dispatches += other.dispatches;
+        self.completions += other.completions;
+        self.slo_ok += other.slo_ok;
+        self.slo_violations += other.slo_violations;
+        self.cold_hit_jobs += other.cold_hit_jobs;
+        self.spawns_cold += other.spawns_cold;
+        self.spawns_warm += other.spawns_warm;
+        self.retirements += other.retirements;
+        self.batches += other.batches;
+        self.batched_jobs += other.batched_jobs;
+        self.hist.merge(&other.hist);
+        self.lat_sum_ms += other.lat_sum_ms;
+        self.lat_max_ms = self.lat_max_ms.max(other.lat_max_ms);
+        self.exec_sum_ms += other.exec_sum_ms;
+        self.cold_sum_ms += other.cold_sum_ms;
+        self.batch_wait_sum_ms += other.batch_wait_sum_ms;
+        self.ticks += other.ticks;
+        self.busy_cores_sum += other.busy_cores_sum;
+        self.alloc_cores_sum += other.alloc_cores_sum;
+        self.containers_sum += other.containers_sum;
+        self.warm_free_slots_sum += other.warm_free_slots_sum;
+        self.starting_slots_sum += other.starting_slots_sum;
+        self.queue_depth_sum += other.queue_depth_sum;
+    }
+
     /// Busy-core fraction of allocated container capacity over the
     /// bucket (0 when nothing was allocated).
     pub fn utilization(&self) -> f64 {

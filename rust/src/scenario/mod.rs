@@ -29,6 +29,7 @@
 //! | `traces`         | —       | trace names (required, non-empty) |
 //! | `mixes`          | `["Heavy"]` | workload-mix names (Table 5) |
 //! | `policies`       | `["all"]` | policy names; `"all"` / `"paper"` expand |
+//! | `shards`         | `[1]`   | coordinator shard counts to sweep (docs/DESIGN.md §Sharding) |
 //! | `artifacts_dir`  | `"artifacts"` | where exported traces/weights live |
 //!
 //! Trace names resolve to a `[trace.<name>]` definition or to a built-in
@@ -97,7 +98,7 @@ pub const BUILTIN_TRACES: [&str; 5] = ["poisson", "wiki", "wits", "azure", "flas
 
 /// Built-in scenario files: `(name, toml_text, about)`. The first two
 /// re-express the paper's §6.1/§6.2 experiment grids declaratively.
-pub const BUILTINS: [(&str, &str, &str); 3] = [
+pub const BUILTINS: [(&str, &str, &str); 4] = [
     (
         "prototype-grid",
         include_str!("../../../examples/scenarios/prototype_grid.toml"),
@@ -112,6 +113,11 @@ pub const BUILTINS: [(&str, &str, &str); 3] = [
         "flashcrowd",
         include_str!("../../../examples/scenarios/flashcrowd.toml"),
         "composed-workload demo: ramped WITS + flash crowd + Azure heavy tail",
+    ),
+    (
+        "shard-sweep",
+        include_str!("../../../examples/scenarios/shard_sweep.toml"),
+        "sharded-coordinator sweep: quality vs shard count on a flash crowd",
     ),
 ];
 
@@ -133,6 +139,9 @@ pub struct Cell {
     pub mix: String,
     pub policy: Policy,
     pub seed: u64,
+    /// Coordinator shard count for this cell (1 = the classic unsharded
+    /// engine; >1 routes through [`crate::sim::sharded`]).
+    pub shards: usize,
 }
 
 /// The completed result of one cell.
@@ -159,6 +168,9 @@ pub struct ScenarioSpec {
     pub traces: Vec<String>,
     pub mixes: Vec<String>,
     pub policies: Vec<Policy>,
+    /// Coordinator shard counts to sweep (default `[1]`); each count
+    /// multiplies the matrix like a policy or seed does.
+    pub shard_counts: Vec<usize>,
     /// `[trace.<name>]` definitions: name → expression source.
     pub trace_defs: BTreeMap<String, String>,
     pub cluster: ClusterConfig,
@@ -168,7 +180,7 @@ pub struct ScenarioSpec {
     pub artifacts_dir: String,
 }
 
-const SCENARIO_KEYS: [&str; 10] = [
+const SCENARIO_KEYS: [&str; 11] = [
     "name",
     "duration_s",
     "drain_s",
@@ -178,6 +190,7 @@ const SCENARIO_KEYS: [&str; 10] = [
     "traces",
     "mixes",
     "policies",
+    "shards",
     "artifacts_dir",
 ];
 
@@ -370,6 +383,32 @@ impl ScenarioSpec {
         }
         RmConfig::paper(Policy::Fifer).apply_doc(&rm_overrides)?;
 
+        // shard counts are validated against the (already-overridden)
+        // cluster: every shard needs at least one node of capacity
+        let shard_counts: Vec<usize> = match sec.get("shards") {
+            None => vec![1],
+            Some(v) => num_list(v)?
+                .into_iter()
+                .map(|x| {
+                    if x < 1.0 || x.fract() != 0.0 {
+                        bail!("[scenario] shards must be positive integers, got {x}");
+                    }
+                    let n = x as usize;
+                    if n > cluster.nodes {
+                        bail!(
+                            "[scenario] shards = {n} exceeds cluster nodes ({}): \
+                             every shard needs at least one node",
+                            cluster.nodes
+                        );
+                    }
+                    Ok(n)
+                })
+                .collect::<Result<_>>()?,
+        };
+        if shard_counts.is_empty() {
+            bail!("[scenario] shards must not be empty");
+        }
+
         Ok(ScenarioSpec {
             name: get_str(sec, "name", "unnamed")?,
             duration_s,
@@ -380,6 +419,7 @@ impl ScenarioSpec {
             traces,
             mixes,
             policies,
+            shard_counts,
             trace_defs,
             cluster,
             rm_overrides,
@@ -388,20 +428,23 @@ impl ScenarioSpec {
     }
 
     /// Expand the sweep matrix in deterministic order: traces (major) ×
-    /// mixes × policies × seeds (minor).
+    /// mixes × policies × seeds × shard counts (minor).
     pub fn cells(&self) -> Vec<Cell> {
         let mut out = Vec::new();
         for trace in &self.traces {
             for mix in &self.mixes {
                 for &policy in &self.policies {
                     for &seed in &self.seeds {
-                        out.push(Cell {
-                            index: out.len(),
-                            trace: trace.clone(),
-                            mix: mix.clone(),
-                            policy,
-                            seed,
-                        });
+                        for &shards in &self.shard_counts {
+                            out.push(Cell {
+                                index: out.len(),
+                                trace: trace.clone(),
+                                mix: mix.clone(),
+                                policy,
+                                seed,
+                                shards,
+                            });
+                        }
                     }
                 }
             }
@@ -514,13 +557,18 @@ pub fn results_json(spec: &ScenarioSpec, results: &[CellResult]) -> Json {
     let cells = results
         .iter()
         .map(|r| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("trace", Json::Str(r.cell.trace.clone())),
                 ("mix", Json::Str(r.cell.mix.clone())),
                 ("policy", Json::Str(r.cell.policy.name().to_string())),
                 ("seed", Json::Num(r.cell.seed as f64)),
-                ("summary", r.summary.to_json()),
-            ])
+            ];
+            // unsharded sweeps stay byte-identical to pre-sharding output
+            if r.cell.shards != 1 {
+                fields.push(("shards", Json::Num(r.cell.shards as f64)));
+            }
+            fields.push(("summary", r.summary.to_json()));
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![

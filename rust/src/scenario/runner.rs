@@ -18,6 +18,7 @@ use super::{Cell, CellResult, ScenarioSpec};
 use crate::config::{RmConfig, SystemConfig};
 use crate::model::Catalog;
 use crate::obs::ObsConfig;
+use crate::sim::sharded::run_sharded_summarized;
 use crate::sim::{run_summarized_full, SimParams};
 use crate::trace::Trace;
 
@@ -54,6 +55,17 @@ fn run_cell(
         trace,
         drain_s: spec.drain_s,
     };
+    if cell.shards > 1 {
+        // sharded engine: same workload, chain-hash partitioned across
+        // `cell.shards` EngineCores in deterministic lockstep
+        let (run, summary) = run_sharded_summarized(params, cell.shards, warmup, obs, optimality)
+            .expect("shard count validated at parse time");
+        return CellResult {
+            cell: cell.clone(),
+            summary,
+            obs: run.report,
+        };
+    }
     let (_, summary, report) = run_summarized_full(params, warmup, obs, optimality);
     CellResult {
         cell: cell.clone(),

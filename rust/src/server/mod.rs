@@ -101,6 +101,11 @@ enum Msg {
     SpawnFailed { err: String },
     Tick,
     GenDone,
+    /// Sharded runs only: the rebalancer asks this shard to give up one
+    /// empty node's capacity to shard `to`.
+    Donate { to: usize },
+    /// Sharded runs only: capacity migrated in from another shard.
+    Accept { cores: f64 },
 }
 
 /// Parameters for a live run.
@@ -580,6 +585,8 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
                 fail = Some(err);
                 break;
             }
+            // rebalancer traffic never reaches an unsharded loop
+            Msg::Donate { .. } | Msg::Accept { .. } => {}
         }
         // publish a fresh snapshot at most once per second of engine time
         if let Some((_, shared)) = &metrics {
@@ -637,6 +644,330 @@ pub fn serve(p: ServeParams) -> Result<ServeReport> {
         recorder,
         obs,
         interrupted,
+    })
+}
+
+/// What one live shard thread hands back when its loop drains.
+struct ShardOutcome {
+    recorder: Recorder,
+    obs: Option<ObsReport>,
+    batched_jobs: u64,
+    cold_compiles: u64,
+    stage_exec: HashMap<&'static str, (f64, u64)>,
+    interrupted: bool,
+    fail: Option<String>,
+}
+
+/// Run the live server sharded: N coordinator loops on real threads,
+/// each owning an [`EngineCore`] over a slice of the executor budget
+/// (one single-core node per executor, so nodes are the natural
+/// migration unit), with arrivals routed by the same splitmix64 chain
+/// hash as the sharded simulator and a main-thread rebalancer that
+/// watches per-shard backlog pressure at the monitor cadence and asks
+/// the least-pressured shard to donate one empty node to the most
+/// pressured (`Msg::Donate` → [`EngineCore::donate_node_capacity`] →
+/// `Msg::Accept`; capacity holding running containers never moves).
+///
+/// `shards <= 1` falls straight through to [`serve`] — the unsharded
+/// path is untouched byte-for-byte. The merged [`ServeReport`] has the
+/// same shape as an unsharded one; per-shard decision latency and load
+/// appear in the merged obs snapshot (`/metrics/summary` `shards` key,
+/// `/metrics/prom` `fifer_shard_*` series).
+///
+/// Known limit (shared with the sim, see docs/DESIGN.md §Sharding):
+/// the engine's spawn-capacity guard is computed from the static
+/// config, so a shard that *receives* capacity can pack existing nodes
+/// better but not raise its container ceiling mid-run.
+pub fn serve_sharded(p: ServeParams, shards: usize) -> Result<ServeReport> {
+    use crate::coordinator::sharded::{partition_count, Rebalancer, RebalancerConfig, ShardRouter};
+    use std::sync::atomic::AtomicU64;
+
+    if shards <= 1 {
+        return serve(p);
+    }
+    let nshards = shards;
+    if p.executors < nshards {
+        anyhow::bail!(
+            "--shards {nshards} needs at least one executor per shard (have {})",
+            p.executors
+        );
+    }
+    let cat = Catalog::paper();
+    let backend = if p.synthetic {
+        ExecBackend::Synthetic
+    } else {
+        crate::runtime::Manifest::load(Path::new(&p.cfg.artifacts_dir))?;
+        ExecBackend::Pjrt
+    };
+
+    // per-shard channels; every shard also holds the full sender list so
+    // a donor can hand capacity straight to its receiver
+    let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(nshards);
+    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(nshards);
+    for _ in 0..nshards {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // (backlog, capacity-cores bits) published by each shard loop
+    let load: Arc<Vec<(AtomicU64, AtomicU64)>> = Arc::new(
+        (0..nshards)
+            .map(|_| (AtomicU64::new(0), AtomicU64::new(0f64.to_bits())))
+            .collect(),
+    );
+    let reports: Arc<Vec<Mutex<Option<ObsReport>>>> =
+        Arc::new((0..nshards).map(|_| Mutex::new(None)).collect());
+    let start = Instant::now(); // one epoch, so all shard clocks agree
+
+    let metrics: Option<(MetricsServer, SharedSnapshot)> = match &p.metrics_addr {
+        Some(addr) => {
+            let shared: SharedSnapshot = Arc::new(Mutex::new(None));
+            let server = MetricsServer::start(addr, shared.clone())?;
+            Some((server, shared))
+        }
+        None => None,
+    };
+
+    // --- shard coordinator threads ------------------------------------
+    let mut handles = Vec::with_capacity(nshards);
+    for (k, rx) in rxs.into_iter().enumerate() {
+        let exec_k = partition_count(p.executors, nshards, k);
+        let base_cfg = p.cfg.clone();
+        let chains = p.chains.clone();
+        let peers = txs.clone();
+        let my_tx = txs[k].clone();
+        let load = load.clone();
+        let reports = reports.clone();
+        let (rate, duration_s, drain_s) = (p.rate, p.duration_s, p.drain_s);
+        let (trace_sample, interrupt) = (p.trace_sample, p.interrupt);
+        handles.push(std::thread::spawn(move || -> ShardOutcome {
+            // policy and engine are built inside the thread (the policy
+            // box is not Send); the shard cluster is one single-core
+            // node per executor slot so empty nodes exist to migrate
+            let pol: Box<dyn SchedulerPolicy> = base_cfg.rm.policy.build();
+            let mut cfg = base_cfg;
+            cfg.cluster = ClusterConfig {
+                nodes: exec_k,
+                cores_per_node: 1,
+                cpu_per_container: 1.0,
+                ..cfg.cluster.clone()
+            };
+            let driver =
+                RealTimeDriver::new(backend, PathBuf::from(&cfg.artifacts_dir), my_tx.clone());
+            let horizon = secs(duration_s);
+            let end = horizon + secs(drain_s.max(0.0));
+            let mut core = EngineCore::build(cfg, chains, rate / nshards as f64, pol, driver);
+            core.enable_obs(ObsConfig {
+                trace_sample,
+                ..ObsConfig::default()
+            });
+            core.bootstrap(horizon, end);
+            *reports[k].lock().expect("shard report lock") = core.obs_report();
+            load[k].1.store(core.capacity_cores().to_bits(), Ordering::Relaxed);
+
+            let mut gen_done = false;
+            let mut fail: Option<String> = None;
+            let mut batched_jobs = 0u64;
+            let mut cold_compiles = 0u64;
+            let mut stage_exec: HashMap<&'static str, (f64, u64)> = HashMap::new();
+            let mut interrupted = false;
+            let mut stop_at = end;
+            let mut last_pub: Micros = 0;
+            let cat = Catalog::paper();
+            while let Ok(msg) = rx.recv() {
+                let t = start.elapsed().as_micros() as Micros;
+                if !interrupted && interrupt.is_some_and(|f| f.load(Ordering::SeqCst)) {
+                    interrupted = true;
+                    gen_done = true;
+                    stop_at = (t + secs(drain_s.max(0.0))).min(end);
+                }
+                match msg {
+                    Msg::Arrival { chain } if !interrupted => core.arrival_at(chain, t),
+                    Msg::Arrival { .. } => {}
+                    Msg::SpawnReady { cid } => core.spawn_completed(cid, t),
+                    Msg::ExecDone {
+                        cid,
+                        ms_id,
+                        exec_ms,
+                        cold,
+                        rows,
+                    } => {
+                        batched_jobs += rows as u64;
+                        if cold {
+                            cold_compiles += 1;
+                        }
+                        let e = stage_exec
+                            .entry(cat.microservices[ms_id].name)
+                            .or_insert((0.0, 0));
+                        e.0 += exec_ms;
+                        e.1 += 1;
+                        core.batch_completed(cid, t);
+                    }
+                    Msg::Tick => core.advance_to(t),
+                    Msg::GenDone => gen_done = true,
+                    Msg::SpawnFailed { err } => {
+                        fail = Some(err);
+                        break;
+                    }
+                    Msg::Donate { to } => {
+                        if let Some(cores) = core.donate_node_capacity() {
+                            let _ = peers[to].send(Msg::Accept { cores });
+                        }
+                    }
+                    Msg::Accept { cores } => core.accept_node_capacity(cores),
+                }
+                load[k].0.store(core.backlog() as u64, Ordering::Relaxed);
+                load[k].1.store(core.capacity_cores().to_bits(), Ordering::Relaxed);
+                if t.saturating_sub(last_pub) >= MICROS_PER_S {
+                    last_pub = t;
+                    *reports[k].lock().expect("shard report lock") = core.obs_report();
+                }
+                let in_flight = core.jobs_arrived() - core.jobs_completed();
+                if (gen_done && in_flight == 0) || t > stop_at {
+                    break;
+                }
+            }
+            if fail.is_none() {
+                core.advance_to(stop_at);
+            }
+            let (recorder, driver, obs) = core.into_parts_obs();
+            driver.shutdown();
+            *reports[k].lock().expect("shard report lock") = obs.clone();
+            ShardOutcome {
+                recorder,
+                obs,
+                batched_jobs,
+                cold_compiles,
+                stage_exec,
+                interrupted,
+                fail,
+            }
+        }));
+    }
+
+    // --- load generator: one stream, chain-hash routed ------------------
+    {
+        let gtxs = txs.clone();
+        let chains = p.chains.clone();
+        let rate = p.rate;
+        let dur = p.duration_s;
+        let seed = p.cfg.seed;
+        let router = ShardRouter::new(seed, nshards);
+        std::thread::spawn(move || {
+            let mut rng = Pcg::new(seed ^ 0x9e37);
+            let t0 = Instant::now();
+            let mut i = 0usize;
+            while t0.elapsed().as_secs_f64() < dur {
+                let gap = rng.exponential(1.0 / rate.max(0.1));
+                std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+                let chain = chains[i % chains.len()];
+                i += 1;
+                if gtxs[router.route(chain)].send(Msg::Arrival { chain }).is_err() {
+                    return;
+                }
+            }
+            for tx in &gtxs {
+                let _ = tx.send(Msg::GenDone);
+            }
+        });
+    }
+
+    // --- ticker: broadcast; exits once every shard loop is gone ---------
+    {
+        let ttxs = txs.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(Duration::from_millis(5));
+            if ttxs.iter().all(|tx| tx.send(Msg::Tick).is_err()) {
+                return;
+            }
+        });
+    }
+
+    // --- main thread: snapshot merging + the rebalance tick -------------
+    let mut rebalancer = Rebalancer::new(RebalancerConfig::default());
+    let monitor_s = p.cfg.rm.monitor_interval_s.max(0.1);
+    let mut last_rebalance = Instant::now();
+    // is_finished (not a hand-rolled counter) so a panicking shard can't
+    // wedge the supervisor
+    while handles.iter().any(|h| !h.is_finished()) {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Some((_, shared)) = &metrics {
+            let snaps: Vec<ObsReport> = reports
+                .iter()
+                .filter_map(|m| m.lock().expect("shard report lock").clone())
+                .collect();
+            if snaps.len() == nshards {
+                *shared.lock().expect("metrics snapshot lock") = crate::obs::merge_reports(snaps);
+            }
+        }
+        if last_rebalance.elapsed().as_secs_f64() >= monitor_s {
+            last_rebalance = Instant::now();
+            let pressures: Vec<f64> = load
+                .iter()
+                .map(|(b, c)| {
+                    b.load(Ordering::Relaxed) as f64
+                        / f64::from_bits(c.load(Ordering::Relaxed)).max(1e-9)
+                })
+                .collect();
+            if let Some((donor, receiver)) = rebalancer.plan(&pressures) {
+                // best effort: the donor may refuse (no empty node), in
+                // which case nothing moves and nothing is lost
+                if txs[donor].send(Msg::Donate { to: receiver }).is_ok() {
+                    rebalancer.record();
+                }
+            }
+        }
+    }
+    drop(txs);
+
+    let mut outcomes: Vec<ShardOutcome> = Vec::with_capacity(nshards);
+    for h in handles {
+        match h.join() {
+            Ok(o) => outcomes.push(o),
+            Err(_) => anyhow::bail!("shard coordinator thread panicked"),
+        }
+    }
+
+    let obs = crate::obs::merge_reports(outcomes.iter().filter_map(|o| o.obs.clone()).collect());
+    if let Some((server, shared)) = metrics {
+        *shared.lock().expect("metrics snapshot lock") = obs.clone();
+        server.stop();
+    }
+    if let Some(err) = outcomes.iter_mut().find_map(|o| o.fail.take()) {
+        anyhow::bail!("live executor failed: {err}");
+    }
+
+    let duration_s = start.elapsed().as_secs_f64();
+    let recorder = Recorder::merge(outcomes.iter().map(|o| o.recorder.clone()).collect());
+    let summary = recorder.summarize(&cat);
+    let batches = recorder.batches;
+    let batched_jobs: u64 = outcomes.iter().map(|o| o.batched_jobs).sum();
+    let mut stage_exec: HashMap<&'static str, (f64, u64)> = HashMap::new();
+    for o in &outcomes {
+        for (name, (sum, cnt)) in &o.stage_exec {
+            let e = stage_exec.entry(name).or_insert((0.0, 0));
+            e.0 += sum;
+            e.1 += cnt;
+        }
+    }
+    Ok(ServeReport {
+        throughput_rps: summary.jobs as f64 / duration_s.max(1e-9),
+        avg_batch: if batches == 0 {
+            0.0
+        } else {
+            batched_jobs as f64 / batches as f64
+        },
+        batches,
+        cold_compiles: outcomes.iter().map(|o| o.cold_compiles).sum(),
+        stage_exec_ms: stage_exec
+            .into_iter()
+            .map(|(k, (sum, cnt))| (k, sum / cnt.max(1) as f64))
+            .collect(),
+        duration_s,
+        summary,
+        recorder,
+        obs,
+        interrupted: outcomes.iter().any(|o| o.interrupted),
     })
 }
 

@@ -25,6 +25,8 @@
 //! Events are processed from a binary heap ordered by (time, seq); all
 //! randomness flows from one seeded PCG, so runs are exactly reproducible.
 
+pub mod sharded;
+
 use crate::config::SystemConfig;
 use crate::coordinator::engine::{Driver, EffectCtx, EngineCore, SpawnEffect};
 use crate::coordinator::policy::SchedulerPolicy;

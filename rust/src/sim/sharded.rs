@@ -1,0 +1,322 @@
+//! Sharded virtual-time runs: N [`EngineCore`] shards advanced in
+//! lockstep epochs, with chain-hash routing and capacity rebalancing
+//! (see `crate::coordinator::sharded` for the routing/rebalancing
+//! pieces and docs/DESIGN.md §Sharding for the contract).
+//!
+//! Determinism contract: for a fixed shard count, a sharded run is a
+//! pure function of the seed — the router is splitmix64 (no platform
+//! hashers), shards advance in index order at epoch boundaries bounded
+//! by the monitor period, and the rebalancer is pure arithmetic. With
+//! `shards = 1` the run is **byte-identical** to the unsharded engine:
+//! the single shard sees the same config, the same rng fork sequence,
+//! and the same arrival stream, and every merge step passes a single
+//! part through unchanged (pinned by `rust/tests/test_sharded.rs` for
+//! every registered policy).
+//!
+//! Lockstep rule: shards advance together to each monitor-period
+//! boundary `t < horizon` (processing all events ≤ t), then the
+//! rebalancer runs; after the last boundary each shard drains its
+//! remaining events to the end of its drain window independently —
+//! there is no cross-shard interaction after the trace ends, so the
+//! final-drain order cannot affect results.
+
+use crate::coordinator::engine::EngineCore;
+use crate::coordinator::sharded::{partition_count, RebalancerConfig, ShardedCoordinator};
+use crate::estimator::InvocationLog;
+use crate::metrics::{Recorder, Summary};
+use crate::model::{Catalog, ChainId};
+use crate::obs::{merge_reports, ObsConfig, ObsReport};
+use crate::sim::{SimParams, VirtualDriver};
+use crate::util::{secs, Micros};
+
+/// Everything a sharded sim run produces: the merged cluster-wide
+/// recorder/report/log (shapes identical to an unsharded run) plus the
+/// per-shard slices the shard-sweep evaluation reports.
+pub struct ShardedRun {
+    pub recorder: Recorder,
+    pub report: Option<ObsReport>,
+    pub log: Option<InvocationLog>,
+    /// Arrivals routed to each shard (chain-hash, so per-chain totals
+    /// never split across shards).
+    pub shard_arrivals: Vec<usize>,
+    /// Per-shard probed decision latencies (ns; empty unless
+    /// `FIFER_DECISION_PROBE` is armed).
+    pub shard_decision_ns: Vec<Vec<u64>>,
+    /// Provisioned cores per shard at the end of the run (reflects any
+    /// migrations).
+    pub shard_capacity_cores: Vec<f64>,
+    /// Capacity migrations the rebalancer performed.
+    pub migrations: u64,
+}
+
+fn merge_logs(mut parts: Vec<InvocationLog>) -> Option<InvocationLog> {
+    let mut out = match parts.len() {
+        0 => return None,
+        _ => parts.remove(0),
+    };
+    // gamma/overhead/batch_cap are identical across shards (every shard
+    // is built from the same config and full chain list)
+    for p in parts {
+        out.entries.extend(p.entries);
+    }
+    Some(out)
+}
+
+/// Run one sharded simulation. Mirrors
+/// [`EngineCore::run_collecting_full`] shard-by-shard:
+/// build N engines over a node partition, fork each engine's rng the
+/// way the unsharded path does (so shard 0's stream is bit-identical to
+/// the unsharded stream), route the shared arrival stream by chain
+/// hash, advance in lockstep epochs with a rebalance tick per epoch,
+/// drain, and merge. `check_every > 0` additionally verifies
+/// conservation and store invariants per shard at every epoch (and
+/// cluster-wide capacity conservation), then per-event during the
+/// drain.
+pub fn run_sharded_collecting_full(
+    p: SimParams,
+    nshards: usize,
+    check_every: u64,
+    obs: Option<ObsConfig>,
+    invocation_log: bool,
+    rcfg: RebalancerConfig,
+) -> Result<ShardedRun, String> {
+    let nshards = nshards.max(1);
+    let total_nodes = p.cfg.cluster.nodes;
+    if nshards > total_nodes {
+        return Err(format!(
+            "shards ({nshards}) must not exceed cluster nodes ({total_nodes}): \
+             every shard needs at least one node of capacity"
+        ));
+    }
+    let seed = p.cfg.seed;
+
+    // one engine per shard: same seed, same full chain list (routing is
+    // by hash, not by chain partition), a near-even slice of the nodes,
+    // and the load hint scaled to the shard's expected share
+    let mut engines: Vec<EngineCore<VirtualDriver>> = Vec::with_capacity(nshards);
+    for k in 0..nshards {
+        let mut cfg = p.cfg.clone();
+        cfg.cluster.nodes = partition_count(total_nodes, nshards, k);
+        let pol = cfg.rm.policy.build();
+        let driver = VirtualDriver {
+            trace: p.trace.clone(),
+            drain_s: p.drain_s,
+        };
+        let avg_rate = p.trace.avg_rate() / nshards as f64;
+        let mut eng = EngineCore::build(cfg, p.chains.clone(), avg_rate, pol, driver);
+        if let Some(c) = obs {
+            eng.enable_obs(c);
+        }
+        if invocation_log {
+            eng.enable_invocation_log();
+        }
+        engines.push(eng);
+    }
+
+    // fork EVERY shard's rng exactly as the unsharded path forks its
+    // one engine — all engines share the seed, so all forks (and the
+    // post-fork engine rng states) are identical; shard 0's fork
+    // generates the one shared arrival stream
+    let mut forks: Vec<_> = engines.iter_mut().map(|e| e.rng.fork(0xa221)).collect();
+    let arrivals = p.trace.arrivals(&mut forks[0]);
+
+    let mut sc = ShardedCoordinator::new(engines, seed, rcfg);
+    let nchains = p.chains.len();
+    let mut routed: Vec<(Micros, ChainId, usize)> = Vec::with_capacity(arrivals.len());
+    let mut shard_arrivals = vec![0usize; nshards];
+    for (i, t) in arrivals.into_iter().enumerate() {
+        let chain = p.chains[i % nchains.max(1)];
+        let k = sc.route(chain);
+        shard_arrivals[k] += 1;
+        routed.push((t, chain, k));
+    }
+    for (k, eng) in sc.shards_mut().iter_mut().enumerate() {
+        eng.reserve_workload(shard_arrivals[k]);
+    }
+    for (t, chain, k) in routed {
+        sc.shard_mut(k).schedule_arrival(t, chain);
+    }
+
+    let horizon = secs(p.trace.duration_s() as f64);
+    let end = horizon + secs(p.drain_s);
+    for eng in sc.shards_mut() {
+        eng.bootstrap(horizon, end);
+    }
+    let initial_capacity: f64 = sc.shards().iter().map(|e| e.capacity_cores()).sum();
+
+    // lockstep epochs bounded by the monitor period, rebalancing at
+    // each boundary; strictly below the horizon so the final drain (and
+    // each engine's final `now`) is computed exactly as unsharded
+    let epoch = secs(p.cfg.rm.monitor_interval_s.max(1e-3));
+    let mut t = epoch;
+    while t < horizon {
+        for eng in sc.shards_mut() {
+            eng.advance_to(t);
+        }
+        sc.rebalance_once();
+        if check_every > 0 {
+            for (k, eng) in sc.shards().iter().enumerate() {
+                eng.check_conservation()
+                    .map_err(|e| format!("shard {k} @ {t}us: {e}"))?;
+                eng.check_store()
+                    .map_err(|e| format!("shard {k} @ {t}us: {e}"))?;
+            }
+            let cap: f64 = sc.shards().iter().map(|e| e.capacity_cores()).sum();
+            if (cap - initial_capacity).abs() > 1e-6 {
+                return Err(format!(
+                    "capacity not conserved @ {t}us: {cap} != {initial_capacity}"
+                ));
+            }
+        }
+        t += epoch;
+    }
+    for eng in sc.shards_mut() {
+        eng.run_events(check_every)?;
+    }
+
+    let migrations = sc.migrations();
+    let shard_capacity_cores: Vec<f64> = sc.shards().iter().map(|e| e.capacity_cores()).collect();
+    let mut recs = Vec::with_capacity(nshards);
+    let mut reports = Vec::new();
+    let mut logs = Vec::new();
+    let mut shard_decision_ns = Vec::with_capacity(nshards);
+    for eng in sc.into_shards() {
+        let (rec, _driver, report, log) = eng.into_parts_full();
+        shard_decision_ns.push(rec.decision_ns.clone());
+        recs.push(rec);
+        if let Some(r) = report {
+            reports.push(r);
+        }
+        if let Some(l) = log {
+            logs.push(l);
+        }
+    }
+    Ok(ShardedRun {
+        recorder: Recorder::merge(recs),
+        report: merge_reports(reports),
+        log: merge_logs(logs),
+        shard_arrivals,
+        shard_decision_ns,
+        shard_capacity_cores,
+        migrations,
+    })
+}
+
+/// [`run_sharded_collecting_full`] plus the warm-up-aware summary and
+/// (optionally) the optimality-gap analysis over the merged log — the
+/// sharded counterpart of `sim::run_summarized_full`, and the entry
+/// point the scenario runner uses for cells with `shards > 1`.
+pub fn run_sharded_summarized(
+    p: SimParams,
+    nshards: usize,
+    warmup: Micros,
+    obs: Option<ObsConfig>,
+    optimality: bool,
+) -> Result<(ShardedRun, Summary), String> {
+    let cat = Catalog::paper();
+    let run = run_sharded_collecting_full(
+        p,
+        nshards,
+        0,
+        obs,
+        optimality,
+        RebalancerConfig::default(),
+    )?;
+    let mut sum = run.recorder.summarize_after(&cat, warmup);
+    if let Some(log) = &run.log {
+        sum.optimality = Some(crate::estimator::analyze(log, &run.recorder));
+    }
+    Ok((run, sum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Policy, SystemConfig};
+    use crate::trace::Trace;
+
+    fn params(policy: Policy, seed: u64, lambda: f64, dur: usize) -> SimParams {
+        let cat = Catalog::paper();
+        let mut cfg = SystemConfig::prototype(policy);
+        cfg.seed = seed;
+        SimParams {
+            cfg,
+            chains: cat.mix("Heavy").unwrap().chains.clone(),
+            trace: Trace::poisson(lambda, dur),
+            drain_s: 30.0,
+        }
+    }
+
+    #[test]
+    fn one_shard_is_byte_identical_to_unsharded() {
+        let (rec, report, log) = crate::sim::Engine::new(params(Policy::Fifer, 42, 10.0, 60))
+            .run_collecting_full(0, Some(ObsConfig::default()), true)
+            .unwrap();
+        let run = run_sharded_collecting_full(
+            params(Policy::Fifer, 42, 10.0, 60),
+            1,
+            0,
+            Some(ObsConfig::default()),
+            true,
+            RebalancerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(run.migrations, 0, "one shard can never migrate");
+        assert_eq!(run.recorder.jobs, rec.jobs);
+        assert_eq!(run.recorder.containers, rec.containers);
+        assert_eq!(run.recorder.energy_series, rec.energy_series);
+        assert_eq!(run.recorder.cold_starts, rec.cold_starts);
+        assert_eq!(
+            run.report.unwrap().timeline_json().to_string(),
+            report.unwrap().timeline_json().to_string()
+        );
+        assert_eq!(run.log.unwrap().entries.len(), log.unwrap().entries.len());
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic_and_conserves_capacity() {
+        let run_once = || {
+            run_sharded_collecting_full(
+                params(Policy::Fifer, 7, 40.0, 80),
+                2,
+                100,
+                None,
+                false,
+                RebalancerConfig {
+                    pressure_ratio: 1.0,
+                    min_gap: 0.0,
+                    hysteresis_ticks: 1,
+                    cooldown_ticks: 0,
+                },
+            )
+            .unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.recorder.jobs, b.recorder.jobs);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.shard_capacity_cores, b.shard_capacity_cores);
+        // completed jobs never exceed routed arrivals
+        assert!(a.recorder.jobs.len() <= a.shard_arrivals.iter().sum::<usize>());
+        // capacity conservation was asserted per-epoch by check_every;
+        // assert the endpoint too
+        let total: f64 = a.shard_capacity_cores.iter().sum();
+        let expected = (SystemConfig::prototype(Policy::Fifer).cluster.nodes
+            * SystemConfig::prototype(Policy::Fifer).cluster.cores_per_node)
+            as f64;
+        assert!((total - expected).abs() < 1e-6, "{total} != {expected}");
+    }
+
+    #[test]
+    fn too_many_shards_is_an_error() {
+        let e = run_sharded_collecting_full(
+            params(Policy::Fifer, 42, 5.0, 20),
+            64,
+            0,
+            None,
+            false,
+            RebalancerConfig::default(),
+        );
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Sharded-coordinator integration pins (docs/DESIGN.md §Sharding):
+//!
+//! * `shards = 1` is **byte-identical** to the unsharded engine for
+//!   every registered policy — recorder, summary JSON, and obs timeline.
+//! * For a fixed shard count a run is a pure function of the seed, and
+//!   scenario sweeps with sharded cells stay byte-identical across
+//!   `--threads`.
+//! * Conservation and store invariants hold per shard and cluster-wide
+//!   while the rebalancer actively migrates capacity, and capacity
+//!   hosting containers can never migrate.
+
+use fifer::config::{Policy, SystemConfig};
+use fifer::coordinator::sharded::RebalancerConfig;
+use fifer::coordinator::state::StateStore;
+use fifer::model::Catalog;
+use fifer::obs::ObsConfig;
+use fifer::scenario::{results_json, run_scenario, ScenarioSpec};
+use fifer::sim::sharded::{run_sharded_collecting_full, run_sharded_summarized};
+use fifer::sim::{run_summarized_full, SimParams};
+use fifer::trace::Trace;
+use fifer::util::secs;
+
+fn params(policy: Policy, seed: u64, lambda: f64, dur: usize) -> SimParams {
+    let cat = Catalog::paper();
+    let mut cfg = SystemConfig::prototype(policy);
+    cfg.seed = seed;
+    SimParams {
+        cfg,
+        chains: cat.mix("Heavy").unwrap().chains.clone(),
+        trace: Trace::poisson(lambda, dur),
+        drain_s: 30.0,
+    }
+}
+
+/// An aggressive rebalancer that fires on any imbalance, every epoch —
+/// worst case for the invariants the default hysteresis protects.
+fn eager() -> RebalancerConfig {
+    RebalancerConfig {
+        pressure_ratio: 1.0,
+        min_gap: 0.0,
+        hysteresis_ticks: 1,
+        cooldown_ticks: 0,
+    }
+}
+
+#[test]
+fn one_shard_matches_unsharded_for_every_policy_and_seed() {
+    for policy in Policy::ALL {
+        for seed in [7u64, 42] {
+            let (rec, sum, report) =
+                run_summarized_full(params(policy, seed, 10.0, 60), secs(30.0), Some(ObsConfig::default()), false);
+            let (run, ssum) = run_sharded_summarized(
+                params(policy, seed, 10.0, 60),
+                1,
+                secs(30.0),
+                Some(ObsConfig::default()),
+                false,
+            )
+            .unwrap();
+            let tag = format!("{}/seed {seed}", policy.name());
+            assert_eq!(run.migrations, 0, "{tag}: one shard can never migrate");
+            assert_eq!(run.recorder.jobs, rec.jobs, "{tag}: job records diverged");
+            assert_eq!(
+                run.recorder.containers, rec.containers,
+                "{tag}: container records diverged"
+            );
+            assert_eq!(
+                run.recorder.energy_series, rec.energy_series,
+                "{tag}: energy series diverged"
+            );
+            assert_eq!(
+                ssum.to_json().to_string(),
+                sum.to_json().to_string(),
+                "{tag}: summary JSON diverged"
+            );
+            assert_eq!(
+                run.report.unwrap().timeline_json().to_string(),
+                report.unwrap().timeline_json().to_string(),
+                "{tag}: obs timeline diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn invariants_hold_per_shard_and_cluster_wide_under_rebalancing() {
+    // check_every > 0 makes the runner verify conservation + store
+    // invariants per shard at every epoch, plus cluster-wide capacity
+    // conservation — any violation is an Err here
+    let run = run_sharded_collecting_full(params(Policy::Fifer, 7, 60.0, 120), 4, 50, None, false, eager())
+        .expect("invariants violated under active rebalancing");
+    assert!(
+        run.migrations >= 1,
+        "eager rebalancer never fired — the invariant check exercised nothing"
+    );
+    let total: f64 = run.shard_capacity_cores.iter().sum();
+    let cfg = SystemConfig::prototype(Policy::Fifer);
+    let expected = (cfg.cluster.nodes * cfg.cluster.cores_per_node) as f64;
+    assert!(
+        (total - expected).abs() < 1e-6,
+        "cluster capacity not conserved: {total} != {expected}"
+    );
+}
+
+#[test]
+fn fixed_shard_count_is_byte_identical_across_runs() {
+    let go = || {
+        run_sharded_collecting_full(
+            params(Policy::Fifer, 42, 40.0, 90),
+            2,
+            0,
+            Some(ObsConfig::default()),
+            false,
+            eager(),
+        )
+        .unwrap()
+    };
+    let a = go();
+    let b = go();
+    assert_eq!(a.recorder.jobs, b.recorder.jobs);
+    assert_eq!(a.recorder.containers, b.recorder.containers);
+    assert_eq!(a.recorder.energy_series, b.recorder.energy_series);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.shard_arrivals, b.shard_arrivals);
+    assert_eq!(a.shard_capacity_cores, b.shard_capacity_cores);
+    assert_eq!(
+        a.report.unwrap().timeline_json().to_string(),
+        b.report.unwrap().timeline_json().to_string()
+    );
+}
+
+#[test]
+fn sharded_scenario_sweep_is_byte_identical_across_threads() {
+    let spec = ScenarioSpec::parse(
+        r#"
+[scenario]
+name = "shard-threads"
+duration_s = 60
+seeds = [7, 42]
+traces = ["poisson"]
+mixes = ["Heavy"]
+policies = ["Fifer", "Bline"]
+shards = [1, 2]
+"#,
+    )
+    .unwrap();
+    assert_eq!(spec.cells().len(), 8); // 2 seeds x 2 policies x 2 shard counts
+    let serial = results_json(&spec, &run_scenario(&spec, 1).unwrap()).to_string();
+    let parallel = results_json(&spec, &run_scenario(&spec, 4).unwrap()).to_string();
+    assert_eq!(serial, parallel, "sharded sweep output depends on --threads");
+}
+
+#[test]
+fn capacity_hosting_containers_never_migrates() {
+    // 2 nodes x 4 cores, 1 core per container: four spawns fill node 0
+    // (best-fit packing), the fifth lands on node 1
+    let mut store = StateStore::new(2, 4, 1.0);
+    let mut cids = Vec::new();
+    for _ in 0..5 {
+        cids.push(store.spawn(0, 4, 0, 0, false).expect("cluster has room"));
+    }
+    assert!(!store.node_is_empty(0));
+    assert!(!store.node_is_empty(1));
+    // both nodes host containers: neither may be drained
+    assert!(store.drain_node(0).is_err());
+    assert!(store.drain_node(1).is_err());
+    // emptying node 1 makes it (and only it) drainable
+    let on_node1: Vec<u64> = cids
+        .iter()
+        .copied()
+        .filter(|&cid| store.get(cid).unwrap().node == 1)
+        .collect();
+    assert_eq!(on_node1.len(), 1);
+    for cid in on_node1 {
+        store.remove(cid);
+    }
+    assert!(store.drain_node(0).is_err(), "node 0 still hosts containers");
+    assert_eq!(store.drain_node(1).unwrap(), 4.0);
+    // the tombstone keeps indices dense and invariants intact
+    store.check_consistency().unwrap();
+    assert_eq!(store.capacity_cores(), 4.0);
+}
